@@ -1,0 +1,57 @@
+//! §5.2/§5.3 walkthrough: the encoder–decoder butterfly network on the
+//! paper's data matrices, including the two-phase schedule and the
+//! Theorem-1 prediction check.
+//!
+//! ```bash
+//! cargo run --release --example autoencoder_suite [-- --full]
+//! ```
+
+use butterfly_net::autoencoder::landscape::{check_assumptions, optimal_loss_fixed_b};
+use butterfly_net::autoencoder::{train_two_phase, ButterflyAe, TwoPhaseOpts};
+use butterfly_net::data::lowrank_gaussian::rank_r_gaussian;
+use butterfly_net::linalg::pca_error;
+use butterfly_net::rng::Rng;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, d) = if full { (256, 256) } else { (64, 64) };
+    let rank = n / 8;
+    let k = rank / 2;
+    let l = 4 * k;
+    let mut rng = Rng::seed_from_u64(0);
+    let x = rank_r_gaussian(n, d, rank, &mut rng);
+    println!("data: rank-{rank} Gaussian {n}×{d} (the paper's §5.2 construction)");
+
+    let mut ae = ButterflyAe::new(n, l, k, n, &mut rng);
+    println!(
+        "encoder params: {} (dense encoder would be {})",
+        ae.encoder_params(),
+        k * n
+    );
+
+    // Theorem-1 prediction for the sampled (fixed) B
+    let b = ae.b.dense();
+    match check_assumptions(&x, &x, &b) {
+        Ok(()) => println!("Theorem-1 assumptions: satisfied"),
+        Err(e) => println!("Theorem-1 assumptions: {e}"),
+    }
+    let predicted = optimal_loss_fixed_b(&x, &x, &b, k);
+    println!("Theorem-1 fixed-B optimum: {predicted:.5}");
+
+    let opts = TwoPhaseOpts {
+        phase1_iters: if full { 3000 } else { 1500 },
+        phase2_iters: if full { 1500 } else { 600 },
+        lr1: 8e-3,
+        lr2: 2e-3,
+        log_every: 200,
+    };
+    let log = train_two_phase(&mut ae, &x, &x, &opts);
+    for (it, loss) in &log.curve {
+        println!("  iter {it:>5}: loss {loss:.5}");
+    }
+    println!(
+        "phase 1 final {:.5} (vs Theorem-1 prediction {:.5}) → phase 2 final {:.5}",
+        log.phase1_final, predicted, log.phase2_final
+    );
+    println!("PCA floor Δ_k = {:.5}", pca_error(&x, k));
+}

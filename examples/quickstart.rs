@@ -1,0 +1,74 @@
+//! Quickstart: the paper's core objects in ~60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Build a truncated butterfly network from the FJLT distribution
+//!    (§3.1) and check the Johnson–Lindenstrauss property.
+//! 2. Replace a dense 1024×512 layer with the §3.2 architecture and
+//!    compare parameter counts and outputs.
+//! 3. Train a tiny encoder–decoder butterfly network (§4) to the
+//!    PCA floor.
+
+use butterfly_net::autoencoder::ButterflyAe;
+use butterfly_net::butterfly::TruncatedButterfly;
+use butterfly_net::linalg::{pca_error, Mat};
+use butterfly_net::model::ReplacementLayer;
+use butterfly_net::rng::Rng;
+use butterfly_net::train::{Adam, Optimizer};
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+
+    // --- 1. FJLT-initialised truncated butterfly ------------------------
+    let (n, l) = (1024, 64);
+    let j = TruncatedButterfly::fjlt(n, l, &mut rng);
+    let x = Mat::gaussian(1, n, 1.0, &mut rng);
+    let jx = j.forward(&x);
+    println!(
+        "JL check: ‖Jx‖²/‖x‖² = {:.3}  (expect ≈ 1)",
+        jx.fro2() / x.fro2()
+    );
+    println!(
+        "truncated butterfly params: {} effective (bound {}), vs {} for a dense {l}×{n}",
+        j.effective_params(),
+        j.param_bound(),
+        l * n
+    );
+
+    // --- 2. dense-layer replacement (§3.2) ------------------------------
+    let layer = ReplacementLayer::with_log_sizes(1024, 512, &mut rng);
+    let batch = Mat::gaussian(8, 1024, 1.0, &mut rng);
+    let y = layer.forward(&batch);
+    println!(
+        "replacement layer: 1024→512, {} params vs {} dense ({:.0}× fewer), output {:?}",
+        layer.num_params(),
+        layer.dense_params(),
+        layer.dense_params() as f64 / layer.num_params() as f64,
+        y.shape()
+    );
+
+    // --- 3. encoder–decoder butterfly network (§4) ----------------------
+    let (n, d, rank, k) = (64usize, 96usize, 6usize, 4usize);
+    let u = Mat::gaussian(n, rank, 1.0, &mut rng);
+    let v = Mat::gaussian(rank, d, 1.0, &mut rng);
+    let data = u.matmul(&v);
+    let mut ae = ButterflyAe::new(n, 4 * k, k, n, &mut rng);
+    let mut opt = Adam::new(5e-3);
+    let mut params = ae.params();
+    for i in 0..600 {
+        let g = ae.grad(&data, &data);
+        opt.step(&mut params, &ButterflyAe::flat_grads(&g));
+        ae.set_params(&params);
+        if i % 200 == 0 {
+            println!("  AE iter {i:>4}: loss {:.5}", g.loss);
+        }
+    }
+    let floor = pca_error(&data, k);
+    println!(
+        "AE final loss {:.5} vs PCA floor Δ_k = {:.5}",
+        ae.loss(&data, &data),
+        floor
+    );
+}

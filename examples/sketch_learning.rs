@@ -1,0 +1,64 @@
+//! §6 walkthrough: learn a butterfly sketch for low-rank approximation
+//! and compare it against the Indyk-et-al. learned sparse sketch and
+//! the classical random baselines.
+//!
+//! ```bash
+//! cargo run --release --example sketch_learning [-- --full]
+//! ```
+
+use butterfly_net::experiments::sketch_common::{datasets, evaluate_methods};
+use butterfly_net::experiments::ExpContext;
+use butterfly_net::rng::Rng;
+use butterfly_net::sketch::{app_te, train_sketch, ButterflySketch, Sketch, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let ctx = ExpContext {
+        out_dir: "results".into(),
+        seed: 0,
+        quick: !full,
+    };
+    let mut rng = Rng::seed_from_u64(ctx.seed);
+    let all = datasets(&ctx, &mut rng);
+    let ds = &all[0]; // HS-SOD-like
+    let (l, k) = (20usize.min(ds.n), 10usize);
+    println!(
+        "dataset {} (n={}, {} train / {} test matrices), ℓ={l}, k={k}",
+        ds.name,
+        ds.n,
+        ds.train.len(),
+        ds.test.len()
+    );
+
+    // show the training dynamics of the butterfly sketch
+    let mut sketch = ButterflySketch::init(l, ds.n, &mut rng);
+    println!(
+        "butterfly sketch: {} trainable weights (dense ℓ×n would be {})",
+        sketch.num_params(),
+        l * ds.n
+    );
+    let app = app_te(&ds.test, k);
+    println!("App_Te (unavoidable PCA error) = {app:.4}");
+    let log = train_sketch(
+        &mut sketch,
+        &ds.train,
+        &ds.test,
+        &TrainOpts {
+            k,
+            iters: if full { 400 } else { 120 },
+            lr: 5e-3,
+            eval_every: if full { 40 } else { 20 },
+            ..Default::default()
+        },
+    );
+    for (it, loss) in &log.eval_curve {
+        println!("  iter {it:>4}: mean test ‖X − S_k(X)‖² = {loss:.4}");
+    }
+
+    // full comparison (Figure 7 row for this dataset)
+    println!("\nErr_Te comparison:");
+    for (method, err) in evaluate_methods(ds, l, k, if full { 400 } else { 100 }, 1)? {
+        println!("  {method:18} {err:.4}");
+    }
+    Ok(())
+}

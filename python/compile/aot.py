@@ -1,0 +1,210 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the rust runtime.
+
+HLO text, NOT ``lowered.serialize()``: jax ≥ 0.5 emits HloModuleProto
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a single fused computation (forward, or
+forward+backward+update) with ``return_tuple=True``. A ``manifest.txt``
+records, for every artifact, its inputs/outputs (name, dtype, shape) so
+``rust/src/runtime`` can validate buffers before execution.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--preset small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import butterfly as bfly_kernel
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (the interchange
+    format the image's xla_extension 0.5.1 can parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Emitter:
+    """Lowers functions and accumulates the manifest."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.lines: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    @staticmethod
+    def _fmt(args) -> str:
+        parts = []
+        for a in jax.tree_util.tree_leaves(args):
+            shape = "x".join(str(d) for d in a.shape)
+            parts.append(f"{a.dtype}[{shape}]")
+        return ",".join(parts)
+
+    def emit(self, name: str, fn, example_args: tuple) -> None:
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        self.lines.append(
+            f"{name};inputs={self._fmt(example_args)};outputs={self._fmt(outs)}"
+        )
+        print(f"  {name}: {len(text)} chars, inputs={self._fmt(example_args)}")
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# presets: artifact sizes
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # name: dict of sizes. `small` keeps compile time low for CI; `paper`
+    # matches the §5 regimes (n=1024) for the perf benches.
+    "small": dict(
+        bfly_n=256, bfly_batch=32,
+        cls_in=64, cls_hidden=128, cls_out=64, cls_classes=10, cls_batch=32,
+        ae_n=256, ae_l=32, ae_k=16, ae_m=256, ae_d=64,
+        sk_n=256, sk_l=16, sk_k=8, sk_d=32,
+    ),
+    "paper": dict(
+        bfly_n=1024, bfly_batch=64,
+        cls_in=256, cls_hidden=512, cls_out=512, cls_classes=10, cls_batch=64,
+        ae_n=1024, ae_l=64, ae_k=32, ae_m=1024, ae_d=128,
+        sk_n=1024, sk_l=20, sk_k=10, sk_d=64,
+    ),
+}
+
+
+def build(out_dir: str, preset: str) -> None:
+    cfg = PRESETS[preset]
+    rng = np.random.default_rng(0)
+    em = Emitter(out_dir)
+    f32 = jnp.float32
+
+    # -- L1 kernel forward: the serving hot path -----------------------------
+    n, batch = cfg["bfly_n"], cfg["bfly_batch"]
+    x_spec = jax.ShapeDtypeStruct((batch, n), f32)
+    w_spec = jax.ShapeDtypeStruct((ref.log2i(n), n // 2, 4), f32)
+    em.emit(
+        "butterfly_fwd",
+        lambda x, w: (bfly_kernel.butterfly_forward(x, w),),
+        (x_spec, w_spec),
+    )
+
+    # -- §3.2 replacement layer forward (kernel path) ------------------------
+    k1 = max(1, int(np.ceil(np.log2(cfg["cls_hidden"]))))
+    k2 = max(1, int(np.ceil(np.log2(cfg["cls_out"]))))
+    rep = model.replacement_init(cfg["cls_hidden"], cfg["cls_out"], k1, k2, rng)
+    xr_spec = jax.ShapeDtypeStruct((cfg["cls_batch"], cfg["cls_hidden"]), f32)
+    em.emit(
+        "replacement_fwd",
+        lambda x, p=rep: (model.replacement_forward_kernel(p, x, cfg["cls_out"]),),
+        (xr_spec,),
+    )
+
+    # -- §5.1 classifier: forward + fused train step, dense & butterfly ------
+    ci, ch, co, cc, cb = (
+        cfg["cls_in"], cfg["cls_hidden"], cfg["cls_out"], cfg["cls_classes"], cfg["cls_batch"],
+    )
+    pd = model.classifier_init_dense(ci, ch, co, cc, rng)
+    pb = model.classifier_init_bfly(ci, ch, co, cc, rng)
+    xc_spec = jax.ShapeDtypeStruct((cb, ci), f32)
+    y_spec = jax.ShapeDtypeStruct((cb, cc), f32)
+    lr_spec = jax.ShapeDtypeStruct((), f32)
+
+    # params passed flat so the rust side can feed plain buffers
+    em.emit(
+        "classifier_fwd_dense",
+        lambda wh, hw, ro, x: (
+            model.classifier_forward(model.ClassifierParams(wh, (hw,), ro), x),
+        ),
+        (pd.w_hidden, pd.head[0], pd.readout, xc_spec),
+    )
+    em.emit(
+        "classifier_fwd_bfly",
+        lambda wh, w1, keep1, core, w2, keep2, ro, x: (
+            model.classifier_forward(
+                model.ClassifierParams(wh, (w1, keep1, core, w2, keep2), ro), x
+            ),
+        ),
+        (pb.w_hidden, *pb.head, pb.readout, xc_spec),
+    )
+    em.emit(
+        "classifier_train_dense",
+        lambda wh, hw, ro, x, y, lr: (
+            lambda res: (res[0].w_hidden, res[0].head[0], res[1])
+        )(model.classifier_train_step(model.ClassifierParams(wh, (hw,), ro), x, y, lr)),
+        (pd.w_hidden, pd.head[0], pd.readout, xc_spec, y_spec, lr_spec),
+    )
+    em.emit(
+        "classifier_train_bfly",
+        lambda wh, w1, keep1, core, w2, keep2, ro, x, y, lr: (
+            # head is a flat (w1, keep1, core, w2, keep2) tuple
+            lambda res: (
+                res[0].w_hidden,
+                res[0].head[0],
+                res[0].head[2],
+                res[0].head[3],
+                res[1],
+            )
+        )(
+            model.classifier_train_step(
+                model.ClassifierParams(wh, (w1, keep1, core, w2, keep2), ro), x, y, lr
+            )
+        ),
+        (pb.w_hidden, *pb.head, pb.readout, xc_spec, y_spec, lr_spec),
+    )
+
+    # -- §4 auto-encoder train step ------------------------------------------
+    ap = model.ae_init(cfg["ae_n"], cfg["ae_l"], cfg["ae_k"], cfg["ae_m"], rng)
+    xt_spec = jax.ShapeDtypeStruct((cfg["ae_d"], cfg["ae_n"]), f32)
+    yt_spec = jax.ShapeDtypeStruct((cfg["ae_d"], cfg["ae_m"]), f32)
+    em.emit(
+        "ae_train_step",
+        lambda d, e, w, keep, xt, yt, lr: (
+            lambda res: (res[0].d, res[0].e, res[0].w, res[1])
+        )(model.ae_train_step(model.AeParams(d, e, w, keep), xt, yt, lr)),
+        (*ap, xt_spec, yt_spec, lr_spec),
+    )
+
+    # -- §6 sketch loss + grad ------------------------------------------------
+    skw, skkeep = ref.fjlt_weights(cfg["sk_n"], cfg["sk_l"], rng)
+    xs_spec = jax.ShapeDtypeStruct((cfg["sk_n"], cfg["sk_d"]), f32)
+    em.emit(
+        "sketch_loss_grad",
+        lambda w, keep, x: model.sketch_loss_and_grad(w, keep, x, cfg["sk_k"]),
+        (skw, skkeep, xs_spec),
+    )
+
+    em.finish()
+    print(f"wrote {len(em.lines)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    args = ap.parse_args()
+    build(args.out_dir, args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Golden files for rust↔jax parity tests.
+
+Emits deterministic test vectors (inputs generated from closed-form
+formulas both sides can reproduce exactly) and jax-computed outputs, in
+a dependency-free text format:
+
+    <name>
+    shape d0 d1 ...
+    v0 v1 v2 ...
+
+`rust/tests/golden_jax_parity.rs` rebuilds the same inputs, runs the
+rust implementations, and compares against these outputs — locking the
+weight layout and the gradient chains across the language boundary.
+
+Usage: python -m compile.gen_golden --out-dir ../artifacts/golden
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import ref
+
+
+MASK64 = (1 << 64) - 1
+
+
+def _splitmix64(state: int) -> int:
+    """One SplitMix64 step — bit-identical to rust/src/rng/mod.rs."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def det_array(shape, seed: int) -> np.ndarray:
+    """Deterministic full-rank pseudo-data, reproduced bit-exactly on
+    the rust side (integer SplitMix64 → uniform in [−1, 1); no
+    transcendental functions, so no cross-libm drift)."""
+    n = int(np.prod(shape))
+    vals = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        z = _splitmix64((seed + i) & MASK64)
+        vals[i] = (z >> 11) / float(1 << 53) * 2.0 - 1.0
+    return vals.reshape(shape)
+
+
+def write(out_dir: str, name: str, arr: np.ndarray) -> None:
+    arr = np.asarray(arr, dtype=np.float64)
+    path = os.path.join(out_dir, f"{name}.txt")
+    with open(path, "w") as f:
+        f.write(name + "\n")
+        f.write("shape " + " ".join(str(d) for d in arr.shape) + "\n")
+        f.write(" ".join(f"{v:.17g}" for v in arr.ravel()) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/golden")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # f64 for tight tolerances on the rust side
+    jax.config.update("jax_enable_x64", True)
+
+    # --- case 1: butterfly forward / transpose, n=16, batch=3 ---------------
+    n, batch = 16, 3
+    p = int(math.log2(n))
+    w = det_array((p, n // 2, 4), 1)
+    x = det_array((batch, n), 2)
+    write(args.out_dir, "bfly_w", w)
+    write(args.out_dir, "bfly_x", x)
+    fwd = ref.butterfly_apply(jnp.asarray(x), jnp.asarray(w))
+    write(args.out_dir, "bfly_fwd", np.asarray(fwd))
+    tr = ref.butterfly_apply_t(jnp.asarray(x), jnp.asarray(w))
+    write(args.out_dir, "bfly_fwd_t", np.asarray(tr))
+
+    # --- case 2: butterfly weight gradient -----------------------------------
+    cot = det_array((batch, n), 3)
+
+    def loss(w):
+        return jnp.sum(ref.butterfly_apply(jnp.asarray(x), w) * jnp.asarray(cot))
+
+    g = jax.grad(loss)(jnp.asarray(w))
+    write(args.out_dir, "bfly_cot", cot)
+    write(args.out_dir, "bfly_wgrad", np.asarray(g))
+
+    # --- case 3: sketch loss gradient (whole §6 chain) -----------------------
+    ns, ds, ls, ks = 16, 12, 4, 2
+    ps = int(math.log2(ns))
+    ws = det_array((ps, ns // 2, 4), 4)
+    keep = np.array([1, 6, 9, 14])
+    # full-rank pseudo-random data + a dominant rank-1 direction so the
+    # projected spectrum is well separated (Theorem-1 style assumption)
+    xs = det_array((ns, ds), 5)
+    xs = xs + 2.0 * np.outer(det_array((ns,), 6), det_array((ds,), 7))
+    write(args.out_dir, "sketch_w", ws)
+    write(args.out_dir, "sketch_keep", keep.astype(np.float64))
+    write(args.out_dir, "sketch_x", xs)
+    loss_val, gs = model.sketch_loss_and_grad(
+        jnp.asarray(ws), jnp.asarray(keep), jnp.asarray(xs), ks
+    )
+    write(args.out_dir, "sketch_loss", np.asarray(loss_val).reshape(1))
+    write(args.out_dir, "sketch_wgrad", np.asarray(gs))
+
+    print(f"golden files written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

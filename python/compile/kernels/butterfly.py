@@ -1,0 +1,106 @@
+"""L1: the Pallas butterfly kernel.
+
+The paper's compute hot-spot is applying `log2(n)` sparse butterfly
+stages to a batch of vectors. On GPU the original work leans on dense
+GEMMs; for TPU we rethink the schedule (DESIGN.md §Hardware-Adaptation):
+
+* the **batch** axis is tiled by the grid (`bm` rows per program);
+  each tile's full feature vector stays resident in VMEM across all
+  `log n` stages, so HBM traffic is `2·B·n` floats + the `2n·log n`
+  weights — `O(n log n)` work at `O(n)` memory per row, versus the
+  `O(n²)` traffic of the dense layer it replaces;
+* every stage is a pair of strided multiply-adds over a
+  `(bm, n/2s, 2, s)` view — a VPU-friendly elementwise form with **no
+  gathers** (the stride pattern is static per stage, so Mosaic lowers
+  it to lane shuffles);
+* the Pallas 1-D grid double-buffers the HBM→VMEM copy of tile `t+1`
+  against compute on tile `t` for free.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls; correctness is validated through this path and
+real-TPU performance is *estimated* in DESIGN.md/EXPERIMENTS.md §Perf
+from the VMEM footprint and arithmetic intensity.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _butterfly_kernel(x_ref, w_ref, o_ref, *, log_n: int):
+    """One grid program: apply all stages to a (bm, n) tile in VMEM."""
+    x = x_ref[...]
+    bm, n = x.shape
+    for i in range(log_n):  # static unroll: log2(n) stages
+        s = 1 << i
+        xr = x.reshape(bm, n // (2 * s), 2, s)
+        x1 = xr[:, :, 0, :]
+        x2 = xr[:, :, 1, :]
+        wr = w_ref[i].reshape(n // (2 * s), s, 4)
+        y1 = wr[..., 0][None] * x1 + wr[..., 1][None] * x2
+        y2 = wr[..., 2][None] * x1 + wr[..., 3][None] * x2
+        x = jnp.stack([y1, y2], axis=2).reshape(bm, n)
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def butterfly_forward(x: jnp.ndarray, w: jnp.ndarray, block_rows: int = 32) -> jnp.ndarray:
+    """Apply the full butterfly to ``x: (batch, n)`` with weights
+    ``w: (log2 n, n//2, 4)`` via the Pallas kernel.
+
+    ``block_rows`` is the VMEM batch tile (perf knob; see §Perf).
+    """
+    batch, n = x.shape
+    log_n = int(math.log2(n))
+    assert 1 << log_n == n, f"n={n} must be a power of two"
+    assert w.shape == (log_n, n // 2, 4), f"bad weight shape {w.shape}"
+    bm = min(block_rows, batch)
+    # Pad the batch to a multiple of bm so the grid covers it exactly.
+    padded = (batch + bm - 1) // bm * bm
+    xp = jnp.pad(x, ((0, padded - batch), (0, 0))) if padded != batch else x
+    out = pl.pallas_call(
+        functools.partial(_butterfly_kernel, log_n=log_n),
+        out_shape=jax.ShapeDtypeStruct((padded, n), x.dtype),
+        grid=(padded // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),  # batch tile in VMEM
+            pl.BlockSpec((log_n, n // 2, 4), lambda i: (0, 0, 0)),  # all weights resident
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w)
+    return out[:batch]
+
+
+def truncated_butterfly_forward(
+    x: jnp.ndarray, w: jnp.ndarray, keep: jnp.ndarray, block_rows: int = 32
+) -> jnp.ndarray:
+    """Truncated butterfly J = T·B: kernel + fixed projection."""
+    return jnp.take(butterfly_forward(x, w, block_rows=block_rows), keep, axis=1)
+
+
+def vmem_footprint_bytes(n: int, block_rows: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid program: the batch tile
+    (in + out) plus the full weight stack. Used by the §Perf roofline
+    estimate in DESIGN.md."""
+    log_n = int(math.log2(n))
+    tile = block_rows * n * dtype_bytes * 2
+    weights = log_n * (n // 2) * 4 * dtype_bytes
+    return tile + weights
+
+
+def flops_per_batch_row(n: int) -> int:
+    """4 mul + 2 add per pair per stage = 6·(n/2)·log2(n) ≈ 3n·log2 n."""
+    log_n = int(math.log2(n))
+    return 6 * (n // 2) * log_n
+
+
+# re-export the oracle for convenience of the tests
+reference = ref.butterfly_apply

@@ -1,0 +1,119 @@
+"""Pure-jnp reference implementation of the butterfly operator.
+
+This is the correctness oracle for the Pallas kernel
+(:mod:`python.compile.kernels.butterfly`) *and* the differentiable
+implementation the L2 training graphs use (autodiff through
+``pallas_call`` would need a custom VJP; the two implementations are
+locked together by ``python/tests/test_kernel.py``).
+
+Weight layout (shared with the rust side, see
+``rust/src/butterfly/network.rs::flat_weights``): one array of shape
+``(log2(n), n//2, 4)``. For layer ``i`` with stride ``s = 2**i``, pair
+``p = (j1 // (2*s)) * s + (j1 % s)`` connects ``j1`` (bit ``i`` clear)
+with ``j2 = j1 + s`` and stores ``[a, b, c, d]``:
+
+    out[j1] = a*in[j1] + b*in[j2]
+    out[j2] = c*in[j1] + d*in[j2]
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def log2i(n: int) -> int:
+    l = int(math.log2(n))
+    assert 1 << l == n, f"n={n} must be a power of two"
+    return l
+
+
+def butterfly_layer(x: jnp.ndarray, w_layer: jnp.ndarray, stage: int) -> jnp.ndarray:
+    """Apply one butterfly layer to a batch ``x: (batch, n)``.
+
+    ``w_layer: (n//2, 4)``; pair-index order matches the rust layout, so
+    reshaping to ``(n//(2s), s, 4)`` aligns pairs with the blocked view
+    ``x.reshape(batch, n//(2s), 2, s)``.
+    """
+    batch, n = x.shape
+    s = 1 << stage
+    xr = x.reshape(batch, n // (2 * s), 2, s)
+    x1, x2 = xr[:, :, 0, :], xr[:, :, 1, :]
+    wr = w_layer.reshape(n // (2 * s), s, 4)
+    a, b, c, d = wr[..., 0], wr[..., 1], wr[..., 2], wr[..., 3]
+    y1 = a[None] * x1 + b[None] * x2
+    y2 = c[None] * x1 + d[None] * x2
+    return jnp.stack([y1, y2], axis=2).reshape(batch, n)
+
+
+def butterfly_layer_t(x: jnp.ndarray, w_layer: jnp.ndarray, stage: int) -> jnp.ndarray:
+    """Apply the transpose of one layer (gadget transpose: swap b, c)."""
+    w = w_layer[:, jnp.array([0, 2, 1, 3])]
+    return butterfly_layer(x, w, stage)
+
+
+def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Full butterfly: layers 0..log2(n)-1 in order. ``w: (p, n//2, 4)``."""
+    p = w.shape[0]
+    for i in range(p):
+        x = butterfly_layer(x, w[i], i)
+    return x
+
+
+def butterfly_apply_t(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Transpose of the full butterfly: transposed layers in reverse."""
+    p = w.shape[0]
+    for i in reversed(range(p)):
+        x = butterfly_layer_t(x, w[i], i)
+    return x
+
+
+def truncated_apply(x: jnp.ndarray, w: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Truncated butterfly J = T·B: apply and keep columns ``keep``."""
+    return jnp.take(butterfly_apply(x, w), keep, axis=1)
+
+
+def truncated_apply_t(y: jnp.ndarray, w: jnp.ndarray, keep: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Jᵀ y: scatter the ℓ coordinates back into R^n, apply Bᵀ."""
+    batch = y.shape[0]
+    full = jnp.zeros((batch, n), dtype=y.dtype).at[:, keep].set(y)
+    return butterfly_apply_t(full, w)
+
+
+def hadamard_weights(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """FJLT building block: every gadget = 1/√2·[[1,1],[1,−1]]."""
+    p = log2i(n)
+    h = 1.0 / math.sqrt(2.0)
+    w = np.tile(np.array([h, h, h, -h], dtype=np.float64), (p, n // 2, 1))
+    return jnp.asarray(w, dtype=dtype)
+
+
+def fjlt_weights(n: int, l: int, rng: np.random.Generator, dtype=jnp.float32):
+    """Sample FJLT weights + truncation (mirrors
+    ``TruncatedButterfly::fjlt`` on the rust side): Hadamard gadgets,
+    ±1 diagonal and √(n/ℓ) scale absorbed into layer 0, random subset.
+
+    Returns ``(w, keep)``.
+    """
+    w = np.array(hadamard_weights(n, jnp.float64))  # mutable copy
+    signs = rng.choice([-1.0, 1.0], size=n)
+    scale = math.sqrt(n / l)
+    for j1 in range(0, n, 2):
+        pair = j1 // 2
+        w[0, pair, 0] *= signs[j1] * scale
+        w[0, pair, 1] *= signs[j1 + 1] * scale
+        w[0, pair, 2] *= signs[j1] * scale
+        w[0, pair, 3] *= signs[j1 + 1] * scale
+    keep = np.sort(rng.choice(n, size=l, replace=False))
+    return jnp.asarray(w, dtype=dtype), jnp.asarray(keep)
+
+
+def dense_matrix(w: jnp.ndarray) -> jnp.ndarray:
+    """Materialise the butterfly as an n×n matrix (columns = images of
+    basis vectors). Tests only."""
+    _, half, _ = w.shape
+    n = 2 * half
+    eye = jnp.eye(n, dtype=w.dtype)
+    return butterfly_apply(eye, w).T

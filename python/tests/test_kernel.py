@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel: `assert_allclose`
+against `ref.py` across shapes, batch sizes and block tilings, driven
+by hypothesis.
+"""
+
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import butterfly, ref
+
+
+def rand_weights(n: int, rng: np.random.Generator, dtype=np.float32):
+    p = int(math.log2(n))
+    return jnp.asarray(rng.normal(size=(p, n // 2, 4)), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: shapes × batch × tiling
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=8),
+    batch=st.integers(min_value=1, max_value=17),
+    block_rows=st.sampled_from([1, 2, 4, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref(log_n, batch, block_rows, seed):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, n)), dtype=jnp.float32)
+    w = rand_weights(n, rng)
+    got = butterfly.butterfly_forward(x, w, block_rows=block_rows)
+    want = ref.butterfly_apply(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=7),
+    l_frac=st.floats(min_value=0.1, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_truncated_kernel_matches_ref(log_n, l_frac, seed):
+    n = 1 << log_n
+    l = max(1, int(n * l_frac))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(5, n)), dtype=jnp.float32)
+    w, keep = ref.fjlt_weights(n, l, rng)
+    got = butterfly.truncated_butterfly_forward(x, w, keep)
+    want = ref.truncated_apply(x, w, keep)
+    assert got.shape == (5, l)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-checks (algebra of the reference implementation)
+# ---------------------------------------------------------------------------
+
+
+def test_hadamard_orthogonal():
+    for n in [2, 4, 16, 64]:
+        d = ref.dense_matrix(ref.hadamard_weights(n))
+        assert_allclose(np.asarray(d @ d.T), np.eye(n), atol=1e-5)
+
+
+def test_transpose_is_adjoint():
+    rng = np.random.default_rng(1)
+    n = 32
+    w = rand_weights(n, rng)
+    x = jnp.asarray(rng.normal(size=(1, n)), dtype=jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, n)), dtype=jnp.float32)
+    lhs = float(jnp.vdot(ref.butterfly_apply(x, w), y))
+    rhs = float(jnp.vdot(x, ref.butterfly_apply_t(y, w)))
+    assert abs(lhs - rhs) < 1e-3 * (1 + abs(lhs))
+
+
+def test_dense_matrix_matches_apply():
+    rng = np.random.default_rng(2)
+    n = 16
+    w = rand_weights(n, rng)
+    d = ref.dense_matrix(w)
+    x = jnp.asarray(rng.normal(size=(3, n)), dtype=jnp.float32)
+    assert_allclose(
+        np.asarray(ref.butterfly_apply(x, w)),
+        np.asarray(x @ d.T),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_fjlt_norm_preservation():
+    rng = np.random.default_rng(3)
+    n, l = 256, 64
+    x = jnp.asarray(rng.normal(size=(1, n)), dtype=jnp.float32)
+    ratios = []
+    for _ in range(30):
+        w, keep = ref.fjlt_weights(n, l, rng)
+        jx = ref.truncated_apply(x, w, keep)
+        ratios.append(float(jnp.sum(jx * jx) / jnp.sum(x * x)))
+    assert abs(np.mean(ratios) - 1.0) < 0.2, np.mean(ratios)
+
+
+def test_each_stage_touches_correct_pairs():
+    # moving a unit impulse through stage i affects only j and j^2^i
+    rng = np.random.default_rng(4)
+    n = 32
+    for stage in range(5):
+        w = rand_weights(n, rng)
+        for j in [0, 5, 17, 31]:
+            e = np.zeros((1, n), dtype=np.float32)
+            e[0, j] = 1.0
+            out = np.asarray(ref.butterfly_layer(jnp.asarray(e), w[stage], stage))[0]
+            nz = set(np.nonzero(np.abs(out) > 1e-9)[0].tolist())
+            assert nz <= {j, j ^ (1 << stage)}, (stage, j, nz)
+
+
+def test_grad_flows_through_ref():
+    import jax
+
+    rng = np.random.default_rng(5)
+    n = 16
+    w = rand_weights(n, rng)
+    x = jnp.asarray(rng.normal(size=(2, n)), dtype=jnp.float32)
+
+    def loss(w):
+        return jnp.sum(ref.butterfly_apply(x, w) ** 2)
+
+    g = jax.grad(loss)(w)
+    assert g.shape == w.shape
+    assert float(jnp.max(jnp.abs(g))) > 0.0
+    # numerical check on one coordinate
+    h = 1e-3
+    wp = w.at[1, 3, 2].add(h)
+    wm = w.at[1, 3, 2].add(-h)
+    fd = (loss(wp) - loss(wm)) / (2 * h)
+    assert abs(float(fd) - float(g[1, 3, 2])) < 2e-2 * (1 + abs(float(fd)))
+
+
+def test_kernel_rejects_bad_shapes():
+    rng = np.random.default_rng(6)
+    x = jnp.zeros((2, 24), dtype=jnp.float32)  # 24 not a power of two
+    w = jnp.zeros((4, 12, 4), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        butterfly.butterfly_forward(x, w)
+
+
+def test_vmem_and_flops_estimates():
+    # §Perf helpers: sanity of the analytic model
+    assert butterfly.flops_per_batch_row(1024) == 6 * 512 * 10
+    small = butterfly.vmem_footprint_bytes(1024, 8)
+    big = butterfly.vmem_footprint_bytes(1024, 128)
+    assert small < big
+    # a (128, 1024) f32 tile ×2 + weights must fit in 16 MiB VMEM
+    assert big < 16 * 1024 * 1024

@@ -1,0 +1,149 @@
+"""L2 correctness: model graphs, in-graph spectral pieces, train steps."""
+
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_replacement_shapes_and_param_reduction():
+    rng = np.random.default_rng(0)
+    n1, n2, k1, k2 = 512, 256, 9, 8
+    p = model.replacement_init(n1, n2, k1, k2, rng)
+    x = jnp.asarray(rng.normal(size=(9, n1)), dtype=jnp.float32)
+    y = model.replacement_forward(p, x, n2)
+    assert y.shape == (9, n2)
+    # trainable floats: two butterflies + core ≪ n1*n2 (the reduction
+    # grows with n — at the paper's n=1024/512 regime it's ~10×)
+    n_params = p.w1.size + p.core.size + p.w2.size
+    assert n_params * 4 < n1 * n2
+
+
+def test_replacement_kernel_path_matches_jnp():
+    rng = np.random.default_rng(1)
+    n1, n2 = 64, 32
+    p = model.replacement_init(n1, n2, 6, 5, rng)
+    x = jnp.asarray(rng.normal(size=(4, n1)), dtype=jnp.float32)
+    a = model.replacement_forward(p, x, n2)
+    b = model.replacement_forward_kernel(p, x, n2)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_classifier_train_step_reduces_loss():
+    rng = np.random.default_rng(2)
+    for init in (model.classifier_init_dense, model.classifier_init_bfly):
+        params = init(16, 32, 16, 4, rng)
+        x = jnp.asarray(rng.normal(size=(32, 16)), dtype=jnp.float32)
+        labels = rng.integers(0, 4, size=32)
+        y = jnp.asarray(np.eye(4)[labels], dtype=jnp.float32)
+        step = jax.jit(model.classifier_train_step)
+        loss0 = None
+        for i in range(60):
+            params, loss = step(params, x, y, jnp.float32(0.1))
+            if i == 0:
+                loss0 = float(loss)
+        assert float(loss) < loss0 * 0.8, (init.__name__, loss0, float(loss))
+
+
+def test_ae_train_step_reduces_loss_and_keeps_fixed():
+    rng = np.random.default_rng(3)
+    p = model.ae_init(32, 8, 4, 32, rng)
+    keep0 = np.asarray(p.keep).copy()
+    xt = jnp.asarray(rng.normal(size=(16, 32)), dtype=jnp.float32)
+    step = jax.jit(model.ae_train_step)
+    losses = []
+    for _ in range(150):
+        p, loss = step(p, xt, xt, jnp.float32(2e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+    assert np.array_equal(np.asarray(p.keep), keep0)
+
+
+# ---------------------------------------------------------------------------
+# in-graph spectral pieces vs LAPACK ground truth
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(min_value=6, max_value=24),
+    l=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_schmidt_orthonormal(d, l, seed):
+    if l > d:
+        l = d
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(d, l)), dtype=jnp.float32)
+    q = model.gram_schmidt(a)
+    assert_allclose(np.asarray(q.T @ q), np.eye(l), atol=1e-4)
+    # spans the same subspace: a = q (qᵀ a)
+    assert_allclose(np.asarray(q @ (q.T @ a)), np.asarray(a), atol=1e-3)
+
+
+def test_topk_projector_matches_numpy_eigh():
+    rng = np.random.default_rng(4)
+    l, k = 10, 3
+    m = rng.normal(size=(l, l))
+    g = m @ m.T + np.diag(np.arange(l) * 0.5)  # separated spectrum
+    p_np = None
+    w, v = np.linalg.eigh(g)
+    vk = v[:, np.argsort(w)[::-1][:k]]
+    p_np = vk @ vk.T
+    p_jax = model.topk_projector(jnp.asarray(g, dtype=jnp.float32), k, iters=60)
+    assert_allclose(np.asarray(p_jax), p_np, atol=1e-3)
+
+
+def test_sketch_loss_matches_numpy_reference():
+    rng = np.random.default_rng(5)
+    n, d, l, k = 64, 24, 8, 3
+    u = rng.normal(size=(n, 5))
+    v = rng.normal(size=(5, d))
+    x = u @ v + 0.05 * rng.normal(size=(n, d))
+    w, keep = ref.fjlt_weights(n, l, rng)
+    got = float(model.sketch_loss(w, keep, jnp.asarray(x, jnp.float32), k))
+    # numpy reference: Q = qr((SX)ᵀ); Y = XQ; best rank-k via SVD
+    s_dense = np.asarray(ref.dense_matrix(w))[np.asarray(keep), :]
+    a = s_dense @ x
+    q, _ = np.linalg.qr(a.T)
+    y = x @ q
+    uu, ss, vv = np.linalg.svd(y, full_matrices=False)
+    yk = (uu[:, :k] * ss[:k]) @ vv[:k]
+    want = float(np.sum((x - yk @ q.T) ** 2))
+    assert abs(got - want) < 1e-2 * (1 + want), (got, want)
+
+
+def test_sketch_grad_descends():
+    rng = np.random.default_rng(6)
+    n, d, l, k = 32, 16, 6, 3
+    u = rng.normal(size=(n, 4))
+    v = rng.normal(size=(4, d))
+    # full-rank data: an exactly rank-4 X with ℓ=6 makes the loss
+    # locally flat in S (rowspan(SX) ⊇ rowspan(X)), so add noise
+    x = jnp.asarray(u @ v + 0.2 * rng.normal(size=(n, d)), dtype=jnp.float32)
+    w, keep = ref.fjlt_weights(n, l, rng)
+    loss0, g = model.sketch_loss_and_grad(w, keep, x, k)
+    w2 = w - 1e-3 * g / (1e-6 + jnp.max(jnp.abs(g)))
+    loss1 = model.sketch_loss(w2, keep, x, k)
+    assert float(loss1) < float(loss0)
+
+
+def test_classifier_forward_kernel_agrees():
+    rng = np.random.default_rng(7)
+    p = model.classifier_init_bfly(16, 32, 16, 4, rng)
+    x = jnp.asarray(rng.normal(size=(8, 16)), dtype=jnp.float32)
+    a = model.classifier_forward(p, x, use_kernel=False)
+    b = model.classifier_forward(p, x, use_kernel=True)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,34 @@
+//! Figures 4/5/15 + Table 2 backing bench: one Adam step of the
+//! encoder–decoder butterfly network vs the dense encoder–decoder, at
+//! the paper's data sizes (n=1024) — the §4 parameter-reduction claim
+//! must not cost train-step time.
+
+use butterfly_net::autoencoder::{ButterflyAe, DenseAe};
+use butterfly_net::bench::{black_box, Suite};
+use butterfly_net::data::lowrank_gaussian::rank_r_gaussian;
+use butterfly_net::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let mut suite = Suite::new("Table 2 / Figures 4,5,15 — AE train-step cost");
+    for &(n, d, k) in &[(256usize, 256usize, 16usize), (1024, 1024, 32)] {
+        let x = rank_r_gaussian(n, d, n / 32, &mut rng);
+        let l = 4 * k;
+        let bae = ButterflyAe::new(n, l, k, n, &mut rng);
+        let dae = DenseAe::new(n, k, n, &mut rng);
+        suite.case(&format!("butterfly_ae_grad n={n} k={k}"), d, || {
+            black_box(bae.grad(&x, &x));
+        });
+        suite.case(&format!("dense_ae_grad n={n} k={k}"), d, || {
+            black_box(dae.grad(&x, &x));
+        });
+        suite.case(&format!("butterfly_ae_fwd n={n} k={k}"), d, || {
+            black_box(bae.forward(&x));
+        });
+        suite.case(&format!("dense_ae_fwd n={n} k={k}"), d, || {
+            black_box(dae.forward(&x));
+        });
+    }
+    suite.report();
+    suite.write_csv("autoencoder.csv");
+}

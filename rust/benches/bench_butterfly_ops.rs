@@ -1,0 +1,33 @@
+//! Micro-benchmarks of the core operator: butterfly forward/transpose/
+//! VJP vs the dense matmul it replaces, across the paper's layer sizes.
+//! Backs the complexity claim of §3.1 (O(n log n) vs O(n²)).
+
+use butterfly_net::bench::{black_box, Suite};
+use butterfly_net::butterfly::TruncatedButterfly;
+use butterfly_net::linalg::Mat;
+use butterfly_net::model::Head;
+use butterfly_net::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let batch = 32;
+    let mut suite = Suite::new("butterfly core ops (batch 32)");
+    for &n in &[256usize, 1024, 4096] {
+        let b = TruncatedButterfly::fjlt(n, (n as f64).log2() as usize, &mut rng);
+        let x = Mat::gaussian(batch, n, 1.0, &mut rng);
+        let dense = Head::dense(n, n, &mut rng);
+        suite.case(&format!("butterfly_fwd n={n}"), batch, || {
+            black_box(b.forward(&x));
+        });
+        suite.case(&format!("butterfly_vjp n={n}"), batch, || {
+            let (_, tape) = b.forward_tape(&x);
+            let cot = Mat::zeros(batch, b.l());
+            black_box(b.vjp(&tape, &cot));
+        });
+        suite.case(&format!("dense_matmul n={n}"), batch, || {
+            black_box(dense.forward(&x));
+        });
+    }
+    suite.report();
+    suite.write_csv("butterfly_ops.csv");
+}

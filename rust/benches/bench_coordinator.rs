@@ -1,0 +1,71 @@
+//! L3 serving-path benchmark: end-to-end request latency and
+//! throughput through the coordinator (router → dynamic batcher →
+//! engine), dense vs butterfly variants — the deployment claim behind
+//! Figures 12/13.
+
+use butterfly_net::bench::Suite;
+use butterfly_net::coordinator::{BatcherConfig, Coordinator, NativeHeadEngine};
+use butterfly_net::model::Head;
+use butterfly_net::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let (n1, n2) = (1024, 512);
+    let mut c = Coordinator::new();
+    let bcfg = BatcherConfig {
+        max_batch: 32,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 8192,
+    };
+    c.register(
+        "dense",
+        Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng))),
+        bcfg.clone(),
+    );
+    c.register(
+        "butterfly",
+        Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
+        bcfg,
+    );
+    let c = Arc::new(c);
+
+    let mut suite = Suite::new("coordinator serving path (1024→512)");
+    // single-inflight latency
+    for variant in ["dense", "butterfly"] {
+        let c2 = Arc::clone(&c);
+        let x = {
+            let mut r = Rng::seed_from_u64(1);
+            r.gaussian_vec(n1, 1.0)
+        };
+        suite.case(&format!("{variant} latency (1 inflight)"), 1, move || {
+            c2.infer(variant, x.clone()).unwrap();
+        });
+    }
+    // concurrent throughput: 8 client threads hammering one variant
+    for variant in ["dense", "butterfly"] {
+        let c2 = Arc::clone(&c);
+        suite.case(
+            &format!("{variant} throughput (8 clients x 16)"),
+            128,
+            move || {
+                std::thread::scope(|s| {
+                    for t in 0..8u64 {
+                        let c3 = Arc::clone(&c2);
+                        s.spawn(move || {
+                            let mut r = Rng::seed_from_u64(t);
+                            for _ in 0..16 {
+                                let x = r.gaussian_vec(1024, 1.0);
+                                c3.infer(variant, x).unwrap();
+                            }
+                        });
+                    }
+                });
+            },
+        );
+    }
+    suite.report();
+    suite.write_csv("coordinator.csv");
+    println!("\n{}", c.metrics.snapshot());
+}

@@ -1,0 +1,56 @@
+//! PJRT runtime benchmark: artifact execution cost (the L2/L1 path as
+//! seen from rust) — kernel forward, classifier forwards, fused train
+//! steps. Skips quietly when `make artifacts` has not run.
+
+use butterfly_net::bench::{black_box, Suite};
+use butterfly_net::rng::Rng;
+use butterfly_net::runtime::{Dtype, Runtime, Tensor};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::open(dir).expect("open runtime");
+    let mut rng = Rng::seed_from_u64(0);
+    let mut suite = Suite::new("PJRT artifact execution");
+    for name in [
+        "butterfly_fwd",
+        "replacement_fwd",
+        "classifier_fwd_dense",
+        "classifier_fwd_bfly",
+        "classifier_train_dense",
+        "classifier_train_bfly",
+        "ae_train_step",
+        "sketch_loss_grad",
+    ] {
+        let spec = match rt.spec(name) {
+            Some(s) => s.clone(),
+            None => continue,
+        };
+        // synthesize inputs per manifest
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|ts| match ts.dtype {
+                Dtype::I32 => Tensor::from_indices(&(0..ts.num_elements()).collect::<Vec<_>>()),
+                _ => Tensor::from_f64(&ts.shape, &rng.gaussian_vec(ts.num_elements(), 0.1)),
+            })
+            .collect();
+        if rt.load(name).is_err() {
+            eprintln!("  {name}: compile failed, skipping");
+            continue;
+        }
+        let batch_items = spec
+            .inputs
+            .last()
+            .map(|t| t.shape.first().copied().unwrap_or(1))
+            .unwrap_or(1);
+        suite.case(name, batch_items, || {
+            black_box(rt.execute(name, &inputs).expect("execute"));
+        });
+    }
+    suite.report();
+    suite.write_csv("runtime.csv");
+}

@@ -1,0 +1,62 @@
+//! §6 backing bench (Figures 7/8/16–18, Tables 3–4): cost of one
+//! sketch-learning step and of the Err_Te evaluation, per family.
+//! The butterfly's O(n log n) apply keeps its *training* step within a
+//! small factor of the 1-sparse CW pattern despite training 2n·log n
+//! weights.
+
+use butterfly_net::bench::{black_box, Suite};
+use butterfly_net::experiments::sketch_common::tiny_dataset;
+use butterfly_net::experiments::ExpContext;
+use butterfly_net::rng::Rng;
+use butterfly_net::sketch::{
+    sketched_rank_k, ButterflySketch, CwSketch, GaussianSketch, LearnableSketch, LearnedSparse,
+    Sketch,
+};
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let ctx = ExpContext {
+        out_dir: "results".into(),
+        seed: 0,
+        quick: true,
+    };
+    let _ = &ctx;
+    let ds = tiny_dataset(0);
+    let (bigger_n, bigger_d) = if quick { (256, 64) } else { (1024, 128) };
+    let big = {
+        let mut r = Rng::seed_from_u64(1);
+        butterfly_net::linalg::Mat::gaussian(bigger_n, bigger_d, 1.0, &mut r)
+    };
+    let (l, k) = (20usize, 10usize);
+    let mut suite = Suite::new("§6 sketch ops");
+    // loss+grad per family (the training hot path)
+    let bf = ButterflySketch::init(l.min(ds.n), ds.n, &mut rng);
+    let sp = LearnedSparse::init(l.min(ds.n), ds.n, &mut rng);
+    let x0 = ds.train[0].clone();
+    suite.case("butterfly loss_grad (n=64)", 1, || {
+        black_box(bf.loss_grad(&x0, k.min(4)));
+    });
+    suite.case("sparse loss_grad (n=64)", 1, || {
+        black_box(sp.loss_grad(&x0, k.min(4)));
+    });
+    // apply cost at the paper scale
+    let bf_big = ButterflySketch::init(l, bigger_n, &mut rng);
+    let cw_big = CwSketch::sample(l, bigger_n, &mut rng);
+    let ga_big = GaussianSketch::sample(l, bigger_n, &mut rng);
+    suite.case(&format!("butterfly apply (n={bigger_n})"), 1, || {
+        black_box(bf_big.apply(&big));
+    });
+    suite.case(&format!("cw apply (n={bigger_n})"), 1, || {
+        black_box(cw_big.apply(&big));
+    });
+    suite.case(&format!("gaussian apply (n={bigger_n})"), 1, || {
+        black_box(ga_big.apply(&big));
+    });
+    // evaluation path
+    suite.case(&format!("S_k(X) eval (n={bigger_n})"), 1, || {
+        black_box(sketched_rank_k(&big, &ga_big, k));
+    });
+    suite.report();
+    suite.write_csv("sketch.csv");
+}

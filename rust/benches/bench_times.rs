@@ -1,0 +1,42 @@
+//! Figures 12 & 13: training / inference wall-time, dense vs butterfly
+//! head, for every Table-1 architecture's layer dimensions.
+//! (The experiment harness writes the CSV variant; this bench gives the
+//! full latency statistics.)
+
+use butterfly_net::bench::{black_box, Suite};
+use butterfly_net::experiments::fig01_params::ARCHS;
+use butterfly_net::linalg::Mat;
+use butterfly_net::model::Head;
+use butterfly_net::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let batch = 32;
+    let mut infer = Suite::new("Figure 13 — inference time per batch of 32");
+    let mut train = Suite::new("Figure 12 — train step (fwd+bwd) per batch of 32");
+    for &(label, n1, n2, _) in ARCHS {
+        let (p1, p2) = (n1.next_power_of_two(), n2.next_power_of_two());
+        let dense = Head::dense(p1, p2, &mut rng);
+        let bfly = Head::butterfly(p1, p2, &mut rng);
+        let x = Mat::gaussian(batch, p1, 1.0, &mut rng);
+        let cot = Mat::gaussian(batch, p2, 1.0, &mut rng);
+        infer.case(&format!("{label} dense"), batch, || {
+            black_box(dense.forward(&x));
+        });
+        infer.case(&format!("{label} butterfly"), batch, || {
+            black_box(bfly.forward(&x));
+        });
+        train.case(&format!("{label} dense"), batch, || {
+            let (_, tape) = dense.forward_tape(&x);
+            black_box(dense.vjp(&tape, &cot));
+        });
+        train.case(&format!("{label} butterfly"), batch, || {
+            let (_, tape) = bfly.forward_tape(&x);
+            black_box(bfly.vjp(&tape, &cot));
+        });
+    }
+    infer.report();
+    train.report();
+    infer.write_csv("fig13_inference_times.csv");
+    train.write_csv("fig12_training_times.csv");
+}

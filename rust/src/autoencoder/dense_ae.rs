@@ -1,0 +1,138 @@
+//! The classical linear encoder–decoder `Y̅ = D·E·X` (Baldi–Hornik
+//! baseline for §5.2).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Dense encoder–decoder: `E : k×n`, `D : m×k`.
+#[derive(Clone, Debug)]
+pub struct DenseAe {
+    pub d: Mat,
+    pub e: Mat,
+}
+
+impl DenseAe {
+    /// PyTorch-style `U(−1/√fan_in, 1/√fan_in)` initialisation.
+    pub fn new(n: usize, k: usize, m: usize, rng: &mut Rng) -> Self {
+        let be = 1.0 / (n as f64).sqrt();
+        let bd = 1.0 / (k as f64).sqrt();
+        DenseAe {
+            d: Mat::from_fn(m, k, |_, _| (rng.f64() * 2.0 - 1.0) * bd),
+            e: Mat::from_fn(k, n, |_, _| (rng.f64() * 2.0 - 1.0) * be),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let (m, k) = self.d.shape();
+        let (_, n) = self.e.shape();
+        m * k + k * n
+    }
+
+    /// `Y̅ = D E X` for `X : n×d`.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        self.d.matmul(&self.e.matmul(x))
+    }
+
+    /// `‖Y̅ − Y‖_F²`.
+    pub fn loss(&self, x: &Mat, y: &Mat) -> f64 {
+        (&self.forward(x) - y).fro2()
+    }
+
+    /// Loss and gradients `(∂L/∂D, ∂L/∂E)` in closed form:
+    /// `R = Y̅ − Y`, `∂L/∂D = 2·R·(EX)ᵀ`, `∂L/∂E = 2·Dᵀ·R·Xᵀ`.
+    pub fn grad(&self, x: &Mat, y: &Mat) -> (f64, Mat, Mat) {
+        let ex = self.e.matmul(x); // k×d
+        let ybar = self.d.matmul(&ex); // m×d
+        let r = &ybar - y;
+        let loss = r.fro2();
+        let mut gd = r.matmul_t(&ex);
+        gd.scale(2.0);
+        let dtr = self.d.t_matmul(&r); // k×d
+        let mut ge = dtr.matmul_t(x); // k×n  (= Dᵀ R Xᵀ)
+        ge.scale(2.0);
+        (loss, gd, ge)
+    }
+
+    /// Flat parameter vector (D then E, row-major).
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.d.data().to_vec();
+        p.extend_from_slice(self.e.data());
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let nd = self.d.data().len();
+        self.d.data_mut().copy_from_slice(&p[..nd]);
+        self.e.data_mut().copy_from_slice(&p[nd..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::{Adam, Optimizer};
+
+    #[test]
+    fn grad_matches_fd() {
+        let mut rng = Rng::seed_from_u64(90);
+        let x = Mat::gaussian(6, 5, 1.0, &mut rng);
+        let y = Mat::gaussian(4, 5, 1.0, &mut rng);
+        let ae = DenseAe::new(6, 2, 4, &mut rng);
+        let (_, gd, ge) = ae.grad(&x, &y);
+        let h = 1e-6;
+        for (r, c) in [(0, 0), (2, 1), (3, 0)] {
+            let mut p = ae.clone();
+            let mut m = ae.clone();
+            p.d[(r, c)] += h;
+            m.d[(r, c)] -= h;
+            let fd = (p.loss(&x, &y) - m.loss(&x, &y)) / (2.0 * h);
+            assert!((fd - gd[(r, c)]).abs() < 1e-5);
+        }
+        for (r, c) in [(0, 0), (1, 3), (0, 5)] {
+            let mut p = ae.clone();
+            let mut m = ae.clone();
+            p.e[(r, c)] += h;
+            m.e[(r, c)] -= h;
+            let fd = (p.loss(&x, &y) - m.loss(&x, &y)) / (2.0 * h);
+            assert!((fd - ge[(r, c)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn autoencoder_reaches_pca_floor() {
+        // On a rank-deficient X, the optimal loss is Δ_k; Adam should
+        // approach it on a small instance.
+        let mut rng = Rng::seed_from_u64(91);
+        let u = Mat::gaussian(8, 3, 1.0, &mut rng);
+        let v = Mat::gaussian(3, 12, 1.0, &mut rng);
+        let x = u.matmul(&v); // 8×12 rank 3
+        let k = 2;
+        let delta = crate::linalg::pca_error(&x, k);
+        let mut ae = DenseAe::new(8, k, 8, &mut rng);
+        let mut opt = Adam::new(0.02);
+        let mut params = ae.params();
+        for _ in 0..2000 {
+            let (_, gd, ge) = ae.grad(&x, &x);
+            let mut g = gd.data().to_vec();
+            g.extend_from_slice(ge.data());
+            opt.step(&mut params, &g);
+            ae.set_params(&params);
+        }
+        let final_loss = ae.loss(&x, &x);
+        assert!(
+            final_loss < delta * 1.05 + 1e-6,
+            "loss {final_loss} vs Δ_k {delta}"
+        );
+        assert!(final_loss >= delta - 1e-6, "cannot beat PCA");
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Rng::seed_from_u64(92);
+        let ae = DenseAe::new(5, 2, 3, &mut rng);
+        let mut ae2 = DenseAe::new(5, 2, 3, &mut rng);
+        ae2.set_params(&ae.params());
+        assert!(crate::linalg::max_abs_diff(&ae.d, &ae2.d) < 1e-15);
+        assert!(crate::linalg::max_abs_diff(&ae.e, &ae2.e) < 1e-15);
+    }
+}

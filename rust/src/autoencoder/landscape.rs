@@ -1,0 +1,166 @@
+//! Theorem-1 landscape utilities.
+//!
+//! For the encoder–decoder butterfly network `Y̅ = D·E·B·X` with `B`
+//! fixed, Theorem 1 states: at any critical point of `(D, E)` there is
+//! an index set `I ⊆ [ℓ]` with
+//!
+//! ```text
+//! L = tr(YYᵀ) − Σ_{i∈I} λ_i(Σ(B)),   Σ(B) = Y X̃ᵀ (X̃X̃ᵀ)⁻¹ X̃ Yᵀ,  X̃ = BX,
+//! ```
+//!
+//! and the point is a local (= global) minimum iff `I = [k]`. These
+//! functions compute `Σ(B)`, its spectrum, and the predicted losses;
+//! `experiments::thm1_landscape` and the integration tests verify that
+//! gradient training lands on the `I = [k]` value and that the
+//! saddle-point losses (`I ≠ [k]`) are exactly the other attainable
+//! plateau levels.
+
+use crate::linalg::{eigh, Mat};
+
+/// Pseudo-inverse of a symmetric PSD matrix via eigendecomposition,
+/// with relative cutoff `rcond`.
+fn psd_pinv(a: &Mat, rcond: f64) -> Mat {
+    let e = eigh(a);
+    let n = a.rows();
+    let wmax = e.w.first().copied().unwrap_or(0.0).max(0.0);
+    let mut vs = e.v.clone();
+    for c in 0..n {
+        let w = e.w[c];
+        let inv = if w > rcond * (wmax + 1e-300) {
+            1.0 / w
+        } else {
+            0.0
+        };
+        for r in 0..n {
+            vs[(r, c)] *= inv;
+        }
+    }
+    vs.matmul_t(&e.v)
+}
+
+/// `Σ(B) = Y X̃ᵀ (X̃ X̃ᵀ)⁻¹ X̃ Yᵀ` for `X̃ = B_dense · X`.
+///
+/// `Σ(B)` is `m×m`, symmetric PSD, with rank ≤ ℓ; its nonzero
+/// eigenvalues are the `λ_i` of Theorem 1.
+pub fn sigma_b(y: &Mat, x: &Mat, b_dense: &Mat) -> Mat {
+    let xt = b_dense.matmul(x); // ℓ×d
+    let gram = xt.matmul_t(&xt); // ℓ×ℓ = X̃X̃ᵀ
+    let pinv = psd_pinv(&gram, 1e-12);
+    let yxt = y.matmul_t(&xt); // m×ℓ = Y X̃ᵀ
+                               // Y X̃ᵀ (X̃X̃ᵀ)⁻¹ X̃ Yᵀ = (Y X̃ᵀ) pinv (Y X̃ᵀ)ᵀ
+    yxt.matmul(&pinv).matmul_t(&yxt)
+}
+
+/// Eigenvalues of `Σ(B)`, descending.
+pub fn sigma_b_eigs(y: &Mat, x: &Mat, b_dense: &Mat) -> Vec<f64> {
+    eigh(&sigma_b(y, x, b_dense)).w
+}
+
+/// The Theorem-1 loss at a critical point with index set `I`:
+/// `tr(YYᵀ) − Σ_{i∈I} λ_i`. Indices are 0-based into the descending
+/// spectrum.
+pub fn critical_loss(y: &Mat, eigs: &[f64], index_set: &[usize]) -> f64 {
+    let tr = y.fro2(); // tr(YYᵀ) = ‖Y‖_F²
+    tr - index_set.iter().map(|&i| eigs[i]).sum::<f64>()
+}
+
+/// The global optimum for fixed `B` (local = global minimum,
+/// `I = [k]`): `tr(YYᵀ) − Σ_{i<k} λ_i`.
+pub fn optimal_loss_fixed_b(y: &Mat, x: &Mat, b_dense: &Mat, k: usize) -> f64 {
+    let eigs = sigma_b_eigs(y, x, b_dense);
+    let idx: Vec<usize> = (0..k.min(eigs.len())).collect();
+    critical_loss(y, &eigs, &idx)
+}
+
+/// Check assumption (a)+(b) of Theorem 1 on a concrete `(B, X)`:
+/// `BXXᵀBᵀ` invertible and `Σ(B)` with ℓ distinct positive
+/// eigenvalues (up to tolerance). Returns the offending condition if
+/// violated — the §5.2 experiments log this.
+pub fn check_assumptions(y: &Mat, x: &Mat, b_dense: &Mat) -> Result<(), String> {
+    let xt = b_dense.matmul(x);
+    let gram = xt.matmul_t(&xt);
+    let ge = eigh(&gram);
+    let l = gram.rows();
+    if ge.w[l - 1] <= 1e-10 * ge.w[0].max(1e-300) {
+        return Err(format!(
+            "BXXᵀBᵀ near-singular: λ_min/λ_max = {:.3e}",
+            ge.w[l - 1] / ge.w[0]
+        ));
+    }
+    let se = sigma_b_eigs(y, x, b_dense);
+    for i in 0..l.min(se.len()) {
+        if se[i] <= 0.0 {
+            return Err(format!("Σ(B) eigenvalue {i} non-positive: {}", se[i]));
+        }
+        if i + 1 < l && (se[i] - se[i + 1]).abs() <= 1e-10 * se[0] {
+            return Err(format!("Σ(B) eigenvalues {i},{} nearly equal", i + 1));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pinv_inverts_full_rank() {
+        let mut rng = Rng::seed_from_u64(110);
+        let a = Mat::gaussian(6, 6, 1.0, &mut rng);
+        let g = a.matmul_t(&a); // PSD full rank a.s.
+        let gi = psd_pinv(&g, 1e-12);
+        assert!(crate::linalg::max_abs_diff(&g.matmul(&gi), &Mat::eye(6)) < 1e-7);
+    }
+
+    #[test]
+    fn sigma_identity_b_equals_projection_form() {
+        // With B = I and X full row rank, Σ = Y Xᵀ(XXᵀ)⁻¹X Yᵀ — the
+        // Baldi–Hornik matrix. For Y = X it reduces to XXᵀ.
+        let mut rng = Rng::seed_from_u64(111);
+        let x = Mat::gaussian(5, 9, 1.0, &mut rng);
+        let s = sigma_b(&x, &x, &Mat::eye(5));
+        let want = x.matmul_t(&x);
+        assert!(crate::linalg::max_abs_diff(&s, &want) < 1e-7);
+    }
+
+    #[test]
+    fn autoencoder_spectrum_gives_pca_loss() {
+        // For Y = X, B = I: optimal loss tr(XXᵀ) − Σ_{i<k} λ_i(XXᵀ) = Δ_k.
+        let mut rng = Rng::seed_from_u64(112);
+        let x = Mat::gaussian(7, 11, 1.0, &mut rng);
+        for k in [1usize, 3, 5] {
+            let opt = optimal_loss_fixed_b(&x, &x, &Mat::eye(7), k);
+            let delta = crate::linalg::pca_error(&x, k);
+            assert!((opt - delta).abs() < 1e-6, "k={k}: {opt} vs {delta}");
+        }
+    }
+
+    #[test]
+    fn critical_losses_are_ordered() {
+        // I = [k] gives the smallest loss among equal-size index sets.
+        let mut rng = Rng::seed_from_u64(113);
+        let x = Mat::gaussian(6, 10, 1.0, &mut rng);
+        let b = Mat::gaussian(4, 6, 1.0, &mut rng);
+        let eigs = sigma_b_eigs(&x, &x, &b);
+        let best = critical_loss(&x, &eigs, &[0, 1]);
+        let saddle = critical_loss(&x, &eigs, &[0, 2]);
+        let worse = critical_loss(&x, &eigs, &[2, 3]);
+        assert!(best <= saddle && saddle <= worse);
+    }
+
+    #[test]
+    fn assumptions_hold_for_fjlt_generic_data() {
+        let mut rng = Rng::seed_from_u64(114);
+        let x = Mat::gaussian(16, 24, 1.0, &mut rng);
+        let b = crate::butterfly::TruncatedButterfly::fjlt(16, 6, &mut rng);
+        assert!(check_assumptions(&x, &x, &b.dense()).is_ok());
+    }
+
+    #[test]
+    fn assumptions_fail_for_degenerate_b() {
+        let x = Mat::eye(8);
+        let b = Mat::zeros(3, 8); // BXXᵀBᵀ = 0
+        assert!(check_assumptions(&x, &x, &b).is_err());
+    }
+}

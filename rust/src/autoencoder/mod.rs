@@ -1,0 +1,25 @@
+//! Encoder–decoder networks (§4): the dense baseline `Y̅ = D·E·X` and
+//! the paper's *encoder–decoder butterfly network* `Y̅ = D·E·B·X`,
+//! where `B` is an `ℓ×n` truncated butterfly, `E : k×ℓ`, `D : m×k`.
+//!
+//! Includes:
+//! * closed-form gradients (linear networks) driving the optimizers
+//!   from [`crate::train`];
+//! * the Theorem-1 landscape utilities ([`landscape`]): the matrix
+//!   `Σ(B) = Y X̃ᵀ(X̃X̃ᵀ)⁻¹X̃Yᵀ` (`X̃ = BX`), critical-point losses
+//!   `tr(YYᵀ) − Σ_{i∈I} λ_i`, and the fixed-`B` optimum used for the
+//!   two-phase guarantee;
+//! * the two-phase learning procedure of §5.3.
+//!
+//! Conventions: matrices follow the paper (`X : n×d` — columns are
+//! samples; `Y : m×d`). Internally the butterfly operates on `Xᵀ`
+//! (rows are vectors); the trainers cache the transpose.
+
+mod butterfly_ae;
+mod dense_ae;
+pub mod landscape;
+mod two_phase;
+
+pub use butterfly_ae::{AeGrads, ButterflyAe};
+pub use dense_ae::DenseAe;
+pub use two_phase::{train_two_phase, TwoPhaseLog, TwoPhaseOpts};

@@ -1,0 +1,242 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, robust statistics
+//! (mean / p50 / p95 / p99 / min), throughput reporting and CSV/markdown
+//! emission. Each `rust/benches/*.rs` is a `harness = false` binary that
+//! builds a [`Suite`], registers cases, and prints a table whose rows
+//! mirror a table/figure of the paper (see DESIGN.md §3).
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    /// Items per second if the case declared a per-iteration item count.
+    pub throughput: Option<f64>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Measure a closure: warm up for `warmup`, then time individual
+/// iterations until `measure` wall time or `max_iters` is reached.
+pub fn measure<F: FnMut()>(
+    mut f: F,
+    warmup: Duration,
+    measure_for: Duration,
+    max_iters: usize,
+) -> (Vec<f64>, usize) {
+    // Warmup.
+    let w0 = Instant::now();
+    while w0.elapsed() < warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let m0 = Instant::now();
+    while m0.elapsed() < measure_for && samples.len() < max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples.is_empty() {
+        // Extremely slow case: take one sample regardless.
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let n = samples.len();
+    (samples, n)
+}
+
+/// A suite of benchmark cases with shared settings and a common report.
+pub struct Suite {
+    title: String,
+    warmup: Duration,
+    measure_for: Duration,
+    max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // Keep default budgets modest: `cargo bench` runs every suite.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Suite {
+            title: title.to_string(),
+            warmup: Duration::from_millis(if quick { 20 } else { 150 }),
+            measure_for: Duration::from_millis(if quick { 100 } else { 700 }),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override timing budgets (long end-to-end cases).
+    pub fn with_budget(mut self, warmup: Duration, measure_for: Duration) -> Self {
+        self.warmup = warmup;
+        self.measure_for = measure_for;
+        self
+    }
+
+    /// Run one case. `items_per_iter` (if nonzero) reports throughput.
+    pub fn case<F: FnMut()>(&mut self, name: &str, items_per_iter: usize, f: F) -> &Stats {
+        let (mut samples, iters) = measure(f, self.warmup, self.measure_for, self.max_iters);
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: percentile(&samples, 0.50),
+            p95_ns: percentile(&samples, 0.95),
+            p99_ns: percentile(&samples, 0.99),
+            min_ns: samples[0],
+            throughput: if items_per_iter > 0 {
+                Some(items_per_iter as f64 * 1e9 / mean)
+            } else {
+                None
+            },
+        };
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Pretty-print the suite as a markdown table; also returns CSV text.
+    pub fn report(&self) -> String {
+        let mut md = String::new();
+        md.push_str(&format!("\n## {}\n\n", self.title));
+        md.push_str("| case | iters | mean | p50 | p95 | p99 | min | throughput |\n");
+        md.push_str("|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        for s in &self.results {
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                s.name,
+                s.iters,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.p99_ns),
+                fmt_ns(s.min_ns),
+                s.throughput
+                    .map(|t| format!("{:.1}/s", t))
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        print!("{md}");
+        md
+    }
+
+    /// CSV rows (`suite,case,iters,mean_ns,p50_ns,p95_ns,p99_ns,min_ns,items_per_s`).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        for s in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{:.1},{:.1},{:.1},{:.1},{:.1},{}\n",
+                self.title,
+                s.name,
+                s.iters,
+                s.mean_ns,
+                s.p50_ns,
+                s.p95_ns,
+                s.p99_ns,
+                s.min_ns,
+                s.throughput.map(|t| format!("{t:.2}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+
+    /// Write CSV under `results/bench/<file>`.
+    pub fn write_csv(&self, file: &str) {
+        let dir = std::path::Path::new("results/bench");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(file);
+        let header = "suite,case,iters,mean_ns,p50_ns,p95_ns,p99_ns,min_ns,items_per_s\n";
+        let _ = std::fs::write(&path, format!("{header}{}", self.csv()));
+        eprintln!("wrote {}", path.display());
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimiser from discarding a computed value
+/// (`std::hint::black_box` stabilised alternative kept here so call
+/// sites read like criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut suite = Suite::new("unit");
+        let s = suite
+            .case("spin", 100, || {
+                let mut acc = 0u64;
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i);
+                }
+                black_box(acc);
+            })
+            .clone();
+        assert!(s.iters >= 1);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns);
+        assert!(s.throughput.unwrap() > 0.0);
+        let csv = suite.csv();
+        assert!(csv.contains("unit,spin"));
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

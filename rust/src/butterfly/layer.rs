@@ -1,0 +1,415 @@
+//! One butterfly layer: disjoint 2×2 gadgets across bit-`i` pairs.
+
+use crate::linalg::Mat;
+
+/// A single butterfly layer for dimension `n` at stage `stage`
+/// (stride `2^stage`).
+///
+/// Storage: for pair `p` connecting indices `j1 < j2 = j1 + 2^stage`,
+/// `w[p] = [a, b, c, d]` encodes
+///
+/// ```text
+/// out[j1] = a·in[j1] + b·in[j2]
+/// out[j2] = c·in[j1] + d·in[j2]
+/// ```
+///
+/// Pair index: `p = j1/2^{stage+1} * 2^stage + (j1 mod 2^stage)`
+/// ≡ `base/2 + offset` when iterating blocks of `2·stride`.
+#[derive(Clone, Debug)]
+pub struct ButterflyLayer {
+    n: usize,
+    stage: usize,
+    /// `n/2` gadgets of `[a, b, c, d]`.
+    w: Vec<[f64; 4]>,
+}
+
+/// Gradient of a layer's weights, same shape as the weights.
+#[derive(Clone, Debug)]
+pub struct LayerGrad {
+    pub w: Vec<[f64; 4]>,
+}
+
+impl LayerGrad {
+    pub fn zeros(n: usize) -> Self {
+        LayerGrad {
+            w: vec![[0.0; 4]; n / 2],
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for g in &mut self.w {
+            for v in g.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &LayerGrad, s: f64) {
+        for (a, b) in self.w.iter_mut().zip(other.w.iter()) {
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += s * y;
+            }
+        }
+    }
+
+    pub fn fro2(&self) -> f64 {
+        self.w.iter().flatten().map(|v| v * v).sum()
+    }
+}
+
+impl ButterflyLayer {
+    /// Identity-initialised layer (`a=d=1, b=c=0`).
+    pub fn identity(n: usize, stage: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2);
+        assert!(stage < n.trailing_zeros() as usize);
+        ButterflyLayer {
+            n,
+            stage,
+            w: vec![[1.0, 0.0, 0.0, 1.0]; n / 2],
+        }
+    }
+
+    /// Normalised Hadamard gadgets `1/√2·[[1,1],[1,−1]]` — the FJLT
+    /// building block (§3.1).
+    pub fn hadamard(n: usize, stage: usize) -> Self {
+        let h = std::f64::consts::FRAC_1_SQRT_2;
+        ButterflyLayer {
+            n,
+            stage,
+            w: vec![[h, h, h, -h]; n / 2],
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+    #[inline]
+    pub fn stride(&self) -> usize {
+        1 << self.stage
+    }
+    #[inline]
+    pub fn weights(&self) -> &[[f64; 4]] {
+        &self.w
+    }
+    #[inline]
+    pub fn weights_mut(&mut self) -> &mut [[f64; 4]] {
+        &mut self.w
+    }
+
+    /// Number of trainable weights (2 per node = `2n`).
+    pub fn num_params(&self) -> usize {
+        2 * self.n
+    }
+
+    /// Apply the layer in place to one feature vector.
+    #[inline]
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        let s = self.stride();
+        let mut p = 0usize;
+        let mut base = 0usize;
+        while base < self.n {
+            for off in 0..s {
+                let j1 = base + off;
+                let j2 = j1 + s;
+                let [a, b, c, d] = self.w[p];
+                let x1 = x[j1];
+                let x2 = x[j2];
+                x[j1] = a * x1 + b * x2;
+                x[j2] = c * x1 + d * x2;
+                p += 1;
+            }
+            base += 2 * s;
+        }
+    }
+
+    /// Apply the *transpose* of the layer in place (gadget transpose:
+    /// swap `b` and `c`).
+    #[inline]
+    pub fn apply_t_vec(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        let s = self.stride();
+        let mut p = 0usize;
+        let mut base = 0usize;
+        while base < self.n {
+            for off in 0..s {
+                let j1 = base + off;
+                let j2 = j1 + s;
+                let [a, b, c, d] = self.w[p];
+                let x1 = x[j1];
+                let x2 = x[j2];
+                x[j1] = a * x1 + c * x2;
+                x[j2] = b * x1 + d * x2;
+                p += 1;
+            }
+            base += 2 * s;
+        }
+    }
+
+    /// Apply to every row of a batch matrix in place.
+    pub fn apply_batch(&self, x: &mut Mat) {
+        assert_eq!(x.cols(), self.n);
+        for r in 0..x.rows() {
+            self.apply_vec(x.row_mut(r));
+        }
+    }
+
+    /// VJP through a *forward* application.
+    ///
+    /// Given the layer input `xin` (pre-activation tape entry) and the
+    /// cotangent `dout` of the layer output, accumulates weight
+    /// gradients into `grad` and rewrites `dout` into the cotangent of
+    /// the layer input (in place).
+    pub fn vjp_vec(&self, xin: &[f64], dout: &mut [f64], grad: &mut LayerGrad) {
+        let s = self.stride();
+        let mut p = 0usize;
+        let mut base = 0usize;
+        while base < self.n {
+            for off in 0..s {
+                let j1 = base + off;
+                let j2 = j1 + s;
+                let [a, b, c, d] = self.w[p];
+                let g1 = dout[j1];
+                let g2 = dout[j2];
+                let x1 = xin[j1];
+                let x2 = xin[j2];
+                // out1 = a x1 + b x2 ; out2 = c x1 + d x2
+                let gw = &mut grad.w[p];
+                gw[0] += g1 * x1;
+                gw[1] += g1 * x2;
+                gw[2] += g2 * x1;
+                gw[3] += g2 * x2;
+                // din = Wᵀ dout
+                dout[j1] = a * g1 + c * g2;
+                dout[j2] = b * g1 + d * g2;
+                p += 1;
+            }
+            base += 2 * s;
+        }
+    }
+
+    /// VJP through a *transposed* application (`y = Lᵀ x`).
+    pub fn vjp_t_vec(&self, xin: &[f64], dout: &mut [f64], grad: &mut LayerGrad) {
+        let s = self.stride();
+        let mut p = 0usize;
+        let mut base = 0usize;
+        while base < self.n {
+            for off in 0..s {
+                let j1 = base + off;
+                let j2 = j1 + s;
+                let [a, b, c, d] = self.w[p];
+                let g1 = dout[j1];
+                let g2 = dout[j2];
+                let x1 = xin[j1];
+                let x2 = xin[j2];
+                // out1 = a x1 + c x2 ; out2 = b x1 + d x2
+                let gw = &mut grad.w[p];
+                gw[0] += g1 * x1;
+                gw[2] += g1 * x2;
+                gw[1] += g2 * x1;
+                gw[3] += g2 * x2;
+                // din = (Lᵀ)ᵀ dout = L dout
+                dout[j1] = a * g1 + b * g2;
+                dout[j2] = c * g1 + d * g2;
+                p += 1;
+            }
+            base += 2 * s;
+        }
+    }
+
+    /// Pairs `(j1, j2, pair_index)` of this layer — used by reachability
+    /// analysis and tests.
+    pub fn pairs(&self) -> Vec<(usize, usize, usize)> {
+        let s = self.stride();
+        let mut out = Vec::with_capacity(self.n / 2);
+        let mut p = 0usize;
+        let mut base = 0usize;
+        while base < self.n {
+            for off in 0..s {
+                let j1 = base + off;
+                out.push((j1, j1 + s, p));
+                p += 1;
+            }
+            base += 2 * s;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_layer(n: usize, stage: usize, rng: &mut Rng) -> ButterflyLayer {
+        let mut l = ButterflyLayer::identity(n, stage);
+        for g in l.weights_mut() {
+            for v in g.iter_mut() {
+                *v = rng.gaussian();
+            }
+        }
+        l
+    }
+
+    /// Materialise the layer as a dense matrix (columns = images of eᵢ).
+    fn dense(l: &ButterflyLayer) -> Mat {
+        let n = l.n();
+        let mut out = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            l.apply_vec(&mut e);
+            for i in 0..n {
+                out[(i, j)] = e[i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pairs_differ_exactly_in_stage_bit() {
+        for &n in &[2usize, 8, 32] {
+            for stage in 0..n.trailing_zeros() as usize {
+                let l = ButterflyLayer::identity(n, stage);
+                let pairs = l.pairs();
+                assert_eq!(pairs.len(), n / 2);
+                let mut seen = vec![false; n];
+                for (j1, j2, _) in pairs {
+                    assert_eq!(j1 ^ j2, 1 << stage, "n={n} stage={stage}");
+                    assert!(!seen[j1] && !seen[j2]);
+                    seen[j1] = true;
+                    seen[j2] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "every index in exactly one pair");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_per_layer_is_2n() {
+        // Definition 3.1: each layer contributes 2n edges.
+        let mut rng = Rng::seed_from_u64(1);
+        let l = random_layer(16, 2, &mut rng);
+        let d = dense(&l);
+        let nnz = d.data().iter().filter(|v| v.abs() > 1e-12).count();
+        assert_eq!(nnz, 2 * 16);
+        assert_eq!(l.num_params(), 2 * 16);
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Rng::seed_from_u64(2);
+        for &(n, stage) in &[(4, 0), (8, 1), (16, 3)] {
+            let l = random_layer(n, stage, &mut rng);
+            let d = dense(&l);
+            let mut x = rng.gaussian_vec(n, 1.0);
+            let want = d.t().matvec(&x);
+            l.apply_t_vec(&mut x);
+            for i in 0..n {
+                assert!((x[i] - want[i]).abs() < 1e-12, "n={n} stage={stage}");
+            }
+        }
+    }
+
+    #[test]
+    fn adjointness_inner_product() {
+        // ⟨Lx, y⟩ == ⟨x, Lᵀy⟩
+        let mut rng = Rng::seed_from_u64(3);
+        let l = random_layer(32, 4, &mut rng);
+        let x0 = rng.gaussian_vec(32, 1.0);
+        let y0 = rng.gaussian_vec(32, 1.0);
+        let mut lx = x0.clone();
+        l.apply_vec(&mut lx);
+        let mut lty = y0.clone();
+        l.apply_t_vec(&mut lty);
+        let lhs: f64 = lx.iter().zip(y0.iter()).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x0.iter().zip(lty.iter()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-10);
+    }
+
+    #[test]
+    fn hadamard_layer_is_orthogonal() {
+        let l = ButterflyLayer::hadamard(8, 1);
+        let d = dense(&l);
+        let dtd = d.t_matmul(&d);
+        assert!(crate::linalg::max_abs_diff(&dtd, &Mat::eye(8)) < 1e-12);
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(4);
+        let l = random_layer(8, 1, &mut rng);
+        let x = rng.gaussian_vec(8, 1.0);
+        let cot = rng.gaussian_vec(8, 1.0);
+        // analytic
+        let mut dout = cot.clone();
+        let mut g = LayerGrad::zeros(8);
+        l.vjp_vec(&x, &mut dout, &mut g);
+        // fd wrt input
+        let f = |l: &ButterflyLayer, x: &[f64]| -> f64 {
+            let mut y = x.to_vec();
+            l.apply_vec(&mut y);
+            y.iter().zip(cot.iter()).map(|(a, b)| a * b).sum()
+        };
+        let h = 1e-6;
+        for i in 0..8 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (f(&l, &xp) - f(&l, &xm)) / (2.0 * h);
+            assert!((fd - dout[i]).abs() < 1e-6, "din[{i}]");
+        }
+        // fd wrt weights
+        for p in 0..4 {
+            for q in 0..4 {
+                let mut lp = l.clone();
+                let mut lm = l.clone();
+                lp.weights_mut()[p][q] += h;
+                lm.weights_mut()[p][q] -= h;
+                let fd = (f(&lp, &x) - f(&lm, &x)) / (2.0 * h);
+                assert!((fd - g.w[p][q]).abs() < 1e-6, "dw[{p}][{q}]");
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_t_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(5);
+        let l = random_layer(8, 2, &mut rng);
+        let x = rng.gaussian_vec(8, 1.0);
+        let cot = rng.gaussian_vec(8, 1.0);
+        let mut dout = cot.clone();
+        let mut g = LayerGrad::zeros(8);
+        l.vjp_t_vec(&x, &mut dout, &mut g);
+        let f = |l: &ButterflyLayer, x: &[f64]| -> f64 {
+            let mut y = x.to_vec();
+            l.apply_t_vec(&mut y);
+            y.iter().zip(cot.iter()).map(|(a, b)| a * b).sum()
+        };
+        let h = 1e-6;
+        for i in 0..8 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (f(&l, &xp) - f(&l, &xm)) / (2.0 * h);
+            assert!((fd - dout[i]).abs() < 1e-6, "din[{i}]");
+        }
+        for p in 0..4 {
+            for q in 0..4 {
+                let mut lp = l.clone();
+                let mut lm = l.clone();
+                lp.weights_mut()[p][q] += 1e-6;
+                lm.weights_mut()[p][q] -= 1e-6;
+                let fd = (f(&lp, &x) - f(&lm, &x)) / 2e-6;
+                assert!((fd - g.w[p][q]).abs() < 1e-6, "dw[{p}][{q}]");
+            }
+        }
+    }
+}

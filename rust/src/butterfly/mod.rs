@@ -1,0 +1,25 @@
+//! The paper's operator: butterfly networks with trainable gadget
+//! weights, truncation, and FJLT initialisation (§3.1, Definition 3.1).
+//!
+//! An `n×n` butterfly network (`n` a power of two) is a product of
+//! `log₂ n` sparse layers. Layer `i` mixes every pair of coordinates
+//! whose indices differ exactly in bit `i`, through a trainable 2×2
+//! gadget — `2n` weights per layer, `2n·log n` in total. A *truncated*
+//! butterfly keeps a fixed random subset of `ℓ` output coordinates;
+//! Appendix F of the paper bounds the number of weights that can affect
+//! the kept outputs by `2n·log ℓ + 6n`, which
+//! [`TruncatedButterfly::effective_params`] reproduces exactly by
+//! graph reachability.
+//!
+//! Initialised from the FJLT distribution
+//! ([`TruncatedButterfly::fjlt`]), the operator is a fast
+//! Johnson–Lindenstrauss transform: `‖J x‖ ≈ ‖x‖` w.h.p. — the property
+//! Proposition 3.1 builds on and `experiments::prop31` measures.
+
+mod layer;
+mod network;
+mod truncated;
+
+pub use layer::{ButterflyLayer, LayerGrad};
+pub use network::{Butterfly, ButterflyGrad, Tape};
+pub use truncated::TruncatedButterfly;

@@ -1,0 +1,425 @@
+//! The full `n×n` butterfly network: a stack of `log₂ n` layers.
+
+use super::layer::{ButterflyLayer, LayerGrad};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// An `n×n` butterfly network (Definition 3.1): the product
+/// `L_{p−1} · … · L_1 · L_0` of `p = log₂ n` butterfly layers.
+#[derive(Clone, Debug)]
+pub struct Butterfly {
+    n: usize,
+    layers: Vec<ButterflyLayer>,
+}
+
+/// Weight gradients for every layer of a butterfly.
+#[derive(Clone, Debug)]
+pub struct ButterflyGrad {
+    pub layers: Vec<LayerGrad>,
+}
+
+impl ButterflyGrad {
+    pub fn zeros(n: usize) -> Self {
+        let p = n.trailing_zeros() as usize;
+        ButterflyGrad {
+            layers: (0..p).map(|_| LayerGrad::zeros(n)).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for l in &mut self.layers {
+            l.scale(s);
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &ButterflyGrad, s: f64) {
+        for (a, b) in self.layers.iter_mut().zip(other.layers.iter()) {
+            a.add_scaled(b, s);
+        }
+    }
+
+    pub fn fro2(&self) -> f64 {
+        self.layers.iter().map(|l| l.fro2()).sum()
+    }
+}
+
+/// Forward tape: the input of every layer, needed by the VJP.
+/// `acts[i]` is the activation *entering* layer `i`; `acts[p]` is the
+/// network output (before truncation).
+pub struct Tape {
+    pub acts: Vec<Mat>,
+}
+
+impl Butterfly {
+    /// Identity-initialised network.
+    pub fn identity(n: usize) -> Self {
+        assert!(
+            n.is_power_of_two() && n >= 2,
+            "butterfly needs n=2^k≥2, got {n}"
+        );
+        let p = n.trailing_zeros() as usize;
+        Butterfly {
+            n,
+            layers: (0..p).map(|i| ButterflyLayer::identity(n, i)).collect(),
+        }
+    }
+
+    /// Normalised Walsh–Hadamard network: every gadget `1/√2·[[1,1],[1,−1]]`.
+    /// The product is the (orthogonal) normalised Hadamard transform.
+    pub fn hadamard(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2);
+        let p = n.trailing_zeros() as usize;
+        Butterfly {
+            n,
+            layers: (0..p).map(|i| ButterflyLayer::hadamard(n, i)).collect(),
+        }
+    }
+
+    /// Gaussian-perturbed random initialisation (used by ablations).
+    pub fn gaussian(n: usize, std: f64, rng: &mut Rng) -> Self {
+        let mut b = Butterfly::identity(n);
+        for l in &mut b.layers {
+            for g in l.weights_mut() {
+                for v in g.iter_mut() {
+                    *v = rng.gaussian() * std;
+                }
+            }
+        }
+        b
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+    #[inline]
+    pub fn layers(&self) -> &[ButterflyLayer] {
+        &self.layers
+    }
+    #[inline]
+    pub fn layers_mut(&mut self) -> &mut [ButterflyLayer] {
+        &mut self.layers
+    }
+
+    /// Total trainable weights: `2n` per layer (Definition 3.1).
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// Apply the network to every row of `x` (batch × n), in place.
+    pub fn forward_inplace(&self, x: &mut Mat) {
+        assert_eq!(x.cols(), self.n);
+        for r in 0..x.rows() {
+            let row = x.row_mut(r);
+            for l in &self.layers {
+                l.apply_vec(row);
+            }
+        }
+    }
+
+    /// Apply to a batch, returning a new matrix.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut y = x.clone();
+        self.forward_inplace(&mut y);
+        y
+    }
+
+    /// Apply the transpose `Bᵀ` to every row of `y`, in place.
+    pub fn forward_t_inplace(&self, y: &mut Mat) {
+        assert_eq!(y.cols(), self.n);
+        for r in 0..y.rows() {
+            let row = y.row_mut(r);
+            for l in self.layers.iter().rev() {
+                l.apply_t_vec(row);
+            }
+        }
+    }
+
+    /// `Bᵀ y` for a batch.
+    pub fn forward_t(&self, y: &Mat) -> Mat {
+        let mut x = y.clone();
+        self.forward_t_inplace(&mut x);
+        x
+    }
+
+    /// Forward pass that records the activation entering each layer.
+    pub fn forward_tape(&self, x: &Mat) -> Tape {
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.clone());
+        let mut cur = x.clone();
+        for l in &self.layers {
+            l.apply_batch(&mut cur);
+            acts.push(cur.clone());
+        }
+        Tape { acts }
+    }
+
+    /// Transposed forward with tape. `acts[0]` is the input; `acts[i]`
+    /// the activation after applying the transposes of the last `i`
+    /// layers (i.e. entering the transpose of layer `p−1−i`).
+    pub fn forward_t_tape(&self, y: &Mat) -> Tape {
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(y.clone());
+        let mut cur = y.clone();
+        for l in self.layers.iter().rev() {
+            for r in 0..cur.rows() {
+                l.apply_t_vec(cur.row_mut(r));
+            }
+            acts.push(cur.clone());
+        }
+        Tape { acts }
+    }
+
+    /// VJP through [`Self::forward_tape`]: given the cotangent of the
+    /// output, return the cotangent of the input and all weight grads.
+    pub fn vjp(&self, tape: &Tape, dout: &Mat) -> (Mat, ButterflyGrad) {
+        let p = self.layers.len();
+        assert_eq!(tape.acts.len(), p + 1);
+        let mut grad = ButterflyGrad::zeros(self.n);
+        let mut cot = dout.clone();
+        for (i, l) in self.layers.iter().enumerate().rev() {
+            let xin = &tape.acts[i];
+            for r in 0..cot.rows() {
+                l.vjp_vec(xin.row(r), cot.row_mut(r), &mut grad.layers[i]);
+            }
+        }
+        (cot, grad)
+    }
+
+    /// VJP through [`Self::forward_t_tape`].
+    pub fn vjp_t(&self, tape: &Tape, dout: &Mat) -> (Mat, ButterflyGrad) {
+        let p = self.layers.len();
+        assert_eq!(tape.acts.len(), p + 1);
+        let mut grad = ButterflyGrad::zeros(self.n);
+        let mut cot = dout.clone();
+        // forward_t applied layers p-1, p-2, …, 0 (transposed); reverse.
+        for (step, l) in self.layers.iter().enumerate() {
+            // layer `l` (= index `step`) was applied at position p-1-step,
+            // with input tape.acts[p-1-step].
+            let xin = &tape.acts[p - 1 - step];
+            for r in 0..cot.rows() {
+                l.vjp_t_vec(xin.row(r), cot.row_mut(r), &mut grad.layers[step]);
+            }
+        }
+        (cot, grad)
+    }
+
+    /// Apply a gradient step `w ← w − lr·g` to all weights.
+    pub fn step(&mut self, grad: &ButterflyGrad, lr: f64) {
+        for (l, g) in self.layers.iter_mut().zip(grad.layers.iter()) {
+            for (w, gw) in l.weights_mut().iter_mut().zip(g.w.iter()) {
+                for (wv, gv) in w.iter_mut().zip(gw.iter()) {
+                    *wv -= lr * gv;
+                }
+            }
+        }
+    }
+
+    /// Materialise as a dense `n×n` matrix (columns are images of basis
+    /// vectors). O(n² log n) — for tests and small experiments only.
+    pub fn dense(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            for l in &self.layers {
+                l.apply_vec(&mut e);
+            }
+            for i in 0..n {
+                out[(i, j)] = e[i];
+            }
+        }
+        out
+    }
+
+    /// Flatten all weights into a single vector (artifact I/O order:
+    /// layer-major, pair-major, then `[a,b,c,d]`). Matches the layout
+    /// `python/compile/model.py` uses for its weight arrays.
+    pub fn flat_weights(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            for g in l.weights() {
+                out.extend_from_slice(g);
+            }
+        }
+        out
+    }
+
+    /// Load weights from the flat layout of [`Self::flat_weights`].
+    pub fn set_flat_weights(&mut self, w: &[f64]) {
+        assert_eq!(w.len(), self.num_params());
+        let mut it = w.iter();
+        for l in &mut self.layers {
+            for g in l.weights_mut() {
+                for v in g.iter_mut() {
+                    *v = *it.next().unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    #[test]
+    fn depth_and_params() {
+        for &n in &[2usize, 16, 256, 1024] {
+            let b = Butterfly::identity(n);
+            assert_eq!(b.depth(), n.trailing_zeros() as usize);
+            assert_eq!(b.num_params(), 2 * n * b.depth());
+        }
+    }
+
+    #[test]
+    fn identity_network_is_identity() {
+        let b = Butterfly::identity(16);
+        assert!(max_abs_diff(&b.dense(), &Mat::eye(16)) < 1e-15);
+    }
+
+    #[test]
+    fn hadamard_network_is_walsh_hadamard() {
+        // H_n via the recursive definition, normalised.
+        fn wh(n: usize) -> Mat {
+            if n == 1 {
+                return Mat::from_vec(1, 1, vec![1.0]);
+            }
+            let h = wh(n / 2);
+            let s = std::f64::consts::FRAC_1_SQRT_2;
+            Mat::from_fn(n, n, |i, j| {
+                let (bi, bj) = (i >= n / 2, j >= n / 2);
+                let v = h[(i % (n / 2), j % (n / 2))] * s;
+                if bi && bj {
+                    -v
+                } else {
+                    v
+                }
+            })
+        }
+        for &n in &[2usize, 4, 8, 16] {
+            let b = Butterfly::hadamard(n);
+            let d = b.dense();
+            assert!(max_abs_diff(&d, &wh(n)) < 1e-12, "n={n}");
+            // orthogonality
+            assert!(max_abs_diff(&d.t_matmul(&d), &Mat::eye(n)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::seed_from_u64(7);
+        let b = Butterfly::gaussian(32, 1.0, &mut rng);
+        let d = b.dense();
+        let x = Mat::gaussian(5, 32, 1.0, &mut rng);
+        let got = b.forward(&x);
+        let want = x.matmul(&d.t()); // rows are vectors: y = (D xᵀ)ᵀ = x Dᵀ
+        assert!(max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_is_adjoint() {
+        let mut rng = Rng::seed_from_u64(8);
+        let b = Butterfly::gaussian(64, 1.0, &mut rng);
+        let x = Mat::gaussian(1, 64, 1.0, &mut rng);
+        let y = Mat::gaussian(1, 64, 1.0, &mut rng);
+        let bx = b.forward(&x);
+        let bty = b.forward_t(&y);
+        let lhs: f64 = bx.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x.data().iter().zip(bty.data()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::seed_from_u64(9);
+        let b = Butterfly::gaussian(8, 1.0, &mut rng);
+        let x = Mat::gaussian(3, 8, 1.0, &mut rng);
+        let cot = Mat::gaussian(3, 8, 1.0, &mut rng);
+        let tape = b.forward_tape(&x);
+        let (din, grad) = b.vjp(&tape, &cot);
+        let loss =
+            |b: &Butterfly, x: &Mat| -> f64 { b.forward(x).hadamard(&cot).data().iter().sum() };
+        let h = 1e-6;
+        // input grads
+        for r in 0..3 {
+            for c in 0..8 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[(r, c)] += h;
+                xm[(r, c)] -= h;
+                let fd = (loss(&b, &xp) - loss(&b, &xm)) / (2.0 * h);
+                assert!((fd - din[(r, c)]).abs() < 1e-5);
+            }
+        }
+        // a few weight grads on each layer
+        for li in 0..b.depth() {
+            for pi in 0..2 {
+                for q in 0..4 {
+                    let mut bp = b.clone();
+                    let mut bm = b.clone();
+                    bp.layers_mut()[li].weights_mut()[pi][q] += h;
+                    bm.layers_mut()[li].weights_mut()[pi][q] -= h;
+                    let fd = (loss(&bp, &x) - loss(&bm, &x)) / (2.0 * h);
+                    assert!(
+                        (fd - grad.layers[li].w[pi][q]).abs() < 1e-5,
+                        "layer {li} pair {pi} w{q}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_t_matches_fd() {
+        let mut rng = Rng::seed_from_u64(10);
+        let b = Butterfly::gaussian(8, 1.0, &mut rng);
+        let y = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let tape = b.forward_t_tape(&y);
+        let (din, grad) = b.vjp_t(&tape, &cot);
+        let loss =
+            |b: &Butterfly, y: &Mat| -> f64 { b.forward_t(y).hadamard(&cot).data().iter().sum() };
+        let h = 1e-6;
+        for r in 0..2 {
+            for c in 0..8 {
+                let mut yp = y.clone();
+                let mut ym = y.clone();
+                yp[(r, c)] += h;
+                ym[(r, c)] -= h;
+                let fd = (loss(&b, &yp) - loss(&b, &ym)) / (2.0 * h);
+                assert!((fd - din[(r, c)]).abs() < 1e-5);
+            }
+        }
+        for li in 0..b.depth() {
+            for q in 0..4 {
+                let mut bp = b.clone();
+                let mut bm = b.clone();
+                bp.layers_mut()[li].weights_mut()[1][q] += h;
+                bm.layers_mut()[li].weights_mut()[1][q] -= h;
+                let fd = (loss(&bp, &y) - loss(&bm, &y)) / (2.0 * h);
+                assert!(
+                    (fd - grad.layers[li].w[1][q]).abs() < 1e-5,
+                    "layer {li} w{q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_weights_roundtrip() {
+        let mut rng = Rng::seed_from_u64(11);
+        let b = Butterfly::gaussian(16, 1.0, &mut rng);
+        let w = b.flat_weights();
+        assert_eq!(w.len(), b.num_params());
+        let mut b2 = Butterfly::identity(16);
+        b2.set_flat_weights(&w);
+        assert!(max_abs_diff(&b.dense(), &b2.dense()) < 1e-15);
+    }
+}

@@ -1,0 +1,340 @@
+//! Truncated butterfly network (§3.1): a butterfly whose deepest layer
+//! keeps only a fixed random subset of `ℓ` coordinates.
+
+use super::network::{Butterfly, ButterflyGrad, Tape};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// An `ℓ×n` truncated butterfly network `J = T·B`: an `n×n` butterfly
+/// `B` followed by projection `T` onto a fixed subset of `ℓ`
+/// coordinates (chosen uniformly at random and frozen; only `B`'s
+/// weights train).
+#[derive(Clone, Debug)]
+pub struct TruncatedButterfly {
+    net: Butterfly,
+    /// Sorted indices of the kept output coordinates.
+    keep: Vec<usize>,
+}
+
+impl TruncatedButterfly {
+    /// Wrap an existing butterfly with an explicit kept subset.
+    pub fn new(net: Butterfly, mut keep: Vec<usize>) -> Self {
+        keep.sort_unstable();
+        keep.dedup();
+        assert!(!keep.is_empty() && keep.len() <= net.n());
+        assert!(*keep.last().unwrap() < net.n());
+        TruncatedButterfly { net, keep }
+    }
+
+    /// Sample from the FJLT distribution (§3.1, footnote 5):
+    /// normalised Hadamard gadgets, a Rademacher ±1 diagonal absorbed
+    /// into the first layer, a uniformly random kept subset, and the
+    /// `√(n/ℓ)` variance correction absorbed into the first layer as
+    /// well — so the whole operator is carried by trainable weights.
+    pub fn fjlt(n: usize, l: usize, rng: &mut Rng) -> Self {
+        assert!(n.is_power_of_two() && n >= 2);
+        assert!((1..=n).contains(&l));
+        let mut net = Butterfly::hadamard(n);
+        let scale = (n as f64 / l as f64).sqrt();
+        // D = diag(±1): multiplying the input by D scales the *columns*
+        // of the first layer's gadgets.
+        let signs: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+        {
+            let layer0 = &mut net.layers_mut()[0];
+            let pairs = layer0.pairs();
+            let w = layer0.weights_mut();
+            for (j1, j2, p) in pairs {
+                w[p][0] *= signs[j1] * scale; // a: column j1
+                w[p][1] *= signs[j2] * scale; // b: column j2
+                w[p][2] *= signs[j1] * scale; // c: column j1
+                w[p][3] *= signs[j2] * scale; // d: column j2
+            }
+        }
+        let keep = rng.subset(n, l);
+        TruncatedButterfly { net, keep }
+    }
+
+    /// FJLT without the `√(n/ℓ)` rescale (used when the caller wants an
+    /// exactly-orthonormal `B` before truncation, e.g. Theorem 1 setups).
+    pub fn fjlt_unscaled(n: usize, l: usize, rng: &mut Rng) -> Self {
+        let mut t = Self::fjlt(n, l, rng);
+        let undo = (l as f64 / n as f64).sqrt();
+        let layer0 = &mut t.net.layers_mut()[0];
+        for g in layer0.weights_mut() {
+            for v in g.iter_mut() {
+                *v *= undo;
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.net.n()
+    }
+    #[inline]
+    pub fn l(&self) -> usize {
+        self.keep.len()
+    }
+    #[inline]
+    pub fn keep(&self) -> &[usize] {
+        &self.keep
+    }
+    #[inline]
+    pub fn net(&self) -> &Butterfly {
+        &self.net
+    }
+    #[inline]
+    pub fn net_mut(&mut self) -> &mut Butterfly {
+        &mut self.net
+    }
+
+    /// `J x` for a batch (rows are vectors): batch×n → batch×ℓ.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let full = self.net.forward(x);
+        full.select_cols(&self.keep)
+    }
+
+    /// `Jᵀ y`: batch×ℓ → batch×n.
+    pub fn forward_t(&self, y: &Mat) -> Mat {
+        assert_eq!(y.cols(), self.l());
+        let mut scattered = Mat::zeros(y.rows(), self.n());
+        for r in 0..y.rows() {
+            for (c, &k) in self.keep.iter().enumerate() {
+                scattered[(r, k)] = y[(r, c)];
+            }
+        }
+        self.net.forward_t(&scattered)
+    }
+
+    /// Forward with tape for the VJP.
+    pub fn forward_tape(&self, x: &Mat) -> (Mat, Tape) {
+        let tape = self.net.forward_tape(x);
+        let out = tape.acts.last().unwrap().select_cols(&self.keep);
+        (out, tape)
+    }
+
+    /// VJP through [`Self::forward_tape`]: cotangent of the `ℓ` outputs
+    /// → (cotangent of the input, weight grads).
+    pub fn vjp(&self, tape: &Tape, dout: &Mat) -> (Mat, ButterflyGrad) {
+        assert_eq!(dout.cols(), self.l());
+        let mut scattered = Mat::zeros(dout.rows(), self.n());
+        for r in 0..dout.rows() {
+            for (c, &k) in self.keep.iter().enumerate() {
+                scattered[(r, k)] = dout[(r, c)];
+            }
+        }
+        self.net.vjp(tape, &scattered)
+    }
+
+    /// Transposed forward with tape.
+    pub fn forward_t_tape(&self, y: &Mat) -> (Mat, Tape) {
+        assert_eq!(y.cols(), self.l());
+        let mut scattered = Mat::zeros(y.rows(), self.n());
+        for r in 0..y.rows() {
+            for (c, &k) in self.keep.iter().enumerate() {
+                scattered[(r, k)] = y[(r, c)];
+            }
+        }
+        let tape = self.net.forward_t_tape(&scattered);
+        let out = tape.acts.last().unwrap().clone();
+        (out, tape)
+    }
+
+    /// VJP through [`Self::forward_t_tape`]: cotangent of the `n`
+    /// outputs → (cotangent of the `ℓ` inputs, weight grads).
+    pub fn vjp_t(&self, tape: &Tape, dout: &Mat) -> (Mat, ButterflyGrad) {
+        let (din_full, grad) = self.net.vjp_t(tape, dout);
+        (din_full.select_cols(&self.keep), grad)
+    }
+
+    /// Materialise as a dense `ℓ×n` matrix.
+    pub fn dense(&self) -> Mat {
+        self.net.dense().select_rows(&self.keep)
+    }
+
+    /// Number of weights that can influence a kept output — computed by
+    /// reachability through the layer graph. Appendix F proves this is
+    /// at most `2n·log₂ ℓ + 6n`; `tests` and
+    /// `prop_linalg_butterfly.rs` check the bound on random instances.
+    pub fn effective_params(&self) -> usize {
+        let n = self.n();
+        let p = self.net.depth();
+        // reachable[o] at the current level: can node o reach a kept output?
+        let mut reachable = vec![false; n];
+        for &k in &self.keep {
+            reachable[k] = true;
+        }
+        let mut total = 0usize;
+        // Walk layers from the deepest back to the input.
+        for i in (0..p).rev() {
+            let count = reachable.iter().filter(|&&r| r).count();
+            total += 2 * count; // each reachable output node has 2 in-edges
+            let bit = 1usize << i;
+            let mut prev = vec![false; n];
+            for o in 0..n {
+                if reachable[o] {
+                    prev[o] = true;
+                    prev[o ^ bit] = true;
+                }
+            }
+            reachable = prev;
+        }
+        total
+    }
+
+    /// The Appendix-F upper bound `2n·log₂ ℓ + 6n`.
+    pub fn param_bound(&self) -> usize {
+        let n = self.n() as f64;
+        let l = self.l() as f64;
+        (2.0 * n * l.log2().max(0.0) + 6.0 * n).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::seed_from_u64(20);
+        let j = TruncatedButterfly::fjlt(32, 7, &mut rng);
+        let d = j.dense();
+        assert_eq!(d.shape(), (7, 32));
+        let x = Mat::gaussian(4, 32, 1.0, &mut rng);
+        let got = j.forward(&x);
+        let want = x.matmul(&d.t());
+        assert!(max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let mut rng = Rng::seed_from_u64(21);
+        let j = TruncatedButterfly::fjlt(16, 5, &mut rng);
+        let d = j.dense();
+        let y = Mat::gaussian(3, 5, 1.0, &mut rng);
+        let got = j.forward_t(&y);
+        let want = y.matmul(&d);
+        assert!(max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn fjlt_norm_preservation() {
+        // E‖Jx‖² = ‖x‖²; check concentration over draws (JL property).
+        let mut rng = Rng::seed_from_u64(22);
+        let n = 256;
+        let l = 64;
+        let x = Mat::gaussian(1, n, 1.0, &mut rng);
+        let xnorm2 = x.fro2();
+        let mut ratios = Vec::new();
+        for _ in 0..50 {
+            let j = TruncatedButterfly::fjlt(n, l, &mut rng);
+            let jx = j.forward(&x);
+            ratios.push(jx.fro2() / xnorm2);
+        }
+        let mean: f64 = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 1.0).abs() < 0.15, "mean ratio {mean}");
+        // most draws within ±50%
+        let good = ratios.iter().filter(|r| (*r - 1.0).abs() < 0.5).count();
+        assert!(good >= 45, "only {good}/50 draws concentrated");
+    }
+
+    #[test]
+    fn fjlt_unscaled_rows_orthonormal() {
+        let mut rng = Rng::seed_from_u64(23);
+        let j = TruncatedButterfly::fjlt_unscaled(64, 16, &mut rng);
+        let d = j.dense();
+        let g = d.matmul_t(&d); // ℓ×ℓ Gram of rows
+        assert!(max_abs_diff(&g, &Mat::eye(16)) < 1e-10);
+    }
+
+    #[test]
+    fn effective_params_within_appendix_f_bound() {
+        let mut rng = Rng::seed_from_u64(24);
+        for &(n, l) in &[(64usize, 4usize), (256, 16), (1024, 10), (1024, 64)] {
+            let j = TruncatedButterfly::fjlt(n, l, &mut rng);
+            let eff = j.effective_params();
+            assert!(
+                eff <= j.param_bound(),
+                "n={n} l={l}: eff={eff} > bound={}",
+                j.param_bound()
+            );
+            // and strictly fewer than the untruncated count when l << n
+            if l <= n / 4 {
+                assert!(eff < j.net().num_params());
+            }
+        }
+    }
+
+    #[test]
+    fn full_truncation_keeps_everything() {
+        let mut rng = Rng::seed_from_u64(25);
+        let j = TruncatedButterfly::fjlt(16, 16, &mut rng);
+        assert_eq!(j.effective_params(), j.net().num_params());
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::seed_from_u64(26);
+        let j = TruncatedButterfly::fjlt(8, 3, &mut rng);
+        let x = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 3, 1.0, &mut rng);
+        let (_, tape) = j.forward_tape(&x);
+        let (din, grad) = j.vjp(&tape, &cot);
+        let loss = |j: &TruncatedButterfly, x: &Mat| -> f64 {
+            j.forward(x).hadamard(&cot).data().iter().sum()
+        };
+        let h = 1e-6;
+        for r in 0..2 {
+            for c in 0..8 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[(r, c)] += h;
+                xm[(r, c)] -= h;
+                let fd = (loss(&j, &xp) - loss(&j, &xm)) / (2.0 * h);
+                assert!((fd - din[(r, c)]).abs() < 1e-5);
+            }
+        }
+        for li in 0..j.net().depth() {
+            let mut jp = j.clone();
+            let mut jm = j.clone();
+            jp.net_mut().layers_mut()[li].weights_mut()[0][1] += h;
+            jm.net_mut().layers_mut()[li].weights_mut()[0][1] -= h;
+            let fd = (loss(&jp, &x) - loss(&jm, &x)) / (2.0 * h);
+            assert!((fd - grad.layers[li].w[0][1]).abs() < 1e-5, "layer {li}");
+        }
+    }
+
+    #[test]
+    fn vjp_t_matches_fd() {
+        let mut rng = Rng::seed_from_u64(27);
+        let j = TruncatedButterfly::fjlt(8, 3, &mut rng);
+        let y = Mat::gaussian(2, 3, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let (_, tape) = j.forward_t_tape(&y);
+        let (din, grad) = j.vjp_t(&tape, &cot);
+        let loss = |j: &TruncatedButterfly, y: &Mat| -> f64 {
+            j.forward_t(y).hadamard(&cot).data().iter().sum()
+        };
+        let h = 1e-6;
+        for r in 0..2 {
+            for c in 0..3 {
+                let mut yp = y.clone();
+                let mut ym = y.clone();
+                yp[(r, c)] += h;
+                ym[(r, c)] -= h;
+                let fd = (loss(&j, &yp) - loss(&j, &ym)) / (2.0 * h);
+                assert!((fd - din[(r, c)]).abs() < 1e-5);
+            }
+        }
+        for li in 0..j.net().depth() {
+            let mut jp = j.clone();
+            let mut jm = j.clone();
+            jp.net_mut().layers_mut()[li].weights_mut()[1][2] += h;
+            jm.net_mut().layers_mut()[li].weights_mut()[1][2] -= h;
+            let fd = (loss(&jp, &y) - loss(&jm, &y)) / (2.0 * h);
+            assert!((fd - grad.layers[li].w[1][2]).abs() < 1e-5, "layer {li}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Command-line argument parsing (hand-rolled; `clap` is unavailable
+//! offline).
+//!
+//! Grammar: `butterfly-net <command> [positional...] [--flag] [--key value]`.
+//! Flags may also be written `--key=value`. Unknown flags are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Subcommand (first non-flag token).
+    pub command: Option<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    options: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    anyhow::bail!("bare `--` is not supported");
+                }
+                let (key, inline_val) = match flag.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if it.peek().map(|nxt| !nxt.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                out.options.entry(key).or_default().push(val);
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.options
+            .get(key)
+            .map(|v| v.iter().any(|s| s == "true"))
+            .unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// All values provided for a repeatable option (e.g. `--set`).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{s}`")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{s}`")),
+        }
+    }
+
+    /// Validate that every provided option is in `allowed` (catches typos).
+    pub fn expect_known(&self, allowed: &[&str]) -> anyhow::Result<()> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                anyhow::bail!(
+                    "unknown option --{k}; known options: {}",
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("experiment fig4 fig5");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig4", "fig5"]);
+    }
+
+    #[test]
+    fn options_forms() {
+        let a = parse("serve --port 8080 --host=0.0.0.0 --verbose");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("host"), Some("0.0.0.0"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn repeatable_and_typed() {
+        let a = parse("train --set a=1 --set b=2 --epochs 17 --lr 0.5");
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 17);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+        assert!(parse("x --epochs nope").get_usize("epochs", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("serve --prot 8080");
+        assert!(a.expect_known(&["port"]).is_err());
+        assert!(a.expect_known(&["prot"]).is_ok());
+    }
+}

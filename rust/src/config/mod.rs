@@ -1,0 +1,154 @@
+//! Configuration system.
+//!
+//! A typed configuration layer over a hand-rolled TOML-subset parser
+//! (`serde`/`toml` are unavailable in the offline registry). Supports
+//! the pieces a deployment config actually needs: `[section]` tables,
+//! string/int/float/bool scalars, homogeneous arrays, comments, and
+//! `key.path` lookups with typed accessors and defaults.
+//!
+//! Every CLI entry point accepts `--config <file>` and individual
+//! `--set section.key=value` overrides, mirroring the config story of
+//! frameworks like MaxText/Megatron.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlError, Value};
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration: flat map from `section.key` to [`Value`].
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_str(text: &str) -> Result<Self, TomlError> {
+        Ok(Config {
+            values: parse_toml(text)?,
+        })
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
+        Ok(Self::from_str(&text).map_err(|e| anyhow::anyhow!("config {path}: {e}"))?)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set_override(&mut self, kv: &str) -> anyhow::Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got `{kv}`"))?;
+        self.values
+            .insert(k.trim().to_string(), toml::parse_scalar(v.trim()));
+        Ok(())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    /// Typed accessors with defaults.
+    pub fn get_i64(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(Value::Int(v)) => *v,
+            Some(Value::Float(v)) => *v as i64,
+            _ => default,
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_i64(key, default as i64).max(0) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(Value::Float(v)) => *v,
+            Some(Value::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(Value::Str(v)) => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// Insert programmatically (used by tests and experiment presets).
+    pub fn insert(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[server]
+port = 7070
+host = "127.0.0.1"
+max_batch = 32
+deadline_ms = 5.5
+enabled = true
+
+[model]
+n1 = 1024
+n2 = 512
+variants = ["dense", "butterfly"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.get_i64("server.port", 0), 7070);
+        assert_eq!(c.get_str("server.host", ""), "127.0.0.1");
+        assert_eq!(c.get_f64("server.deadline_ms", 0.0), 5.5);
+        assert!(c.get_bool("server.enabled", false));
+        assert_eq!(c.get_usize("model.n1", 0), 1024);
+        match c.get("model.variants") {
+            Some(Value::Array(a)) => assert_eq!(a.len(), 2),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::from_str("").unwrap();
+        assert_eq!(c.get_i64("nope", 42), 42);
+        assert_eq!(c.get_str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::from_str(SAMPLE).unwrap();
+        c.set_override("server.port=9999").unwrap();
+        c.set_override("server.host=\"0.0.0.0\"").unwrap();
+        assert_eq!(c.get_i64("server.port", 0), 9999);
+        assert_eq!(c.get_str("server.host", ""), "0.0.0.0");
+        assert!(c.set_override("garbage").is_err());
+    }
+}

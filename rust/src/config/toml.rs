@@ -1,0 +1,188 @@
+//! Minimal TOML-subset parser (sections, scalars, arrays, comments).
+//!
+//! Deliberately small: exactly the grammar our configs use. Errors carry
+//! line numbers so config mistakes are diagnosable.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+/// Parse error with a line number.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a scalar token: quoted string, bool, int, float; anything else
+/// is treated as a bare string (convenient for CLI `--set`).
+pub fn parse_scalar(tok: &str) -> Value {
+    let t = tok.trim();
+    if let Some(stripped) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Value::Str(stripped.to_string());
+    }
+    match t {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(t.to_string())
+}
+
+fn parse_value(tok: &str, line: usize) -> Result<Value, TomlError> {
+    let t = tok.trim();
+    if t.is_empty() {
+        return Err(TomlError {
+            line,
+            msg: "empty value".into(),
+        });
+    }
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(TomlError {
+                line,
+                msg: "unterminated array".into(),
+            });
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            // split on commas not inside quotes
+            let mut depth_quote = false;
+            let mut cur = String::new();
+            for ch in inner.chars() {
+                match ch {
+                    '"' => {
+                        depth_quote = !depth_quote;
+                        cur.push(ch);
+                    }
+                    ',' if !depth_quote => {
+                        items.push(parse_scalar(&cur));
+                        cur.clear();
+                    }
+                    _ => cur.push(ch),
+                }
+            }
+            if !cur.trim().is_empty() {
+                items.push(parse_scalar(&cur));
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    Ok(parse_scalar(t))
+}
+
+/// Strip a trailing comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quote = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse TOML-subset text into a flat `section.key -> Value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno0, raw) in text.lines().enumerate() {
+        let lineno = lineno0 + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "empty section name".into(),
+                });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| TomlError {
+            line: lineno,
+            msg: format!("expected key = value, got `{line}`"),
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, parse_value(v, lineno)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("-3"), Value::Int(-3));
+        assert_eq!(parse_scalar("2.5"), Value::Float(2.5));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("\"hi\""), Value::Str("hi".into()));
+        assert_eq!(parse_scalar("bare"), Value::Str("bare".into()));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let m = parse_toml("# top\n\na = 1 # trailing\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Str("x # not comment".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let m = parse_toml("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(
+            m["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(
+            m["ys"],
+            Value::Array(vec![Value::Str("a".into()), Value::Str("b".into())])
+        );
+        assert_eq!(m["empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("a = 1\nnot a kv\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err2 = parse_toml("[]\n").unwrap_err();
+        assert_eq!(err2.line, 1);
+    }
+}

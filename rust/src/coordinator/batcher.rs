@@ -1,0 +1,319 @@
+//! Dynamic batcher: size + deadline policy over a bounded queue.
+
+use super::engine::Engine;
+use crate::linalg::Mat;
+use crate::metrics::Metrics;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Largest batch the engine will ever see.
+    pub max_batch: usize,
+    /// Longest a request may wait for co-riders before dispatch.
+    pub max_wait: Duration,
+    /// Queue capacity; submits beyond this are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One queued request.
+pub struct Job {
+    pub input: Vec<f64>,
+    pub resp: SyncSender<Result<Vec<f64>, String>>,
+    pub enqueued: Instant,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// A batcher thread + its submit side.
+pub struct Batcher {
+    tx: SyncSender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batching loop for one engine.
+    pub fn spawn(
+        name: &str,
+        mut engine: Box<dyn Engine>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_cap);
+        let name = name.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("batcher-{name}"))
+            .spawn(move || {
+                loop {
+                    // Block for the first job of the next batch.
+                    let first = match rx.recv() {
+                        Ok(Msg::Job(j)) => j,
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    };
+                    let deadline = first.enqueued + cfg.max_wait;
+                    let mut jobs = vec![first];
+                    let mut stop = false;
+                    // Fill until max_batch or the first job's deadline.
+                    while jobs.len() < cfg.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(Msg::Job(j)) => jobs.push(j),
+                            Ok(Msg::Shutdown) => {
+                                stop = true;
+                                break;
+                            }
+                            Err(_) => break, // deadline or disconnect
+                        }
+                    }
+                    Self::dispatch(&mut *engine, &jobs, &metrics);
+                    if stop {
+                        break;
+                    }
+                }
+                // Drain anything left after shutdown signal.
+                while let Ok(Msg::Job(j)) = rx.try_recv() {
+                    Self::dispatch(&mut *engine, &[j], &metrics);
+                }
+            })
+            .expect("spawn batcher thread");
+        Batcher {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    fn dispatch(engine: &mut dyn Engine, jobs: &[Job], metrics: &Metrics) {
+        metrics.batches.record(jobs.len());
+        for j in jobs {
+            metrics.queue_wait.record(j.enqueued.elapsed());
+        }
+        let dim = engine.input_dim();
+        // Validate per-row input sizes before forming the batch.
+        let mut valid: Vec<&Job> = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            if j.input.len() == dim {
+                valid.push(j);
+            } else {
+                metrics.errors.inc();
+                let _ = j.resp.try_send(Err(format!(
+                    "input dim {} != expected {dim}",
+                    j.input.len()
+                )));
+            }
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let mut x = Mat::zeros(valid.len(), dim);
+        for (r, j) in valid.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(&j.input);
+        }
+        match engine.infer_batch(&x) {
+            Ok(y) => {
+                for (r, j) in valid.iter().enumerate() {
+                    let _ = j.resp.try_send(Ok(y.row(r).to_vec()));
+                }
+            }
+            Err(e) => {
+                metrics.errors.inc();
+                for j in valid {
+                    let _ = j.resp.try_send(Err(format!("{e:#}")));
+                }
+            }
+        }
+    }
+
+    /// Submit one request; returns the response receiver, or an error
+    /// if the queue is full (backpressure) or the batcher is gone.
+    pub fn submit(&self, input: Vec<f64>) -> Result<Receiver<Result<Vec<f64>, String>>> {
+        let (rtx, rrx) = sync_channel(1);
+        let job = Job {
+            input,
+            resp: rtx,
+            enqueued: Instant::now(),
+        };
+        match self.tx.try_send(Msg::Job(job)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher stopped")),
+        }
+    }
+
+    /// Stop the batching thread (drains remaining jobs first).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.try_send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo {
+        dim: usize,
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+    }
+    impl Engine for Echo {
+        fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+        fn output_dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    #[test]
+    fn batches_coalesce() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "t",
+            Box::new(Echo {
+                dim: 2,
+                calls: Arc::clone(&calls),
+            }),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(30),
+                queue_cap: 64,
+            },
+            Arc::clone(&m),
+        );
+        // Submit 8 quickly: they should ride in very few engine calls.
+        let rxs: Vec<_> = (0..8)
+            .map(|i| b.submit(vec![i as f64, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], i as f64);
+        }
+        let n = calls.load(std::sync::atomic::Ordering::SeqCst);
+        assert!(n <= 4, "expected coalescing, got {n} engine calls");
+        b.shutdown();
+    }
+
+    #[test]
+    fn wrong_dim_is_an_error_response() {
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "t",
+            Box::new(Echo {
+                dim: 3,
+                calls: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            }),
+            BatcherConfig::default(),
+            Arc::clone(&m),
+        );
+        let rx = b.submit(vec![1.0]).unwrap();
+        let res = rx.recv().unwrap();
+        assert!(res.is_err());
+        assert_eq!(m.errors.get(), 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // An engine that blocks forever would hang shutdown; instead use
+        // a tiny queue and a slow engine to observe rejection.
+        struct Slow;
+        impl Engine for Slow {
+            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(x.clone())
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn output_dim(&self) -> usize {
+                1
+            }
+        }
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "slow",
+            Box::new(Slow),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_cap: 2,
+            },
+            m,
+        );
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..32 {
+            match b.submit(vec![i as f64]) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "tiny queue + slow engine must reject");
+        // accepted ones still complete
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn deadline_bounds_wait() {
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "t",
+            Box::new(Echo {
+                dim: 1,
+                calls: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            }),
+            BatcherConfig {
+                max_batch: 1000, // never fills
+                max_wait: Duration::from_millis(5),
+                queue_cap: 8,
+            },
+            m,
+        );
+        let t0 = Instant::now();
+        let rx = b.submit(vec![1.0]).unwrap();
+        rx.recv().unwrap().unwrap();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(200),
+            "deadline ignored: {waited:?}"
+        );
+        b.shutdown();
+    }
+}

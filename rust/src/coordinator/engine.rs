@@ -1,0 +1,149 @@
+//! Inference engines behind the batcher: native rust heads (dense /
+//! butterfly) and PJRT-artifact execution.
+
+use crate::linalg::Mat;
+use crate::model::Head;
+use crate::runtime::{RuntimeHandle, Tensor};
+use anyhow::{bail, Result};
+
+/// Anything that can run a batch.
+pub trait Engine: Send {
+    fn infer_batch(&mut self, x: &Mat) -> Result<Mat>;
+    fn input_dim(&self) -> usize;
+    fn output_dim(&self) -> usize;
+}
+
+/// Native rust head (dense or butterfly replacement) — the §5.1
+/// serving comparison object.
+pub struct NativeHeadEngine {
+    head: Head,
+}
+
+impl NativeHeadEngine {
+    pub fn new(head: Head) -> Self {
+        NativeHeadEngine { head }
+    }
+}
+
+impl Engine for NativeHeadEngine {
+    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+        Ok(self.head.forward(x))
+    }
+    fn input_dim(&self) -> usize {
+        self.head.shape().1
+    }
+    fn output_dim(&self) -> usize {
+        self.head.shape().0
+    }
+}
+
+/// PJRT engine: batches flow through an AOT artifact. Fixed parameter
+/// tensors (weights) are bound at construction; only the final input
+/// slot varies per batch.
+///
+/// The artifact's last input must be the data batch `f32[max_batch, d]`;
+/// smaller batches are zero-padded to that shape (XLA executables are
+/// shape-specialised) and the padding rows are dropped from the output.
+pub struct PjrtEngine {
+    runtime: RuntimeHandle,
+    artifact: String,
+    bound: Vec<Tensor>,
+    max_batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    /// Index of the output tensor holding the batch result.
+    out_index: usize,
+}
+
+impl PjrtEngine {
+    /// Bind all non-batch inputs; infer the batch shape from the
+    /// manifest (last input) and the output from `out_index`.
+    pub fn new(
+        runtime: RuntimeHandle,
+        artifact: &str,
+        bound: Vec<Tensor>,
+        out_index: usize,
+    ) -> Result<Self> {
+        let (max_batch, in_dim, out_dim) = {
+            let spec = match runtime.spec(artifact)? {
+                Some(s) => s,
+                None => bail!("artifact `{artifact}` not in manifest"),
+            };
+            if bound.len() + 1 != spec.inputs.len() {
+                bail!(
+                    "artifact `{artifact}` wants {} inputs, {} bound + 1 batch",
+                    spec.inputs.len(),
+                    bound.len()
+                );
+            }
+            let batch_spec = spec.inputs.last().unwrap();
+            if batch_spec.shape.len() != 2 {
+                bail!("batch input must be rank 2, got {:?}", batch_spec.shape);
+            }
+            let out_spec = &spec.outputs[out_index];
+            if out_spec.shape.len() != 2 || out_spec.shape[0] != batch_spec.shape[0] {
+                bail!("output {out_index} shape {:?} incompatible", out_spec.shape);
+            }
+            (batch_spec.shape[0], batch_spec.shape[1], out_spec.shape[1])
+        };
+        Ok(PjrtEngine {
+            runtime,
+            artifact: artifact.to_string(),
+            bound,
+            max_batch,
+            in_dim,
+            out_dim,
+            out_index,
+        })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+        if x.rows() > self.max_batch {
+            bail!(
+                "batch {} exceeds artifact max batch {}",
+                x.rows(),
+                self.max_batch
+            );
+        }
+        // pad to the compiled batch size
+        let mut padded = Mat::zeros(self.max_batch, self.in_dim);
+        for r in 0..x.rows() {
+            padded.row_mut(r).copy_from_slice(x.row(r));
+        }
+        let mut inputs = self.bound.clone();
+        inputs.push(Tensor::from_mat(&padded));
+        let outs = self.runtime.execute(&self.artifact, inputs)?;
+        let full = outs[self.out_index].to_mat()?;
+        // drop padding rows
+        let idx: Vec<usize> = (0..x.rows()).collect();
+        Ok(full.select_rows(&idx))
+    }
+    fn input_dim(&self) -> usize {
+        self.in_dim
+    }
+    fn output_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_head_engine_runs() {
+        let mut rng = Rng::seed_from_u64(230);
+        let mut e = NativeHeadEngine::new(Head::butterfly(32, 16, &mut rng));
+        assert_eq!(e.input_dim(), 32);
+        assert_eq!(e.output_dim(), 16);
+        let x = Mat::gaussian(4, 32, 1.0, &mut rng);
+        let y = e.infer_batch(&x).unwrap();
+        assert_eq!(y.shape(), (4, 16));
+        assert!(y.is_finite());
+    }
+    // PjrtEngine is exercised by rust/tests/integration_runtime.rs and
+    // integration_coordinator.rs (needs real artifacts).
+}

@@ -1,0 +1,171 @@
+//! L3 coordinator: the serving system that demonstrates the paper's
+//! deployment claim (§5.1 / Figures 12–13 — faster prediction with the
+//! butterfly replacement at matched accuracy).
+//!
+//! Architecture (std-only; no async runtime exists in the offline
+//! registry, so the event loop is explicit threads + bounded channels):
+//!
+//! ```text
+//!  TCP clients ── server.rs ──► router (per-variant bounded queue)
+//!                                  │ backpressure: reject when full
+//!                                  ▼
+//!                          dynamic batcher (per variant)
+//!                    max_batch / max_wait_us deadline policy
+//!                                  ▼
+//!                            engine.infer_batch
+//!            native rust (dense | butterfly)  or  PJRT artifact
+//!                                  ▼
+//!                        per-request responses + metrics
+//! ```
+//!
+//! Invariants (checked by `rust/tests/prop_coordinator.rs`):
+//! * conservation — every accepted request is answered exactly once;
+//! * batch bound — no formed batch exceeds `max_batch`;
+//! * deadline — a request waits at most `max_wait` before its batch is
+//!   formed (modulo engine latency);
+//! * backpressure — once a queue holds `queue_cap` entries, submits
+//!   are rejected, never silently dropped.
+
+mod batcher;
+mod engine;
+mod protocol;
+mod server;
+
+pub use batcher::{Batcher, BatcherConfig, Job};
+pub use engine::{Engine, NativeHeadEngine, PjrtEngine};
+pub use protocol::{parse_request, Request, Response};
+pub use server::{serve, ServerHandle};
+
+use crate::metrics::Metrics;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A running coordinator: named variants, each with its own batcher.
+pub struct Coordinator {
+    variants: HashMap<String, Batcher>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Coordinator {
+            variants: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Register a model variant behind a dynamic batcher.
+    pub fn register(&mut self, name: &str, engine: Box<dyn Engine>, cfg: BatcherConfig) {
+        let b = Batcher::spawn(name, engine, cfg, Arc::clone(&self.metrics));
+        self.variants.insert(name.to_string(), b);
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Submit one request row; blocks until the response arrives.
+    /// Returns `Err` on unknown variant or queue-full backpressure.
+    pub fn infer(&self, variant: &str, input: Vec<f64>) -> Result<Vec<f64>> {
+        self.metrics.requests.inc();
+        let b = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant `{variant}`"))?;
+        let rx = b.submit(input).map_err(|e| {
+            self.metrics.rejected.inc();
+            e
+        })?;
+        let started = std::time::Instant::now();
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("variant `{variant}` worker gone"))?
+            .map_err(|e| anyhow!("inference failed: {e}"))?;
+        self.metrics.latency.record(started.elapsed());
+        self.metrics.responses.inc();
+        Ok(out)
+    }
+
+    /// Graceful shutdown: drain queues, join batcher threads.
+    pub fn shutdown(self) {
+        for (_, b) in self.variants {
+            b.shutdown();
+        }
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    /// Engine that doubles its input (deterministic, latency-free).
+    struct Doubler;
+    impl Engine for Doubler {
+        fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+            Ok(x.map(|v| v * 2.0))
+        }
+        fn input_dim(&self) -> usize {
+            4
+        }
+        fn output_dim(&self) -> usize {
+            4
+        }
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let mut c = Coordinator::new();
+        c.register("d", Box::new(Doubler), cfg());
+        let out = c.infer("d", vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(c.metrics.responses.get(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let c = Coordinator::new();
+        assert!(c.infer("nope", vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered() {
+        let mut c = Coordinator::new();
+        c.register("d", Box::new(Doubler), cfg());
+        let c = std::sync::Arc::new(c);
+        let mut handles = Vec::new();
+        for t in 0..16 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let v = t as f64;
+                let out = c.infer("d", vec![v, v, v, v]).unwrap();
+                assert_eq!(out, vec![2.0 * v; 4]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics.responses.get(), 16);
+        // batching actually happened (mean batch ≥ 1, total batches ≤ 16)
+        let (nb, _, _) = c.metrics.batches.summary();
+        assert!(nb >= 1 && nb <= 16);
+    }
+}

@@ -1,0 +1,123 @@
+//! Wire protocol: newline-delimited text (debuggable with `nc`).
+//!
+//! ```text
+//! client → server:
+//!   INFER <variant> <v0> <v1> ... <vd>\n
+//!   METRICS\n
+//!   VARIANTS\n
+//!   PING\n
+//! server → client:
+//!   OK <y0> ... <yk>\n            (INFER)
+//!   ERR <message>\n
+//!   PONG\n
+//!   <multi-line text>\nEND\n      (METRICS / VARIANTS)
+//! ```
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Infer { variant: String, input: Vec<f64> },
+    Metrics,
+    Variants,
+    Ping,
+}
+
+/// A server response, ready to serialise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok(Vec<f64>),
+    Err(String),
+    Pong,
+    Text(String),
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut it = line.trim().split_whitespace();
+    match it.next() {
+        Some("INFER") => {
+            let variant = it
+                .next()
+                .ok_or_else(|| "INFER needs a variant".to_string())?
+                .to_string();
+            let input: Result<Vec<f64>, String> = it
+                .map(|t| t.parse::<f64>().map_err(|_| format!("bad number `{t}`")))
+                .collect();
+            let input = input?;
+            if input.is_empty() {
+                return Err("INFER needs at least one value".to_string());
+            }
+            Ok(Request::Infer { variant, input })
+        }
+        Some("METRICS") => Ok(Request::Metrics),
+        Some("VARIANTS") => Ok(Request::Variants),
+        Some("PING") => Ok(Request::Ping),
+        Some(other) => Err(format!("unknown command `{other}`")),
+        None => Err("empty request".to_string()),
+    }
+}
+
+impl Response {
+    /// Serialise (always ends with exactly one newline-terminated
+    /// final line).
+    pub fn serialize(&self) -> String {
+        match self {
+            Response::Ok(vals) => {
+                let mut s = String::from("OK");
+                for v in vals {
+                    s.push(' ');
+                    s.push_str(&format!("{v}"));
+                }
+                s.push('\n');
+                s
+            }
+            Response::Err(msg) => format!("ERR {}\n", msg.replace('\n', " ")),
+            Response::Pong => "PONG\n".to_string(),
+            Response::Text(t) => format!("{t}\nEND\n"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_infer() {
+        let r = parse_request("INFER bfly 1.5 -2 3e-2").unwrap();
+        assert_eq!(
+            r,
+            Request::Infer {
+                variant: "bfly".into(),
+                input: vec![1.5, -2.0, 0.03]
+            }
+        );
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("INFER").is_err());
+        assert!(parse_request("INFER v").is_err());
+        assert!(parse_request("INFER v 1 x").is_err());
+        assert!(parse_request("WAT 1 2").is_err());
+    }
+
+    #[test]
+    fn parse_controls() {
+        assert_eq!(parse_request("PING").unwrap(), Request::Ping);
+        assert_eq!(parse_request(" METRICS ").unwrap(), Request::Metrics);
+        assert_eq!(parse_request("VARIANTS").unwrap(), Request::Variants);
+    }
+
+    #[test]
+    fn serialize_roundtrip_shapes() {
+        assert_eq!(Response::Ok(vec![1.0, 2.5]).serialize(), "OK 1 2.5\n");
+        assert_eq!(Response::Pong.serialize(), "PONG\n");
+        assert_eq!(
+            Response::Err("bad\nthing".into()).serialize(),
+            "ERR bad thing\n"
+        );
+        assert!(Response::Text("a\nb".into()).serialize().ends_with("END\n"));
+    }
+}

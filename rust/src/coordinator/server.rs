@@ -1,0 +1,174 @@
+//! TCP front-end: one OS thread per connection (requests within a
+//! connection pipeline through the shared batcher, so cross-client
+//! batching still happens).
+
+use super::protocol::{parse_request, Request, Response};
+use super::Coordinator;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running server; dropping does not stop it — call
+/// [`ServerHandle::stop`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and join the accept loop.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve a coordinator on `addr` (use port 0 for an ephemeral port).
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let accept_thread = std::thread::Builder::new()
+        .name("coordinator-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let c = Arc::clone(&coordinator);
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &c);
+                        });
+                    }
+                    Err(_) => continue,
+                }
+            }
+        })?;
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+    })
+}
+
+fn handle_conn(stream: TcpStream, c: &Coordinator) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Err(e) => Response::Err(e),
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Metrics) => Response::Text(c.metrics.snapshot()),
+            Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
+            Ok(Request::Infer { variant, input }) => match c.infer(&variant, input) {
+                Ok(out) => Response::Ok(out),
+                Err(e) => Response::Err(format!("{e:#}")),
+            },
+        };
+        writer.write_all(resp.serialize().as_bytes())?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, Engine};
+    use crate::linalg::Mat;
+    use std::io::BufRead;
+
+    struct Neg;
+    impl Engine for Neg {
+        fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+            Ok(x.map(|v| -v))
+        }
+        fn input_dim(&self) -> usize {
+            2
+        }
+        fn output_dim(&self) -> usize {
+            2
+        }
+    }
+
+    fn start() -> (Arc<Coordinator>, ServerHandle) {
+        let mut c = Coordinator::new();
+        c.register(
+            "neg",
+            Box::new(Neg),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 32,
+            },
+        );
+        let c = Arc::new(c);
+        let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        (c, h)
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut out = String::new();
+        r.read_line(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn ping_and_infer_over_tcp() {
+        let (_c, h) = start();
+        assert_eq!(roundtrip(h.addr, "PING"), "PONG\n");
+        let out = roundtrip(h.addr, "INFER neg 1.5 -2");
+        assert_eq!(out, "OK -1.5 2\n");
+        let err = roundtrip(h.addr, "INFER missing 1 2");
+        assert!(err.starts_with("ERR"));
+        h.stop();
+    }
+
+    #[test]
+    fn metrics_and_variants_endpoints() {
+        let (_c, h) = start();
+        let _ = roundtrip(h.addr, "INFER neg 1 2");
+        let m = roundtrip(h.addr, "METRICS");
+        assert!(m.contains("requests="), "{m}");
+        let v = roundtrip(h.addr, "VARIANTS");
+        assert!(v.contains("neg"));
+        h.stop();
+    }
+
+    #[test]
+    fn malformed_lines_get_err_not_disconnect() {
+        let (_c, h) = start();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"GARBAGE\nPING\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut l1 = String::new();
+        r.read_line(&mut l1).unwrap();
+        assert!(l1.starts_with("ERR"));
+        let mut l2 = String::new();
+        r.read_line(&mut l2).unwrap();
+        assert_eq!(l2, "PONG\n");
+        h.stop();
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic classification workloads for the §5.1 proxies
+//! (CIFAR-10-like, CIFAR-100-like, ImageNet-like).
+//!
+//! Class-conditional data on a low-dimensional manifold embedded in
+//! feature space: each class owns a prototype + a class-specific
+//! subspace; samples are prototype + within-class variation + noise,
+//! pushed through a fixed random nonlinearity so the task is not
+//! linearly trivial. What the §5.1 experiments measure — the behaviour
+//! of the final dense vs butterfly classification layer — depends on
+//! the feature dimension, class count and separability, all controlled
+//! here.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A generated classification dataset.
+pub struct ClassifData {
+    /// `samples × dim` features.
+    pub x: Mat,
+    /// class label per sample.
+    pub y: Vec<usize>,
+    pub classes: usize,
+}
+
+/// Options for the generator.
+#[derive(Clone, Debug)]
+pub struct ClassifOpts {
+    pub dim: usize,
+    pub classes: usize,
+    pub per_class: usize,
+    /// Within-class subspace dimension.
+    pub intrinsic: usize,
+    /// Noise level; larger = harder task.
+    pub noise: f64,
+}
+
+impl Default for ClassifOpts {
+    fn default() -> Self {
+        ClassifOpts {
+            dim: 512,
+            classes: 10,
+            per_class: 64,
+            intrinsic: 8,
+            noise: 0.3,
+        }
+    }
+}
+
+/// Generate a dataset (deterministic per seed). Samples are shuffled.
+pub fn generate(opts: &ClassifOpts, rng: &mut Rng) -> ClassifData {
+    let d = opts.dim;
+    // fixed random nonlinear lift: z = tanh(P·raw) with raw ∈ R^{d/2}
+    let raw_dim = (d / 2).max(opts.intrinsic + 1);
+    let lift = Mat::gaussian(d, raw_dim, 1.0 / (raw_dim as f64).sqrt(), rng);
+    let mut x = Mat::zeros(opts.classes * opts.per_class, d);
+    let mut y = Vec::with_capacity(opts.classes * opts.per_class);
+    let mut idx = 0usize;
+    for c in 0..opts.classes {
+        let proto = Mat::gaussian(raw_dim, 1, 1.0, rng);
+        let subspace = Mat::gaussian(raw_dim, opts.intrinsic, 0.5, rng);
+        for _ in 0..opts.per_class {
+            let coef = Mat::gaussian(opts.intrinsic, 1, 1.0, rng);
+            let mut raw = proto.clone();
+            raw.add_scaled(&subspace.matmul(&coef), 1.0);
+            raw.add_scaled(&Mat::gaussian(raw_dim, 1, opts.noise, rng), 1.0);
+            let lifted = lift.matmul(&raw); // d×1
+            let row = x.row_mut(idx);
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = lifted[(i, 0)].tanh();
+            }
+            y.push(c);
+            idx += 1;
+        }
+    }
+    // shuffle
+    let perm = rng.permutation(y.len());
+    let x = x.select_rows(&perm);
+    let y: Vec<usize> = perm.iter().map(|&i| y[i]).collect();
+    ClassifData {
+        x,
+        y,
+        classes: opts.classes,
+    }
+}
+
+/// Split into (train, test) by sample count.
+pub fn split(data: &ClassifData, train: usize) -> (ClassifData, ClassifData) {
+    let n = data.y.len();
+    assert!(train < n);
+    let tr_idx: Vec<usize> = (0..train).collect();
+    let te_idx: Vec<usize> = (train..n).collect();
+    (
+        ClassifData {
+            x: data.x.select_rows(&tr_idx),
+            y: data.y[..train].to_vec(),
+            classes: data.classes,
+        },
+        ClassifData {
+            x: data.x.select_rows(&te_idx),
+            y: data.y[train..].to_vec(),
+            classes: data.classes,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut rng = Rng::seed_from_u64(170);
+        let opts = ClassifOpts {
+            dim: 64,
+            classes: 5,
+            per_class: 10,
+            ..Default::default()
+        };
+        let d = generate(&opts, &mut rng);
+        assert_eq!(d.x.shape(), (50, 64));
+        assert_eq!(d.y.len(), 50);
+        for c in 0..5 {
+            assert_eq!(d.y.iter().filter(|&&v| v == c).count(), 10);
+        }
+        assert!(d.x.data().iter().all(|v| v.abs() <= 1.0), "tanh range");
+    }
+
+    #[test]
+    fn classes_are_separable_by_centroid() {
+        // nearest-centroid on the generated features should beat chance
+        // comfortably — otherwise the §5.1 proxies can't show accuracy
+        // differences at all.
+        let mut rng = Rng::seed_from_u64(171);
+        let opts = ClassifOpts {
+            dim: 128,
+            classes: 4,
+            per_class: 60,
+            intrinsic: 4,
+            noise: 0.2,
+        };
+        let d = generate(&opts, &mut rng);
+        let (tr, te) = split(&d, 160);
+        // centroids
+        let mut centroids = Mat::zeros(4, 128);
+        let mut counts = [0usize; 4];
+        for (i, &c) in tr.y.iter().enumerate() {
+            counts[c] += 1;
+            for j in 0..128 {
+                centroids[(c, j)] += tr.x[(i, j)];
+            }
+        }
+        for c in 0..4 {
+            for j in 0..128 {
+                centroids[(c, j)] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for (i, &label) in te.y.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..4 {
+                let dist: f64 = (0..128)
+                    .map(|j| (te.x[(i, j)] - centroids[(c, j)]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.y.len() as f64;
+        assert!(acc > 0.6, "centroid accuracy {acc} too low");
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let mut rng = Rng::seed_from_u64(172);
+        let d = generate(
+            &ClassifOpts {
+                dim: 16,
+                classes: 2,
+                per_class: 8,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = split(&d, 10);
+        assert_eq!(tr.y.len() + te.y.len(), 16);
+    }
+}

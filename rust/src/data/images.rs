@@ -1,0 +1,245 @@
+//! Procedural image-like matrices: stand-ins for MNIST, Olivetti and
+//! HS-SOD with matched shapes and spectral character (power-law
+//! singular-value decay; approximate low-rankness). See DESIGN.md §4.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Render one digit-like 28×28 stroke image: 2–4 random quadratic
+/// strokes rasterised with a soft (Gaussian) pen, mimicking MNIST's
+/// sparse-ink statistics.
+fn digit_image(rng: &mut Rng) -> [[f64; 28]; 28] {
+    let mut img = [[0.0f64; 28]; 28];
+    let strokes = 2 + rng.below(3);
+    for _ in 0..strokes {
+        // quadratic Bézier with random control points in [4, 24)²
+        let p: Vec<(f64, f64)> = (0..3)
+            .map(|_| (4.0 + rng.f64() * 20.0, 4.0 + rng.f64() * 20.0))
+            .collect();
+        let steps = 40;
+        for s in 0..=steps {
+            let t = s as f64 / steps as f64;
+            let u = 1.0 - t;
+            let x = u * u * p[0].0 + 2.0 * u * t * p[1].0 + t * t * p[2].0;
+            let y = u * u * p[0].1 + 2.0 * u * t * p[1].1 + t * t * p[2].1;
+            // soft pen of radius ~1.2px
+            let (xi, yi) = (x as isize, y as isize);
+            for dy in -2..=2isize {
+                for dx in -2..=2isize {
+                    let (cx, cy) = (xi + dx, yi + dy);
+                    if (0..28).contains(&cx) && (0..28).contains(&cy) {
+                        let d2 = (x - cx as f64).powi(2) + (y - cy as f64).powi(2);
+                        let v = (-d2 / 1.4).exp();
+                        let cell = &mut img[cy as usize][cx as usize];
+                        *cell = (*cell + v).min(1.0);
+                    }
+                }
+            }
+        }
+    }
+    img
+}
+
+/// MNIST-like data matrix (§5.2 Table 2: 1024×1024): each **row** is a
+/// digit-like 28×28 image padded to 32×32 (pad cells ~ N(0, 0.01), as
+/// the paper does) and vectorised column-first.
+pub fn mnist_like(rows: usize, rng: &mut Rng) -> Mat {
+    let mut out = Mat::zeros(rows, 1024);
+    for r in 0..rows {
+        let img = digit_image(rng);
+        // 32×32 padded, column-first ordering
+        let row = out.row_mut(r);
+        for c in 0..32 {
+            for rr in 0..32 {
+                let v = if (2..30).contains(&rr) && (2..30).contains(&c) {
+                    img[rr - 2][c - 2]
+                } else {
+                    rng.gaussian() * 0.1 // "numbers close to zero", var 0.01
+                };
+                row[c * 32 + rr] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Smooth random field on `h×w` built from `modes` low-frequency 2-D
+/// cosine modes with `1/(1+f)^decay` amplitudes — the shared machinery
+/// for face-like and hyperspectral-like data.
+fn smooth_field(h: usize, w: usize, modes: usize, decay: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut img = vec![0.0; h * w];
+    for _ in 0..modes {
+        let fy = rng.below(6) as f64;
+        let fx = rng.below(6) as f64;
+        let phase_y = rng.f64() * std::f64::consts::TAU;
+        let phase_x = rng.f64() * std::f64::consts::TAU;
+        let amp = rng.gaussian() / (1.0 + fx + fy).powf(decay);
+        for y in 0..h {
+            for x in 0..w {
+                img[y * w + x] += amp
+                    * (std::f64::consts::TAU * fy * y as f64 / h as f64 + phase_y).cos()
+                    * (std::f64::consts::TAU * fx * x as f64 / w as f64 + phase_x).cos();
+            }
+        }
+    }
+    img
+}
+
+/// Olivetti-like face matrix (Table 2: 1024×4096): each row a 64×64
+/// "face" = shared mean + a small number of eigenface-like smooth
+/// components with decaying coefficients + pixel noise.
+pub fn olivetti_like(rows: usize, rng: &mut Rng) -> Mat {
+    let n_components = 24;
+    let mean = smooth_field(64, 64, 20, 1.2, rng);
+    let comps: Vec<Vec<f64>> = (0..n_components)
+        .map(|_| smooth_field(64, 64, 12, 1.0, rng))
+        .collect();
+    let mut out = Mat::zeros(rows, 4096);
+    for r in 0..rows {
+        let row = out.row_mut(r);
+        // coefficient decay gives the eigenface spectrum
+        let coefs: Vec<f64> = (0..n_components)
+            .map(|j| rng.gaussian() / (1.0 + j as f64).sqrt())
+            .collect();
+        for i in 0..4096 {
+            let mut v = mean[i];
+            for (j, comp) in comps.iter().enumerate() {
+                v += coefs[j] * comp[i];
+            }
+            row[i] = v + rng.gaussian() * 0.02;
+        }
+    }
+    out
+}
+
+/// HS-SOD-like hyperspectral matrix (Table 2: 1024×768): rows are
+/// spectral bands, columns are pixels; `X = A·S + noise` with a few
+/// smooth spectral endmembers `A` and smooth spatial abundances `S` —
+/// the standard linear mixing model hyperspectral data follows.
+pub fn hyperspectral_like(bands: usize, pixels: usize, rng: &mut Rng) -> Mat {
+    let endmembers = 12;
+    // smooth spectral signatures (1-D smooth curves over bands)
+    let mut a = Mat::zeros(bands, endmembers);
+    for e in 0..endmembers {
+        let curve = smooth_field(bands, 1, 10, 1.3, rng);
+        let off = rng.f64();
+        for b in 0..bands {
+            a[(b, e)] = curve[b] + off; // keep mostly one-signed
+        }
+    }
+    // smooth spatial abundances (treat pixel index as 1-D scene line)
+    let mut s = Mat::zeros(endmembers, pixels);
+    for e in 0..endmembers {
+        let field = smooth_field(pixels, 1, 14, 1.1, rng);
+        for p in 0..pixels {
+            s[(e, p)] = field[p].abs();
+        }
+    }
+    let mut x = a.matmul(&s);
+    // Heavy spectral tail: real HS-SOD scenes keep energy beyond the
+    // endmember subspace (sensor noise, nonlinear mixing). A 1/√i-decay
+    // random tail makes the rank-k sketching problem non-trivial for
+    // k < ℓ (the §6 operating regime) instead of collapsing to ~0 error.
+    let tail_rank = (bands.min(pixels) / 2).max(1);
+    let scale = x.fro() / (bands as f64 * pixels as f64).sqrt();
+    for t in 0..tail_rank {
+        let u = Mat::gaussian(bands, 1, 1.0, rng);
+        let v = Mat::gaussian(1, pixels, 1.0, rng);
+        let amp = 0.12 * scale / (1.0 + t as f64).sqrt();
+        let mut uv = u.matmul(&v);
+        uv.scale(amp / (bands as f64).sqrt());
+        x.add_scaled(&uv, 1.0);
+    }
+    x.add_scaled(&Mat::gaussian(bands, pixels, 0.01, rng), 1.0);
+    x
+}
+
+/// ImageNet-like single image matrix for the §5.3 two-phase experiment:
+/// a natural-image proxy (smooth field + edges) of shape `h×w`.
+pub fn natural_image_like(h: usize, w: usize, rng: &mut Rng) -> Mat {
+    let smooth = smooth_field(h, w, 40, 1.5, rng);
+    let mut x = Mat::zeros(h, w);
+    for r in 0..h {
+        for c in 0..w {
+            x[(r, c)] = smooth[r * w + c];
+        }
+    }
+    // add a few sharp rectangular "objects" (edges break pure smoothness)
+    for _ in 0..6 {
+        let r0 = rng.below(h.saturating_sub(8));
+        let c0 = rng.below(w.saturating_sub(8));
+        let rh = 4 + rng.below(h / 4);
+        let cw = 4 + rng.below(w / 4);
+        let v = rng.gaussian() * 0.5;
+        for r in r0..(r0 + rh).min(h) {
+            for c in c0..(c0 + cw).min(w) {
+                x[(r, c)] += v;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_thin;
+
+    /// Spectral decay sanity: leading 10% of singular values should
+    /// carry most of the energy (the property the AE/sketch experiments
+    /// exploit).
+    fn energy_fraction(x: &Mat, frac: f64) -> f64 {
+        let s = svd_thin(x).s;
+        let total: f64 = s.iter().map(|v| v * v).sum();
+        let kk = ((s.len() as f64) * frac).ceil() as usize;
+        let head: f64 = s.iter().take(kk).map(|v| v * v).sum();
+        head / total
+    }
+
+    #[test]
+    fn mnist_like_shape_and_decay() {
+        let mut rng = Rng::seed_from_u64(150);
+        let x = mnist_like(96, &mut rng);
+        assert_eq!(x.shape(), (96, 1024));
+        assert!(x.is_finite());
+        assert!(
+            energy_fraction(&x, 0.25) > 0.6,
+            "digit data should compress"
+        );
+    }
+
+    #[test]
+    fn olivetti_like_strongly_lowrank() {
+        let mut rng = Rng::seed_from_u64(151);
+        let x = olivetti_like(48, &mut rng);
+        assert_eq!(x.shape(), (48, 4096));
+        assert!(energy_fraction(&x, 0.25) > 0.9, "eigenface-like spectrum");
+    }
+
+    #[test]
+    fn hyperspectral_like_lowrank_plus_noise() {
+        let mut rng = Rng::seed_from_u64(152);
+        let x = hyperspectral_like(96, 72, &mut rng);
+        assert_eq!(x.shape(), (96, 72));
+        // linear mixing with 12 endmembers → rank ≈ 12 ≪ min(96,72)
+        let s = svd_thin(&x).s;
+        let head: f64 = s.iter().take(12).map(|v| v * v).sum();
+        let total: f64 = s.iter().map(|v| v * v).sum();
+        assert!(head / total > 0.95);
+    }
+
+    #[test]
+    fn natural_image_energy_concentrated() {
+        let mut rng = Rng::seed_from_u64(153);
+        let x = natural_image_like(64, 48, &mut rng);
+        assert_eq!(x.shape(), (64, 48));
+        assert!(energy_fraction(&x, 0.3) > 0.7);
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let a = mnist_like(4, &mut Rng::seed_from_u64(9));
+        let b = mnist_like(4, &mut Rng::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,206 @@
+//! Synthetic sequence-tagging corpora for the §5.1 NLP proxies
+//! (CoNLL-03-like NER and PTB-like POS tagging).
+//!
+//! Tags follow a first-order Markov chain (NER-style: sticky `O` state,
+//! short entity spans); token emissions are class-conditional Gaussians
+//! in embedding space — the structure a Flair-style tagger's final
+//! projection layer actually consumes.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A tagging corpus: flattened tokens with sentence boundaries.
+pub struct TaggingData {
+    /// `tokens × dim` embedding features.
+    pub x: Mat,
+    /// gold tag per token.
+    pub y: Vec<usize>,
+    /// sentence start offsets (for span-level F1).
+    pub sentence_starts: Vec<usize>,
+    pub tags: usize,
+    /// index of the "outside"/O tag (majority class).
+    pub outside_tag: usize,
+}
+
+/// Options.
+#[derive(Clone, Debug)]
+pub struct TaggingOpts {
+    pub dim: usize,
+    pub tags: usize,
+    pub sentences: usize,
+    pub mean_len: usize,
+    /// P(stay in O); higher = sparser entities (NER-like ≈ 0.8,
+    /// POS-like ≈ 0 with uniform transitions).
+    pub outside_stickiness: f64,
+    pub noise: f64,
+}
+
+impl Default for TaggingOpts {
+    fn default() -> Self {
+        TaggingOpts {
+            dim: 256,
+            tags: 9, // CoNLL-03 BIO tag count
+            sentences: 200,
+            mean_len: 12,
+            outside_stickiness: 0.8,
+            noise: 0.4,
+        }
+    }
+}
+
+/// Generate a train/test pair sharing the same emission prototypes
+/// (the tagging analogue of an i.i.d. split — separate `generate`
+/// calls would draw *different* prototype sets and make the test set
+/// a different task).
+pub fn generate_split(opts: &TaggingOpts, rng: &mut Rng) -> (TaggingData, TaggingData) {
+    let protos = Mat::gaussian(opts.tags, opts.dim, 1.0, rng);
+    let train = generate_with(opts, &protos, rng);
+    let test = generate_with(opts, &protos, rng);
+    (train, test)
+}
+
+/// Generate a corpus (fresh prototypes).
+pub fn generate(opts: &TaggingOpts, rng: &mut Rng) -> TaggingData {
+    let protos = Mat::gaussian(opts.tags, opts.dim, 1.0, rng);
+    generate_with(opts, &protos, rng)
+}
+
+/// Generate a corpus from explicit emission prototypes.
+pub fn generate_with(opts: &TaggingOpts, protos: &Mat, rng: &mut Rng) -> TaggingData {
+    let mut xs: Vec<f64> = Vec::new();
+    let mut y = Vec::new();
+    let mut sentence_starts = Vec::new();
+    for _ in 0..opts.sentences {
+        sentence_starts.push(y.len());
+        let len = (opts.mean_len / 2).max(1) + rng.below(opts.mean_len);
+        let mut tag = 0usize; // start outside
+        for _ in 0..len {
+            // transition
+            tag = if tag == 0 {
+                if rng.bernoulli(opts.outside_stickiness) {
+                    0
+                } else {
+                    1 + rng.below(opts.tags - 1)
+                }
+            } else {
+                // entity continues with p=0.5, else back to O
+                if rng.bernoulli(0.5) {
+                    tag
+                } else {
+                    0
+                }
+            };
+            // emission
+            for j in 0..opts.dim {
+                xs.push(protos[(tag, j)] + rng.gaussian() * opts.noise);
+            }
+            y.push(tag);
+        }
+    }
+    let tokens = y.len();
+    TaggingData {
+        x: Mat::from_vec(tokens, opts.dim, xs),
+        y,
+        sentence_starts,
+        tags: opts.tags,
+        outside_tag: 0,
+    }
+}
+
+/// Entity-level micro-F1 (CoNLL convention): an entity is a maximal
+/// run of a single non-O tag; predicted entities must match span and
+/// tag exactly.
+pub fn span_f1(gold: &[usize], pred: &[usize], outside: usize) -> f64 {
+    fn spans(tags: &[usize], outside: usize) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < tags.len() {
+            if tags[i] != outside {
+                let t = tags[i];
+                let start = i;
+                while i < tags.len() && tags[i] == t {
+                    i += 1;
+                }
+                out.push((start, i, t));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+    let g = spans(gold, outside);
+    let p = spans(pred, outside);
+    if g.is_empty() && p.is_empty() {
+        return 1.0;
+    }
+    let gset: std::collections::HashSet<_> = g.iter().collect();
+    let tp = p.iter().filter(|s| gset.contains(s)).count() as f64;
+    let precision = if p.is_empty() {
+        0.0
+    } else {
+        tp / p.len() as f64
+    };
+    let recall = if g.is_empty() {
+        0.0
+    } else {
+        tp / g.len() as f64
+    };
+    if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    }
+}
+
+/// Token-level accuracy (POS-style metric).
+pub fn token_accuracy(gold: &[usize], pred: &[usize]) -> f64 {
+    assert_eq!(gold.len(), pred.len());
+    let correct = gold.iter().zip(pred.iter()).filter(|(a, b)| a == b).count();
+    correct as f64 / gold.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shape_and_o_majority() {
+        let mut rng = Rng::seed_from_u64(180);
+        let d = generate(&TaggingOpts::default(), &mut rng);
+        assert_eq!(d.x.rows(), d.y.len());
+        assert_eq!(d.x.cols(), 256);
+        let o_frac = d.y.iter().filter(|&&t| t == d.outside_tag).count() as f64 / d.y.len() as f64;
+        assert!(
+            o_frac > 0.5,
+            "O should dominate NER-like data, got {o_frac}"
+        );
+        assert!(!d.sentence_starts.is_empty());
+    }
+
+    #[test]
+    fn f1_exact_match_is_one() {
+        let gold = vec![0, 1, 1, 0, 2, 0];
+        assert!((span_f1(&gold, &gold, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_half_match() {
+        let gold = vec![0, 1, 1, 0, 2, 0];
+        let pred = vec![0, 1, 1, 0, 0, 0]; // finds 1 of 2 entities, no FP
+        let f1 = span_f1(&gold, &pred, 0);
+        // precision 1, recall 0.5 → F1 = 2/3
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_span_boundary_must_match() {
+        let gold = vec![0, 1, 1, 0];
+        let pred = vec![0, 1, 0, 0]; // wrong span end
+        assert_eq!(span_f1(&gold, &pred, 0), 0.0);
+    }
+
+    #[test]
+    fn token_accuracy_counts() {
+        assert!((token_accuracy(&[1, 2, 3], &[1, 0, 3]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

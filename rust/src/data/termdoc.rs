@@ -1,0 +1,85 @@
+//! Tech-like sparse term–document matrices (§6, Table 3).
+//!
+//! The TechTC dataset has very tall, very sparse non-negative matrices
+//! (on average 25,389 effective rows × 195 columns). We generate a
+//! topic-model equivalent: Zipf-distributed word marginals, a handful
+//! of topics per document, multinomial-style counts — which reproduces
+//! the heavy-tailed spectrum the sketch experiments see.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// One synthetic term–document matrix: `n_terms × n_docs`, sparse,
+/// non-negative, `topics` latent topics.
+pub fn techlike(n_terms: usize, n_docs: usize, topics: usize, rng: &mut Rng) -> Mat {
+    // Topic–word distributions: Zipf marginal × random topical boost.
+    // φ_t(w) ∝ (1/(w+10)) · boost_t(w) with sparse boosts.
+    let mut phi = Mat::zeros(topics, n_terms);
+    for t in 0..topics {
+        for w in 0..n_terms {
+            let zipf = 1.0 / (w as f64 + 10.0);
+            phi[(t, w)] = zipf * rng.f64();
+        }
+        // topical head words: a few strongly boosted terms per topic
+        for _ in 0..(n_terms / 50).max(4) {
+            let w = rng.below(n_terms);
+            phi[(t, w)] += 0.2 * rng.f64();
+        }
+        // normalise
+        let s: f64 = phi.row(t).iter().sum();
+        for w in 0..n_terms {
+            phi[(t, w)] /= s;
+        }
+    }
+    let mut x = Mat::zeros(n_terms, n_docs);
+    for d in 0..n_docs {
+        // 1–3 active topics per document
+        let n_active = 1 + rng.below(3);
+        let active: Vec<usize> = (0..n_active).map(|_| rng.below(topics)).collect();
+        let doc_len = 80 + rng.below(240);
+        for _ in 0..doc_len {
+            let t = active[rng.below(active.len())];
+            // inverse-CDF sample from φ_t (linear scan amortised by
+            // early exit on the Zipf head)
+            let u = rng.f64();
+            let mut acc = 0.0;
+            let mut w_pick = n_terms - 1;
+            for w in 0..n_terms {
+                acc += phi[(t, w)];
+                if acc >= u {
+                    w_pick = w;
+                    break;
+                }
+            }
+            x[(w_pick, d)] += 1.0;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_nonnegative_and_shaped() {
+        let mut rng = Rng::seed_from_u64(160);
+        let x = techlike(512, 60, 8, &mut rng);
+        assert_eq!(x.shape(), (512, 60));
+        assert!(x.data().iter().all(|&v| v >= 0.0));
+        let nnz = x.data().iter().filter(|&&v| v > 0.0).count();
+        let frac = nnz as f64 / (512.0 * 60.0);
+        assert!(frac < 0.5, "should be sparse, got {frac}");
+        assert!(nnz > 60, "but not empty");
+    }
+
+    #[test]
+    fn topic_structure_gives_lowrank_head() {
+        let mut rng = Rng::seed_from_u64(161);
+        let x = techlike(256, 50, 6, &mut rng);
+        let s = crate::linalg::svd_thin(&x).s;
+        let head: f64 = s.iter().take(10).map(|v| v * v).sum();
+        let total: f64 = s.iter().map(|v| v * v).sum();
+        assert!(head / total > 0.5, "topical head energy {}", head / total);
+    }
+}

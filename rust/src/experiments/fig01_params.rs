@@ -1,0 +1,118 @@
+//! Figures 1 & 10: parameter counts — dense final layer vs the §3.2
+//! butterfly replacement, for every (dataset, model) pair of Table 1.
+//!
+//! The replaced layer's dimensions follow the published architectures
+//! (dims not a power of two use the paper's footnote-4 rule: embed in
+//! the next power of two). Backbone totals are the published model
+//! sizes, used for the Figure-10 whole-model comparison.
+
+use super::ExpContext;
+use crate::model::ReplacementLayer;
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// (label, n1, n2, backbone params) — the Table-1 architectures.
+/// `n1×n2` is the dense layer §5.1 replaces (final linear layer).
+pub const ARCHS: &[(&str, usize, usize, usize)] = &[
+    ("cifar10-efficientnet", 1280, 512, 5_300_000),
+    ("cifar10-preactresnet18", 512, 512, 11_200_000),
+    ("cifar100-seresnet152", 2048, 1024, 66_800_000),
+    ("imagenet-senet154", 2048, 1024, 115_000_000),
+    ("conll03en-flair-tagger", 4096, 2048, 380_000_000),
+    ("conll03de-flair-tagger", 4096, 2048, 380_000_000),
+    ("ptb-pos-flair-tagger", 2048, 1024, 95_000_000),
+];
+
+fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Parameter counts for one architecture.
+pub struct ParamRow {
+    pub label: String,
+    pub dense: usize,
+    pub butterfly: usize,
+    pub reduction: f64,
+    pub total_dense: usize,
+    pub total_butterfly: usize,
+}
+
+/// Compute the Figure-1/10 rows.
+pub fn compute(seed: u64) -> Vec<ParamRow> {
+    let mut rng = Rng::seed_from_u64(seed);
+    ARCHS
+        .iter()
+        .map(|&(label, n1, n2, backbone)| {
+            let (p1, p2) = (next_pow2(n1), next_pow2(n2));
+            let layer = ReplacementLayer::with_log_sizes(p1, p2, &mut rng);
+            let dense = n1 * n2;
+            let butterfly = layer.num_params();
+            ParamRow {
+                label: label.to_string(),
+                dense,
+                butterfly,
+                reduction: dense as f64 / butterfly as f64,
+                total_dense: backbone,
+                total_butterfly: backbone - dense + butterfly,
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx.seed);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{:.1},{},{}",
+                r.label, r.dense, r.butterfly, r.reduction, r.total_dense, r.total_butterfly
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "fig01_params",
+        "arch,dense_layer_params,butterfly_layer_params,reduction_x,total_params_dense,total_params_butterfly",
+        &csv,
+    )?;
+    println!("\nFigure 1 — dense layer vs butterfly replacement:");
+    for r in &rows {
+        println!(
+            "  {:28} dense {:>10}  butterfly {:>8}  ({:>5.1}× fewer)",
+            r.label, r.dense, r.butterfly, r.reduction
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_arch_shows_large_reduction() {
+        for r in compute(0) {
+            assert!(
+                r.reduction > 4.0,
+                "{}: only {:.1}× reduction",
+                r.label,
+                r.reduction
+            );
+            assert!(r.total_butterfly < r.total_dense);
+        }
+    }
+
+    #[test]
+    fn butterfly_params_near_linear() {
+        // the replacement should be O(n log n), far below quadratic
+        for r in compute(1) {
+            let n = (r.dense as f64).sqrt(); // geometric mean of dims
+            assert!(
+                (r.butterfly as f64) < 40.0 * n * n.log2(),
+                "{}: {} params vs n log n bound",
+                r.label,
+                r.butterfly
+            );
+        }
+    }
+}

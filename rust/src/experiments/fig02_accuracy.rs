@@ -1,0 +1,185 @@
+//! Figure 2: final test accuracy — original (dense head) vs butterfly
+//! model on the four vision tasks, mean ± std over seeds.
+//!
+//! Proxy workloads substitute for CIFAR/ImageNet (DESIGN.md §4): the
+//! replaced object and its dimensions match the paper; the claim under
+//! test — accuracy parity at a fraction of the parameters — is
+//! evaluated the same way (final accuracy, multiple seeds).
+
+use super::ExpContext;
+use crate::data::classif::{generate, split, ClassifOpts};
+use crate::model::{Mlp, MlpConfig};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Vision proxy configs: (label, feature dim, hidden=n1, head_out=n2, classes).
+fn tasks(ctx: &ExpContext) -> Vec<(&'static str, usize, usize, usize, usize)> {
+    let s = |f, q| ctx.size(f, q);
+    vec![
+        (
+            "cifar10-efficientnet",
+            s(256, 64),
+            s(1024, 128),
+            s(512, 64),
+            10,
+        ),
+        (
+            "cifar10-preactresnet18",
+            s(256, 64),
+            s(512, 128),
+            s(512, 64),
+            10,
+        ),
+        (
+            "cifar100-seresnet152",
+            s(256, 64),
+            s(1024, 128),
+            s(1024, 64),
+            s(50, 10),
+        ),
+        (
+            "imagenet-senet154",
+            s(256, 64),
+            s(1024, 128),
+            s(1024, 64),
+            s(50, 10),
+        ),
+    ]
+}
+
+pub struct AccRow {
+    pub label: String,
+    pub dense_mean: f64,
+    pub dense_std: f64,
+    pub bfly_mean: f64,
+    pub bfly_std: f64,
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+pub fn compute(ctx: &ExpContext) -> Vec<AccRow> {
+    let seeds = if ctx.quick { 2 } else { 3 };
+    let epochs = ctx.size(15, 5);
+    tasks(ctx)
+        .into_iter()
+        .map(|(label, dim, hidden, head_out, classes)| {
+            let mut dense_accs = Vec::new();
+            let mut bfly_accs = Vec::new();
+            for s in 0..seeds {
+                let mut rng = Rng::seed_from_u64(ctx.seed + 1000 * s as u64 + 7);
+                let data = generate(
+                    &ClassifOpts {
+                        dim,
+                        classes,
+                        per_class: ctx.size(60, 24),
+                        intrinsic: 8,
+                        noise: 0.35,
+                    },
+                    &mut rng,
+                );
+                let n_train = (data.y.len() * 3) / 4;
+                let (tr, te) = split(&data, n_train);
+                for butterfly in [false, true] {
+                    let cfg = MlpConfig {
+                        input_dim: dim,
+                        hidden_dim: hidden,
+                        classes,
+                        butterfly_head: butterfly,
+                        head_out,
+                    };
+                    let mut m = Mlp::new(&cfg, &mut rng);
+                    let rep = m.train(&tr, &te, epochs, 32, 1e-3, true, &mut rng);
+                    let acc = *rep.test_acc.last().unwrap();
+                    if butterfly {
+                        bfly_accs.push(acc);
+                    } else {
+                        dense_accs.push(acc);
+                    }
+                }
+            }
+            let (dm, ds) = mean_std(&dense_accs);
+            let (bm, bs) = mean_std(&bfly_accs);
+            AccRow {
+                label: label.to_string(),
+                dense_mean: dm,
+                dense_std: ds,
+                bfly_mean: bm,
+                bfly_std: bs,
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.4},{:.4},{:.4},{:.4}",
+                r.label, r.dense_mean, r.dense_std, r.bfly_mean, r.bfly_std
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "fig02_accuracy",
+        "arch,dense_acc_mean,dense_acc_std,butterfly_acc_mean,butterfly_acc_std",
+        &csv,
+    )?;
+    println!("\nFigure 2 — final test accuracy (dense vs butterfly head):");
+    for r in &rows {
+        println!(
+            "  {:28} dense {:.3}±{:.3}  butterfly {:.3}±{:.3}",
+            r.label, r.dense_mean, r.dense_std, r.bfly_mean, r.bfly_std
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_accuracy_parity() {
+        // the paper's claim: butterfly ≈ dense. On the quick proxy we
+        // only require both to clearly beat chance and stay within a
+        // wide band of each other.
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig2"),
+            seed: 3,
+            quick: true,
+        };
+        let rows = compute(&ctx);
+        for r in &rows {
+            let chance = if r.label.contains("100") || r.label.contains("senet") {
+                0.1
+            } else {
+                0.1
+            };
+            assert!(
+                r.dense_mean > chance * 2.0,
+                "{}: dense {}",
+                r.label,
+                r.dense_mean
+            );
+            assert!(
+                r.bfly_mean > chance * 2.0,
+                "{}: bfly {}",
+                r.label,
+                r.bfly_mean
+            );
+            assert!(
+                (r.dense_mean - r.bfly_mean).abs() < 0.35,
+                "{}: dense {} vs bfly {}",
+                r.label,
+                r.dense_mean,
+                r.bfly_mean
+            );
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 6: two-phase learning (§5.3) on an ImageNet-like image
+//! matrix — approximation error at the end of phase 1 (D, E only; B
+//! fixed FJLT) and phase 2 (all parameters), vs PCA and FJLT+PCA.
+
+use super::ExpContext;
+use crate::autoencoder::{train_two_phase, ButterflyAe, TwoPhaseOpts};
+use crate::data::images;
+use crate::linalg::pca_error;
+use crate::rng::Rng;
+use crate::sketch::sketched_rank_k_from;
+use anyhow::Result;
+
+pub struct TwoPhaseRow {
+    pub k: usize,
+    pub pca: f64,
+    pub fjlt_pca: f64,
+    pub phase1: f64,
+    pub phase2: f64,
+}
+
+pub fn compute(ctx: &ExpContext) -> Vec<TwoPhaseRow> {
+    let n = ctx.size(512, 64);
+    let d = ctx.size(512, 64);
+    let mut rng = Rng::seed_from_u64(ctx.seed + 66);
+    let x = images::natural_image_like(n, d, &mut rng);
+    let ks: Vec<usize> = if ctx.quick {
+        vec![4, 8]
+    } else {
+        vec![8, 16, 32, 64]
+    };
+    let mut rows = Vec::new();
+    for &k in &ks {
+        let l = (4 * k).min(n);
+        let pca = pca_error(&x, k);
+        let j = crate::butterfly::TruncatedButterfly::fjlt(n, l, &mut rng);
+        let jx = j.forward(&x.t()).t();
+        let fjlt_pca = (&x - &sketched_rank_k_from(&x, &jx, k)).fro2();
+        let mut ae = ButterflyAe::new(n, l, k, n, &mut rng);
+        let opts = TwoPhaseOpts {
+            phase1_iters: ctx.size(1500, 400),
+            phase2_iters: ctx.size(800, 250),
+            lr1: 5e-3,
+            lr2: 1e-3,
+            log_every: 25,
+        };
+        let log = train_two_phase(&mut ae, &x, &x, &opts);
+        rows.push(TwoPhaseRow {
+            k,
+            pca,
+            fjlt_pca,
+            phase1: log.phase1_final,
+            phase2: log.phase2_final,
+        });
+    }
+    rows
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.6},{:.6},{:.6},{:.6}",
+                r.k, r.pca, r.fjlt_pca, r.phase1, r.phase2
+            )
+        })
+        .collect();
+    ctx.write_csv("fig06_twophase", "k,pca,fjlt_pca,phase1,phase2", &csv)?;
+    println!("\nFigure 6 — two-phase learning:");
+    for r in &rows {
+        println!(
+            "  k={:<4} PCA {:>11.4}  FJLT+PCA {:>11.4}  phase1 {:>11.4}  phase2 {:>11.4}",
+            r.k, r.pca, r.fjlt_pca, r.phase1, r.phase2
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase2_never_worse_and_bounded_by_pca() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig6"),
+            seed: 8,
+            quick: true,
+        };
+        for r in compute(&ctx) {
+            assert!(r.phase2 <= r.phase1 * 1.001, "k={}", r.k);
+            assert!(r.phase2 >= r.pca - 1e-6, "k={}: beat PCA?!", r.k);
+        }
+    }
+}

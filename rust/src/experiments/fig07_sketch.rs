@@ -1,0 +1,69 @@
+//! Figure 7 + Table 3: sketch test error `Err_Te` for the four methods
+//! (butterfly learned, sparse learned, CW random, Gaussian random) on
+//! the three datasets, at the paper's operating point `ℓ=20, k=10`.
+
+use super::sketch_common::{datasets, evaluate_methods};
+use super::ExpContext;
+use crate::rng::Rng;
+use anyhow::Result;
+
+pub fn compute(ctx: &ExpContext) -> Result<Vec<(String, Vec<(String, f64)>)>> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 70);
+    let (l, k) = (20, 10);
+    let iters = ctx.size(400, 60);
+    let mut out = Vec::new();
+    for ds in datasets(ctx, &mut rng) {
+        let rows = evaluate_methods(&ds, l, k, iters, ctx.seed + 71)?;
+        out.push((ds.name.clone(), rows));
+    }
+    Ok(out)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let results = compute(ctx)?;
+    let mut csv = Vec::new();
+    for (ds, rows) in &results {
+        for (method, err) in rows {
+            csv.push(format!("{ds},{method},{err:.6}"));
+        }
+    }
+    ctx.write_csv("fig07_sketch", "dataset,method,err_te", &csv)?;
+    println!("\nFigure 7 — Err_Te by method (ℓ=20, k=10; lower is better):");
+    for (ds, rows) in &results {
+        println!("  {ds}:");
+        for (method, err) in rows {
+            println!("    {:18} {err:.4}", method);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sketch_common::{evaluate_methods, tiny_dataset};
+
+    #[test]
+    fn learned_beats_random_and_butterfly_beats_sparse() {
+        let ds = tiny_dataset(42);
+        let rows = evaluate_methods(&ds, 8, 4, 150, 7).unwrap();
+        let get = |name: &str| {
+            rows.iter()
+                .find(|(m, _)| m == name)
+                .map(|(_, e)| *e)
+                .unwrap()
+        };
+        let bfly = get("butterfly-learned");
+        let sparse = get("sparse-learned");
+        let cw = get("cw-random");
+        let gauss = get("gaussian-random");
+        // the paper's ordering: learned < random
+        assert!(bfly < cw, "butterfly {bfly} !< cw {cw}");
+        assert!(bfly < gauss, "butterfly {bfly} !< gaussian {gauss}");
+        assert!(sparse < cw * 1.2, "sparse {sparse} vs cw {cw}");
+        // and butterfly ≤ sparse (allowing small slack on the tiny task)
+        assert!(
+            bfly <= sparse * 1.15 + 1e-6,
+            "butterfly {bfly} vs sparse {sparse}"
+        );
+    }
+}

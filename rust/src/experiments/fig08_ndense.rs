@@ -1,0 +1,74 @@
+//! Figure 8: learned butterfly vs learned `N`-nonzeros-per-column
+//! sketches on HS-SOD-like data (`ℓ=20, k=10`). The paper's surprise:
+//! butterfly beats even the dense (`N=ℓ`) learned sketch.
+
+use super::sketch_common::{butterfly_err, datasets};
+use super::ExpContext;
+use crate::rng::Rng;
+use crate::sketch::{app_te, err_te, train_sketch, LearnedDenseN, TrainOpts};
+use anyhow::Result;
+
+pub fn compute(ctx: &ExpContext) -> Result<Vec<(String, f64)>> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 80);
+    let all = datasets(ctx, &mut rng);
+    let ds = &all[0]; // HS-SOD-like (Figure 8 uses this dataset)
+    let (l, k) = (20usize, 10usize);
+    let iters = ctx.size(400, 60);
+    let mut rows = Vec::new();
+    let ns: Vec<usize> = if ctx.quick {
+        vec![1, 4, 20]
+    } else {
+        vec![1, 2, 4, 8, 12, 20]
+    };
+    let app = app_te(&ds.test, k);
+    for &nnz in &ns {
+        let mut s = LearnedDenseN::init(l.min(ds.n), ds.n, nnz.min(l), &mut rng);
+        let opts = TrainOpts {
+            k,
+            iters,
+            lr: 1e-2,
+            ..Default::default()
+        };
+        train_sketch(&mut s, &ds.train, &[], &opts);
+        rows.push((format!("dense-N{nnz}"), err_te(&ds.test, &s, k, app)));
+    }
+    rows.push((
+        "butterfly".to_string(),
+        butterfly_err(ds, l, k, iters, ctx.seed + 81),
+    ));
+    Ok(rows)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx)?;
+    let csv: Vec<String> = rows.iter().map(|(m, e)| format!("{m},{e:.6}")).collect();
+    ctx.write_csv("fig08_ndense", "method,err_te", &csv)?;
+    println!("\nFigure 8 — Err_Te: butterfly vs learned N-dense (HS-SOD-like):");
+    for (m, e) in &rows {
+        println!("  {:12} {e:.4}", m);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_nonzeros_do_not_hurt_much_and_butterfly_competitive() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig8"),
+            seed: 4,
+            quick: true,
+        };
+        let rows = compute(&ctx).unwrap();
+        let bfly = rows.last().unwrap().1;
+        let n1 = rows[0].1;
+        // butterfly must at least compete with the 1-sparse learner
+        assert!(bfly <= n1 * 1.2 + 1e-6, "butterfly {bfly} vs dense-N1 {n1}");
+        for (m, e) in &rows {
+            assert!(e.is_finite(), "{m} err not finite");
+            assert!(*e >= -1e-6, "{m} err negative: {e}");
+        }
+    }
+}

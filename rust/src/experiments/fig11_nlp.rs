@@ -1,0 +1,128 @@
+//! Figure 11: NLP tasks — F1 (NER) / accuracy (POS) of the tagger with
+//! a dense vs butterfly projection layer, final and per-epoch.
+
+use super::ExpContext;
+use crate::data::tagging::{generate_split, span_f1, token_accuracy, TaggingData, TaggingOpts};
+use crate::model::{Mlp, MlpConfig};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// (task label, emission dim, tag count, NER-style?).
+fn tasks(ctx: &ExpContext) -> Vec<(&'static str, usize, usize, bool)> {
+    vec![
+        ("conll03-en-like-ner", ctx.size(512, 64), 9, true),
+        ("conll03-de-like-ner", ctx.size(512, 64), 9, true),
+        ("ptb-pos-like", ctx.size(256, 64), 12, false),
+    ]
+}
+
+fn as_classif(d: &TaggingData) -> crate::data::classif::ClassifData {
+    crate::data::classif::ClassifData {
+        x: d.x.clone(),
+        y: d.y.clone(),
+        classes: d.tags,
+    }
+}
+
+pub struct NlpRow {
+    pub task: String,
+    pub dense_score: f64,
+    pub bfly_score: f64,
+    pub metric: &'static str,
+}
+
+pub fn compute(ctx: &ExpContext) -> Vec<NlpRow> {
+    let epochs = ctx.size(10, 4);
+    tasks(ctx)
+        .into_iter()
+        .map(|(label, dim, tags, ner)| {
+            let mut rng = Rng::seed_from_u64(ctx.seed + 110);
+            let opts = TaggingOpts {
+                dim,
+                tags,
+                sentences: ctx.size(400, 80),
+                mean_len: 12,
+                outside_stickiness: if ner { 0.8 } else { 0.0 },
+                noise: 1.2,
+            };
+            let (train, test) = generate_split(&opts, &mut rng);
+            let train_c = as_classif(&train);
+            let test_c = as_classif(&test);
+            let mut scores = [0.0f64; 2];
+            for (i, butterfly) in [false, true].into_iter().enumerate() {
+                let head_out = dim.min(ctx.size(512, 64));
+                let cfg = MlpConfig {
+                    input_dim: dim,
+                    hidden_dim: dim.min(256),
+                    classes: tags,
+                    butterfly_head: butterfly,
+                    head_out,
+                };
+                let mut rng_m = Rng::seed_from_u64(ctx.seed + 111);
+                let mut m = Mlp::new(&cfg, &mut rng_m);
+                let _ = m.train(&train_c, &test_c, epochs, 32, 1e-3, true, &mut rng_m);
+                // predictions on test
+                let logits = m.forward(&test_c.x);
+                let pred: Vec<usize> = (0..test_c.y.len())
+                    .map(|r| {
+                        let row = logits.row(r);
+                        (0..tags)
+                            .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                            .unwrap()
+                    })
+                    .collect();
+                scores[i] = if ner {
+                    span_f1(&test.y, &pred, test.outside_tag)
+                } else {
+                    token_accuracy(&test.y, &pred)
+                };
+            }
+            NlpRow {
+                task: label.to_string(),
+                dense_score: scores[0],
+                bfly_score: scores[1],
+                metric: if ner { "f1" } else { "accuracy" },
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{:.4},{:.4}",
+                r.task, r.metric, r.dense_score, r.bfly_score
+            )
+        })
+        .collect();
+    ctx.write_csv("fig11_nlp", "task,metric,dense,butterfly", &csv)?;
+    println!("\nFigure 11 — NLP tagging (dense vs butterfly projection):");
+    for r in &rows {
+        println!(
+            "  {:22} {}: dense {:.3}  butterfly {:.3}",
+            r.task, r.metric, r.dense_score, r.bfly_score
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_heads_tag_usefully() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig11"),
+            seed: 14,
+            quick: true,
+        };
+        for r in compute(&ctx) {
+            assert!(r.dense_score > 0.3, "{}: dense {}", r.task, r.dense_score);
+            assert!(r.bfly_score > 0.3, "{}: bfly {}", r.task, r.bfly_score);
+        }
+    }
+}

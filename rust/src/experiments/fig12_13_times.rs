@@ -1,0 +1,140 @@
+//! Figures 12 & 13: training and inference wall-time, original (dense)
+//! vs butterfly model, for the Table-1 architecture dimensions.
+//!
+//! The timing shape (butterfly faster at large n, crossover at small n)
+//! is what the paper claims; absolute numbers are this machine's.
+//! `cargo bench --bench bench_times` measures the same rows with the
+//! full statistics harness; this experiment writes the CSV variant.
+
+use super::fig01_params::ARCHS;
+use super::ExpContext;
+use crate::linalg::Mat;
+use crate::model::Head;
+use crate::rng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+pub struct TimeRow {
+    pub arch: String,
+    pub dense_infer_us: f64,
+    pub bfly_infer_us: f64,
+    pub dense_train_us: f64,
+    pub bfly_train_us: f64,
+}
+
+fn time_us(mut f: impl FnMut(), reps: usize) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+}
+
+pub fn compute(ctx: &ExpContext) -> Vec<TimeRow> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 120);
+    let batch = 32;
+    let reps = ctx.size(20, 5);
+    ARCHS
+        .iter()
+        .map(|&(label, n1, n2, _)| {
+            let (p1, p2) = (n1.next_power_of_two(), n2.next_power_of_two());
+            let dense = Head::dense(p1, p2, &mut rng);
+            let bfly = Head::butterfly(p1, p2, &mut rng);
+            let x = Mat::gaussian(batch, p1, 1.0, &mut rng);
+            let cot = Mat::gaussian(batch, p2, 1.0, &mut rng);
+            let infer_d = time_us(
+                || {
+                    std::hint::black_box(dense.forward(&x));
+                },
+                reps,
+            );
+            let infer_b = time_us(
+                || {
+                    std::hint::black_box(bfly.forward(&x));
+                },
+                reps,
+            );
+            let train_d = time_us(
+                || {
+                    let (_, tape) = dense.forward_tape(&x);
+                    std::hint::black_box(dense.vjp(&tape, &cot));
+                },
+                reps,
+            );
+            let train_b = time_us(
+                || {
+                    let (_, tape) = bfly.forward_tape(&x);
+                    std::hint::black_box(bfly.vjp(&tape, &cot));
+                },
+                reps,
+            );
+            TimeRow {
+                arch: label.to_string(),
+                dense_infer_us: infer_d,
+                bfly_infer_us: infer_b,
+                dense_train_us: train_d,
+                bfly_train_us: train_b,
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.1},{:.1},{:.1},{:.1}",
+                r.arch, r.dense_infer_us, r.bfly_infer_us, r.dense_train_us, r.bfly_train_us
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "fig12_13_times",
+        "arch,dense_infer_us,butterfly_infer_us,dense_train_us,butterfly_train_us",
+        &csv,
+    )?;
+    println!("\nFigures 12/13 — layer wall-time per batch of 32 (µs):");
+    for r in &rows {
+        println!(
+            "  {:28} infer: dense {:>9.1} bfly {:>9.1} | train: dense {:>9.1} bfly {:>9.1}",
+            r.arch, r.dense_infer_us, r.bfly_infer_us, r.dense_train_us, r.bfly_train_us
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn butterfly_inference_wins_at_large_n() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig12"),
+            seed: 1,
+            quick: true,
+        };
+        let rows = compute(&ctx);
+        // the largest architectures must show the paper's speedup shape
+        let big: Vec<&TimeRow> = rows
+            .iter()
+            .filter(|r| r.arch.contains("flair") || r.arch.contains("senet"))
+            .collect();
+        assert!(!big.is_empty());
+        let faster = big
+            .iter()
+            .filter(|r| r.bfly_infer_us < r.dense_infer_us)
+            .count();
+        assert!(
+            faster >= big.len() / 2 + 1,
+            "butterfly should win inference on most large layers: {:?}",
+            big.iter()
+                .map(|r| (r.arch.clone(), r.dense_infer_us, r.bfly_infer_us))
+                .collect::<Vec<_>>()
+        );
+    }
+}

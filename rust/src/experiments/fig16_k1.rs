@@ -1,0 +1,35 @@
+//! Figure 16: the extreme case `k=1` (ℓ=20) on HS-SOD-like data —
+//! the butterfly and sparse learned sketches compared where the
+//! rank budget is a single direction.
+
+use super::sketch_common::{datasets, evaluate_methods};
+use super::ExpContext;
+use crate::rng::Rng;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 160);
+    let all = datasets(ctx, &mut rng);
+    let ds = &all[0];
+    let rows = evaluate_methods(ds, 20, 1, ctx.size(400, 60), ctx.seed + 161)?;
+    let csv: Vec<String> = rows.iter().map(|(m, e)| format!("{m},{e:.6}")).collect();
+    ctx.write_csv("fig16_k1", "method,err_te", &csv)?;
+    println!("\nFigure 16 — Err_Te at k=1 (HS-SOD-like):");
+    for (m, e) in &rows {
+        println!("  {:18} {e:.5}", m);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sketch_common::{evaluate_methods, tiny_dataset};
+
+    #[test]
+    fn k1_learned_methods_still_improve_over_random() {
+        let ds = tiny_dataset(16);
+        let rows = evaluate_methods(&ds, 8, 1, 120, 9).unwrap();
+        let get = |n: &str| rows.iter().find(|(m, _)| m == n).unwrap().1;
+        assert!(get("butterfly-learned") <= get("gaussian-random") * 1.05 + 1e-9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Figure 17: `Err_Te` vs sketch size `ℓ ∈ {10,20,40,60,80}` at `k=10`
+//! on HS-SOD-like data — butterfly vs sparse learned vs randoms.
+
+use super::sketch_common::{butterfly_err, datasets, random_errs, sparse_err};
+use super::ExpContext;
+use crate::rng::Rng;
+use anyhow::Result;
+
+pub struct EllRow {
+    pub l: usize,
+    pub butterfly: f64,
+    pub sparse: f64,
+    pub cw: f64,
+    pub gaussian: f64,
+}
+
+pub fn compute(ctx: &ExpContext) -> Result<Vec<EllRow>> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 170);
+    let all = datasets(ctx, &mut rng);
+    let ds = &all[0];
+    let iters = ctx.size(300, 50);
+    let ells: Vec<usize> = if ctx.quick {
+        vec![10, 20, 40]
+    } else {
+        vec![10, 20, 40, 60, 80]
+    };
+    let k = 10;
+    let mut rows = Vec::new();
+    for &l in &ells {
+        let (cw, gaussian) = random_errs(ds, l, k, ctx.seed + 171);
+        rows.push(EllRow {
+            l,
+            butterfly: butterfly_err(ds, l, k, iters, ctx.seed + 172),
+            sparse: sparse_err(ds, l, k, iters, ctx.seed + 173),
+            cw,
+            gaussian,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx)?;
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.6},{:.6},{:.6},{:.6}",
+                r.l, r.butterfly, r.sparse, r.cw, r.gaussian
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "fig17_ell_sweep",
+        "l,butterfly_learned,sparse_learned,cw_random,gaussian_random",
+        &csv,
+    )?;
+    println!("\nFigure 17 — Err_Te vs ℓ (k=10, HS-SOD-like):");
+    for r in &rows {
+        println!(
+            "  ℓ={:<3} butterfly {:.4}  sparse {:.4}  cw {:.4}  gaussian {:.4}",
+            r.l, r.butterfly, r.sparse, r.cw, r.gaussian
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_decreases_with_ell_for_random_sketches() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig17"),
+            seed: 6,
+            quick: true,
+        };
+        let rows = compute(&ctx).unwrap();
+        // larger sketch ⇒ richer rowspan ⇒ error should not grow much
+        let first = rows.first().unwrap();
+        let last = rows.last().unwrap();
+        assert!(last.gaussian <= first.gaussian * 1.1 + 1e-6);
+        assert!(last.butterfly <= first.butterfly * 1.1 + 1e-6);
+    }
+}

@@ -1,0 +1,99 @@
+//! Figure 18: test error *during* training (ℓ=20, k=10, HS-SOD-like).
+//! The paper's observation: the butterfly sketch overtakes the sparse
+//! learned sketch after merely a few iterations.
+
+use super::sketch_common::datasets;
+use super::ExpContext;
+use crate::rng::Rng;
+use crate::sketch::{train_sketch, ButterflySketch, LearnedSparse, TrainOpts};
+use anyhow::Result;
+
+pub fn compute(ctx: &ExpContext) -> Result<Vec<(usize, f64, f64)>> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 180);
+    let all = datasets(ctx, &mut rng);
+    let ds = &all[0];
+    let (l, k) = (20usize.min(ds.n), 10usize);
+    let iters = ctx.size(400, 80);
+    let eval_every = ctx.size(20, 10);
+    let mut bf = ButterflySketch::init(l, ds.n, &mut rng);
+    let mut sp = LearnedSparse::init(l, ds.n, &mut rng);
+    let log_b = train_sketch(
+        &mut bf,
+        &ds.train,
+        &ds.test,
+        &TrainOpts {
+            k,
+            iters,
+            lr: 5e-3,
+            eval_every,
+            ..Default::default()
+        },
+    );
+    let log_s = train_sketch(
+        &mut sp,
+        &ds.train,
+        &ds.test,
+        &TrainOpts {
+            k,
+            iters,
+            lr: 5e-2,
+            eval_every,
+            ..Default::default()
+        },
+    );
+    Ok(log_b
+        .eval_curve
+        .iter()
+        .zip(log_s.eval_curve.iter())
+        .map(|(&(it, b), &(_, s))| (it, b, s))
+        .collect())
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let curve = compute(ctx)?;
+    let csv: Vec<String> = curve
+        .iter()
+        .map(|(it, b, s)| format!("{it},{b:.6},{s:.6}"))
+        .collect();
+    ctx.write_csv(
+        "fig18_training_curve",
+        "iteration,butterfly_test_loss,sparse_test_loss",
+        &csv,
+    )?;
+    println!("\nFigure 18 — test loss during training:");
+    for (it, b, s) in &curve {
+        println!("  iter {:>4}  butterfly {:.4}  sparse {:.4}", it, b, s);
+    }
+    // report the crossover the paper highlights
+    if let Some((it, _, _)) = curve.iter().find(|(_, b, s)| b < s) {
+        println!("  butterfly overtakes sparse at iteration {it}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_are_monotone_ish_and_butterfly_ends_ahead() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-fig18"),
+            seed: 11,
+            quick: true,
+        };
+        let curve = compute(&ctx).unwrap();
+        assert!(!curve.is_empty());
+        let (first_b, last_b) = (curve[0].1, curve.last().unwrap().1);
+        assert!(
+            last_b <= first_b * 1.05,
+            "butterfly training diverged: {first_b} -> {last_b}"
+        );
+        // the paper's crossover: butterfly ahead by the end
+        let (_, b_end, s_end) = curve.last().unwrap();
+        assert!(
+            *b_end <= s_end * 1.10 + 1e-9,
+            "butterfly {b_end} vs sparse {s_end} at end"
+        );
+    }
+}

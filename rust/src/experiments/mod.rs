@@ -1,0 +1,137 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (see DESIGN.md §3 for the full index).
+//!
+//! Every experiment is a pure function of its [`ExpContext`] (seed,
+//! output directory, quick flag) that writes a CSV under `results/`
+//! and prints a human summary. `butterfly-net experiment <id>` runs
+//! one; `butterfly-net experiment all` regenerates everything.
+
+pub mod fig01_params;
+pub mod fig02_accuracy;
+pub mod fig03_convergence;
+pub mod fig04_autoencoder;
+pub mod fig06_twophase;
+pub mod fig07_sketch;
+pub mod fig08_ndense;
+pub mod fig11_nlp;
+pub mod fig12_13_times;
+pub mod fig16_k1;
+pub mod fig17_ell_sweep;
+pub mod fig18_training_curve;
+pub mod prop31_concentration;
+pub mod sketch_common;
+pub mod table4_grid;
+pub mod thm1_landscape;
+
+use anyhow::{bail, Result};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    /// Reduced sizes for smoke runs / CI (`--quick`).
+    pub quick: bool,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            out_dir: PathBuf::from("results"),
+            seed: 0,
+            quick: false,
+        }
+    }
+}
+
+impl ExpContext {
+    /// Write a CSV file under the output directory.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+
+    /// Pick between full and quick sizes.
+    pub fn size(&self, full: usize, quick: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+}
+
+/// All experiment ids in DESIGN.md §3 order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig11", "fig12", "fig4", "fig6", "thm1", "fig7", "fig8", "fig16",
+    "fig17", "fig18", "table4", "prop31",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
+    match id {
+        "fig1" | "fig10" => fig01_params::run(ctx),
+        "fig2" => fig02_accuracy::run(ctx),
+        "fig3" | "fig14" => fig03_convergence::run(ctx),
+        "fig11" => fig11_nlp::run(ctx),
+        "fig12" | "fig13" => fig12_13_times::run(ctx),
+        "fig4" | "fig5" | "fig15" | "table2" => fig04_autoencoder::run(ctx),
+        "fig6" => fig06_twophase::run(ctx),
+        "thm1" => thm1_landscape::run(ctx),
+        "fig7" | "table3" => fig07_sketch::run(ctx),
+        "fig8" => fig08_ndense::run(ctx),
+        "fig16" => fig16_k1::run(ctx),
+        "fig17" => fig17_ell_sweep::run(ctx),
+        "fig18" => fig18_training_curve::run(ctx),
+        "table4" => table4_grid::run(ctx),
+        "prop31" => prop31_concentration::run(ctx),
+        "all" => {
+            for id in ALL {
+                println!("=== experiment {id} ===");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment `{other}`; known: {ALL:?} or `all`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-test"),
+            seed: 0,
+            quick: true,
+        };
+        assert!(run("not-a-figure", &ctx).is_err());
+    }
+
+    #[test]
+    fn csv_writer_emits_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("bnet-csv-{}", std::process::id()));
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            seed: 0,
+            quick: true,
+        };
+        let p = ctx
+            .write_csv("t", "a,b", &["1,2".to_string(), "3,4".to_string()])
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,114 @@
+//! Proposition 3.1, empirically: for FJLT `J1, J2` and any fixed `W`,
+//! `‖J2ᵀJ2·W·J1ᵀJ1·x − W·x‖ ≤ ε‖W‖` with probability
+//! `≥ 1 − e^{−Ω(min(k1,k2)ε²)}`. We sweep `k` and report the error
+//! distribution — the theoretical justification for the §3.2
+//! replacement's initialisation.
+
+use super::ExpContext;
+use crate::butterfly::TruncatedButterfly;
+use crate::linalg::{svd_thin, Mat};
+use crate::rng::Rng;
+use anyhow::Result;
+
+pub struct ConcRow {
+    pub k: usize,
+    pub mean_rel_err: f64,
+    pub p90_rel_err: f64,
+    pub max_rel_err: f64,
+}
+
+pub fn compute(ctx: &ExpContext) -> Vec<ConcRow> {
+    let n1 = ctx.size(256, 64);
+    let n2 = ctx.size(256, 64);
+    let trials = ctx.size(60, 20);
+    let mut rng = Rng::seed_from_u64(ctx.seed + 310);
+    let w = Mat::gaussian(n2, n1, 1.0, &mut rng);
+    let spec_norm = svd_thin(&w).s[0];
+    let x = {
+        let v = rng.gaussian_vec(n1, 1.0);
+        let norm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+        Mat::from_vec(1, n1, v.into_iter().map(|a| a / norm).collect())
+    };
+    let wx = x.matmul_t(&w); // 1×n2
+    let ks: Vec<usize> = if ctx.quick {
+        vec![8, 16, 32]
+    } else {
+        vec![8, 16, 32, 64, 128]
+    };
+    ks.into_iter()
+        .map(|k| {
+            let mut errs = Vec::with_capacity(trials);
+            for _ in 0..trials {
+                let j1 = TruncatedButterfly::fjlt(n1, k, &mut rng);
+                let j2 = TruncatedButterfly::fjlt(n2, k, &mut rng);
+                // W' x = J2ᵀ J2 W J1ᵀ J1 x, computed row-vector style
+                let j1x = j1.forward(&x); // 1×k
+                let back = j1.forward_t(&j1x); // 1×n1 = J1ᵀJ1 x
+                let wb = back.matmul_t(&w); // 1×n2
+                let j2wb = j2.forward(&wb);
+                let approx = j2.forward_t(&j2wb); // 1×n2
+                let err = (&approx - &wx).fro() / spec_norm;
+                errs.push(err);
+            }
+            errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ConcRow {
+                k,
+                mean_rel_err: errs.iter().sum::<f64>() / errs.len() as f64,
+                p90_rel_err: errs[(errs.len() * 9) / 10 - 1],
+                max_rel_err: *errs.last().unwrap(),
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx);
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.5},{:.5},{:.5}",
+                r.k, r.mean_rel_err, r.p90_rel_err, r.max_rel_err
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "prop31_concentration",
+        "k,mean_rel_err,p90_rel_err,max_rel_err",
+        &csv,
+    )?;
+    println!("\nProposition 3.1 — ‖W'x − Wx‖/‖W‖ vs k (FJLT draws):");
+    for r in &rows {
+        println!(
+            "  k={:<4} mean {:.4}  p90 {:.4}  max {:.4}",
+            r.k, r.mean_rel_err, r.p90_rel_err, r.max_rel_err
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_shrinks_with_k() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-prop31"),
+            seed: 9,
+            quick: true,
+        };
+        let rows = compute(&ctx);
+        assert!(rows.len() >= 3);
+        // the concentration claim: mean error decreases in k
+        assert!(
+            rows.last().unwrap().mean_rel_err < rows[0].mean_rel_err,
+            "{:?}",
+            rows.iter()
+                .map(|r| (r.k, r.mean_rel_err))
+                .collect::<Vec<_>>()
+        );
+        // and is bounded (ε well below the trivial 2.0 for the largest k)
+        assert!(rows.last().unwrap().mean_rel_err < 1.5);
+    }
+}

@@ -1,0 +1,195 @@
+//! Shared machinery for the §6 sketching experiments (Figures 7, 8,
+//! 16–18, Tables 3–4): dataset construction and method evaluation.
+
+use super::ExpContext;
+use crate::data::{images, normalize_top_singular, termdoc};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sketch::{
+    app_te, err_te, train_sketch, ButterflySketch, CwSketch, GaussianSketch, LearnedSparse, Sketch,
+    TrainOpts,
+};
+use anyhow::Result;
+
+/// A §6 dataset: train + test matrix samples (rows permuted, top
+/// singular value normalised — the paper's preprocessing).
+pub struct SketchDataset {
+    pub name: String,
+    pub n: usize,
+    pub train: Vec<Mat>,
+    pub test: Vec<Mat>,
+}
+
+fn prep(x: Mat, perm: &[usize]) -> Mat {
+    normalize_top_singular(&x.select_rows(perm))
+}
+
+/// Build the three Table-3 datasets (sizes reduced in quick mode; the
+/// Tech stand-in uses n=2048 so the butterfly applies directly — the
+/// paper's footnote-4 embedding handles non-powers of two).
+pub fn datasets(ctx: &ExpContext, rng: &mut Rng) -> Vec<SketchDataset> {
+    let (t_hs, e_hs) = if ctx.quick { (6, 3) } else { (40, 10) };
+    let mut out = Vec::new();
+    // HS-SOD-like: n×d = 1024×768 (quick: 256×192)
+    {
+        let n = ctx.size(1024, 256);
+        let d = ctx.size(768, 192);
+        let perm = rng.permutation(n);
+        let train: Vec<Mat> = (0..t_hs)
+            .map(|_| prep(images::hyperspectral_like(n, d, rng), &perm))
+            .collect();
+        let test: Vec<Mat> = (0..e_hs)
+            .map(|_| prep(images::hyperspectral_like(n, d, rng), &perm))
+            .collect();
+        out.push(SketchDataset {
+            name: "hyper-like".into(),
+            n,
+            train,
+            test,
+        });
+    }
+    // CIFAR-10-like: 32×32 image matrices
+    {
+        let n = 32;
+        let perm = rng.permutation(n);
+        let gen = |rng: &mut Rng| {
+            let img = images::natural_image_like(32, 32, rng);
+            prep(img, &perm)
+        };
+        let train: Vec<Mat> = (0..t_hs).map(|_| gen(rng)).collect();
+        let test: Vec<Mat> = (0..e_hs).map(|_| gen(rng)).collect();
+        out.push(SketchDataset {
+            name: "cifar-like".into(),
+            n,
+            train,
+            test,
+        });
+    }
+    // Tech-like: tall sparse term–doc
+    {
+        let n = ctx.size(2048, 256);
+        let d = ctx.size(195, 64);
+        let perm = rng.permutation(n);
+        let train: Vec<Mat> = (0..t_hs)
+            .map(|_| prep(termdoc::techlike(n, d, 10, rng), &perm))
+            .collect();
+        let test: Vec<Mat> = (0..e_hs)
+            .map(|_| prep(termdoc::techlike(n, d, 10, rng), &perm))
+            .collect();
+        out.push(SketchDataset {
+            name: "tech-like".into(),
+            n,
+            train,
+            test,
+        });
+    }
+    out
+}
+
+/// Evaluate the four Figure-7 methods on one dataset. Returns
+/// `(method, Err_Te)` rows (butterfly-learned, sparse-learned,
+/// cw-random, gaussian-random).
+pub fn evaluate_methods(
+    ds: &SketchDataset,
+    l: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> Result<Vec<(String, f64)>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let app = app_te(&ds.test, k);
+    let opts = TrainOpts {
+        k,
+        iters,
+        lr: 5e-3,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    // butterfly learned
+    {
+        let mut s = ButterflySketch::init(l.min(ds.n), ds.n, &mut rng);
+        train_sketch(&mut s, &ds.train, &[], &opts);
+        rows.push((
+            "butterfly-learned".to_string(),
+            err_te(&ds.test, &s, k, app),
+        ));
+    }
+    // sparse learned (Indyk et al.)
+    {
+        let mut s = LearnedSparse::init(l.min(ds.n), ds.n, &mut rng);
+        let opts_sparse = TrainOpts {
+            lr: 5e-2,
+            ..opts.clone()
+        };
+        train_sketch(&mut s, &ds.train, &[], &opts_sparse);
+        rows.push(("sparse-learned".to_string(), err_te(&ds.test, &s, k, app)));
+    }
+    // CW random
+    {
+        let s = CwSketch::sample(l.min(ds.n), ds.n, &mut rng);
+        rows.push(("cw-random".to_string(), err_te(&ds.test, &s, k, app)));
+    }
+    // Gaussian random
+    {
+        let s = GaussianSketch::sample(l.min(ds.n), ds.n, &mut rng);
+        rows.push(("gaussian-random".to_string(), err_te(&ds.test, &s, k, app)));
+    }
+    Ok(rows)
+}
+
+/// Convenience: `Err_Te` of one method trained fresh (used by sweeps).
+pub fn butterfly_err(ds: &SketchDataset, l: usize, k: usize, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let app = app_te(&ds.test, k);
+    let mut s = ButterflySketch::init(l.min(ds.n), ds.n, &mut rng);
+    let opts = TrainOpts {
+        k,
+        iters,
+        lr: 5e-3,
+        ..Default::default()
+    };
+    train_sketch(&mut s, &ds.train, &[], &opts);
+    err_te(&ds.test, &s, k, app)
+}
+
+pub fn sparse_err(ds: &SketchDataset, l: usize, k: usize, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let app = app_te(&ds.test, k);
+    let mut s = LearnedSparse::init(l.min(ds.n), ds.n, &mut rng);
+    let opts = TrainOpts {
+        k,
+        iters,
+        lr: 5e-2,
+        ..Default::default()
+    };
+    train_sketch(&mut s, &ds.train, &[], &opts);
+    err_te(&ds.test, &s, k, app)
+}
+
+/// Random-method errors (no training).
+pub fn random_errs(ds: &SketchDataset, l: usize, k: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let app = app_te(&ds.test, k);
+    let cw = CwSketch::sample(l.min(ds.n), ds.n, &mut rng);
+    let ga = GaussianSketch::sample(l.min(ds.n), ds.n, &mut rng);
+    (err_te(&ds.test, &cw, k, app), err_te(&ds.test, &ga, k, app))
+}
+
+/// The smallest dataset for unit tests.
+pub fn tiny_dataset(seed: u64) -> SketchDataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = 64;
+    let d = 48;
+    let perm = rng.permutation(n);
+    let gen = |rng: &mut Rng| prep(images::hyperspectral_like(n, d, rng), &perm);
+    SketchDataset {
+        name: "tiny".into(),
+        n,
+        train: (0..4).map(|_| gen(&mut rng)).collect(),
+        test: (0..2).map(|_| gen(&mut rng)).collect(),
+    }
+}
+
+/// `Sketch` trait needs to be in scope for err_te calls above.
+#[allow(unused)]
+fn _assert_traits(s: &dyn Sketch) {}

@@ -1,0 +1,101 @@
+//! Table 4: `Err_Te` grid over `(ℓ, k)` for the three datasets and the
+//! three method families (butterfly learned, sparse learned, random).
+
+use super::sketch_common::{butterfly_err, datasets, random_errs, sparse_err};
+use super::ExpContext;
+use crate::rng::Rng;
+use anyhow::Result;
+
+pub struct GridRow {
+    pub dataset: String,
+    pub l: usize,
+    pub k: usize,
+    pub butterfly: f64,
+    pub sparse: f64,
+    pub random: f64,
+}
+
+pub fn compute(ctx: &ExpContext) -> Result<Vec<GridRow>> {
+    let mut rng = Rng::seed_from_u64(ctx.seed + 200);
+    let all = datasets(ctx, &mut rng);
+    let iters = ctx.size(250, 40);
+    let grid: Vec<(usize, usize)> = if ctx.quick {
+        vec![(10, 5), (20, 10)]
+    } else {
+        vec![(10, 5), (20, 10), (40, 20), (20, 5), (40, 10), (60, 30)]
+    };
+    let mut rows = Vec::new();
+    for ds in &all {
+        for &(l, k) in &grid {
+            if l >= ds.n {
+                continue;
+            }
+            let (cw, _) = random_errs(ds, l, k, ctx.seed + 201);
+            rows.push(GridRow {
+                dataset: ds.name.clone(),
+                l,
+                k,
+                butterfly: butterfly_err(ds, l, k, iters, ctx.seed + 202),
+                sparse: sparse_err(ds, l, k, iters, ctx.seed + 203),
+                random: cw,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let rows = compute(ctx)?;
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{:.6},{:.6},{:.6}",
+                r.dataset, r.l, r.k, r.butterfly, r.sparse, r.random
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "table4_grid",
+        "dataset,l,k,butterfly_learned,sparse_learned,cw_random",
+        &csv,
+    )?;
+    println!("\nTable 4 — Err_Te grid:");
+    for r in &rows {
+        println!(
+            "  {:12} ℓ={:<3} k={:<3} butterfly {:.4}  sparse {:.4}  random {:.4}",
+            r.dataset, r.l, r.k, r.butterfly, r.sparse, r.random
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_complete_and_finite() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("bnet-table4"),
+            seed: 12,
+            quick: true,
+        };
+        let rows = compute(&ctx).unwrap();
+        assert!(rows.len() >= 4);
+        for r in &rows {
+            assert!(r.butterfly.is_finite() && r.sparse.is_finite() && r.random.is_finite());
+            // learned-vs-random shape: butterfly should not be wildly
+            // worse than the random baseline anywhere in the grid
+            assert!(
+                r.butterfly <= r.random * 1.5 + 1e-6,
+                "{} ℓ={} k={}: butterfly {} vs random {}",
+                r.dataset,
+                r.l,
+                r.k,
+                r.butterfly,
+                r.random
+            );
+        }
+    }
+}

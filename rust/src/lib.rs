@@ -1,0 +1,43 @@
+//! # butterfly-net
+//!
+//! A production-quality reproduction of *"Sparse Linear Networks with a
+//! Fixed Butterfly Structure: Theory and Practice"* (Ailon, Leibovitch,
+//! Nair; 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised in layers:
+//!
+//! * **Substrates** — [`rng`], [`linalg`], [`config`], [`cli`],
+//!   [`bench`], [`testing`], [`metrics`]: everything a real deployment
+//!   needs that the offline environment does not provide as crates.
+//! * **Core library** — [`butterfly`] (the paper's operator), [`model`]
+//!   (the §3.2 dense-layer replacement and proxy networks),
+//!   [`autoencoder`] (§4 encoder–decoder butterfly network), [`train`]
+//!   (optimizers, two-phase learning), [`sketch`] (§6 learned sketches),
+//!   [`data`] (synthetic workload generators).
+//! * **Runtime** — [`runtime`] (PJRT client over AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py`) and [`coordinator`]
+//!   (the L3 serving system: router, dynamic batcher, worker pool).
+//! * **Evaluation** — [`experiments`]: one module per table/figure in the
+//!   paper's evaluation section.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod autoencoder;
+pub mod bench;
+pub mod butterfly;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod testing;
+pub mod train;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

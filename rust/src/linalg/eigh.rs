@@ -1,0 +1,160 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Jacobi is chosen over tridiagonalisation+QL because (a) the matrices
+//! we decompose are small (`ℓ×ℓ` Gram matrices with `ℓ ≤ 128`, or
+//! `m×m` with `m ≤ 1024` for the Theorem-1 landscape checks), (b) it is
+//! simple to make bit-deterministic, and (c) the same sweep structure
+//! is reused *inside the AOT JAX graph* (`python/compile/model.py`)
+//! so the rust and HLO eigensolvers agree closely.
+
+use super::Mat;
+
+/// Eigendecomposition `A = V diag(w) Vᵀ` of a symmetric matrix.
+/// Eigenvalues are sorted **descending**; `v` holds eigenvectors as
+/// columns in matching order.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub w: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Cyclic-Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Panics if `a` is not square; symmetry is assumed (only the upper
+/// triangle drives the rotations, but the matrix is symmetrised first
+/// to be safe against small asymmetries from accumulated products).
+pub fn eigh(a: &Mat) -> Eigh {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh expects a square matrix");
+    // Symmetrise defensively.
+    let mut m = Mat::from_fn(n, n, |i, j| 0.5 * (a[(i, j)] + a[(j, i)]));
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-13 * (1.0 + m.fro()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Classic stable rotation computation.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // A <- Jᵀ A J on rows/cols p and q.
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+                // V <- V J.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract, sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let w: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let v_sorted = v.select_cols(&order);
+    Eigh { w, v: v_sorted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mat::max_abs_diff;
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::gaussian(n, n, 1.0, rng);
+        let at = a.t();
+        let mut s = a;
+        s.add_scaled(&at, 1.0);
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::seed_from_u64(20);
+        for &n in &[1, 2, 5, 16, 40] {
+            let a = random_symmetric(n, &mut rng);
+            let Eigh { w, v } = eigh(&a);
+            // V diag(w) Vᵀ == A
+            let mut vd = v.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    vd[(r, c)] *= w[c];
+                }
+            }
+            let rec = vd.matmul_t(&v);
+            assert!(max_abs_diff(&rec, &a) < 1e-8, "n={n}");
+            // V orthogonal
+            assert!(max_abs_diff(&v.t_matmul(&v), &Mat::eye(n)) < 1e-9);
+            // sorted descending
+            assert!(w.windows(2).all(|x| x[0] >= x[1] - 1e-12));
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (4 - i) as f64 } else { 0.0 });
+        let Eigh { w, .. } = eigh(&a);
+        for (i, &want) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            assert!((w[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Rng::seed_from_u64(21);
+        let a = Mat::gaussian(30, 12, 1.0, &mut rng);
+        let g = a.t_matmul(&a); // 12x12 PSD
+        let Eigh { w, .. } = eigh(&g);
+        assert!(w.iter().all(|&x| x > -1e-9));
+    }
+
+    #[test]
+    fn rank_deficiency_detected() {
+        let mut rng = Rng::seed_from_u64(22);
+        // Gram of a rank-3 matrix in R^8
+        let a = Mat::gaussian(3, 8, 1.0, &mut rng);
+        let g = a.t_matmul(&a); // 8x8, rank 3
+        let Eigh { w, .. } = eigh(&g);
+        assert!(w[2] > 1e-6);
+        for &x in &w[3..] {
+            assert!(x.abs() < 1e-8, "trailing eigenvalue {x}");
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! Row-major dense matrix with the operations the repo needs.
+
+use crate::rng::Rng;
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// i.i.d. Gaussian entries with standard deviation `std`.
+    pub fn gaussian(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose (allocates).
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out[(c, r)] = self[(r, c)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * rhs` (cache-blocked, parallel over row
+    /// bands; see §Perf in EXPERIMENTS.md).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, rhs.rows,
+            "matmul: {}x{} * {}x{}",
+            self.rows, self.cols, rhs.rows, rhs.cols
+        );
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &rhs.data;
+        // Parallelise over bands of output rows; the inner kernel is an
+        // ikj loop so the innermost traversal is contiguous in both the
+        // output row and the rhs row (good auto-vectorisation).
+        super::parallel::par_chunks(&mut out.data, n.max(1) * 8, |band, chunk| {
+            let r0 = band * 8;
+            let rows_here = chunk.len() / n.max(1);
+            for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                let r = r0 + ri;
+                debug_assert!(ri < rows_here || rows_here == 0);
+                let a_row = &a[r * k..(r + 1) * k];
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ * rhs` without materialising the transpose.
+    pub fn t_matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.rows, rhs.rows, "t_matmul shape");
+        let (m, k, n) = (self.cols, self.rows, rhs.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = rhs.row(kk);
+            for (i, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        let _ = m;
+        out
+    }
+
+    /// `self * rhsᵀ` without materialising the transpose.
+    pub fn matmul_t(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.cols, "matmul_t shape");
+        let (m, k, n) = (self.rows, self.cols, rhs.rows);
+        let mut out = Mat::zeros(m, n);
+        super::parallel::par_chunks(&mut out.data, n.max(1), |r, out_row| {
+            let a_row = &self.data[r * k..(r + 1) * k];
+            for (c, o) in out_row.iter_mut().enumerate() {
+                let b_row = &rhs.data[c * k..(c + 1) * k];
+                let mut s = 0.0;
+                for (&av, &bv) in a_row.iter().zip(b_row.iter()) {
+                    s += av * bv;
+                }
+                *o = s;
+            }
+        });
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape");
+        let mut out = vec![0.0; self.rows];
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = self.row(r);
+            let mut s = 0.0;
+            for (&a, &b) in row.iter().zip(x.iter()) {
+                s += a * b;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.fro2().sqrt()
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// `self + s * other`, in place (axpy).
+    pub fn add_scaled(&mut self, other: &Mat, s: f64) {
+        assert_eq!(self.shape(), other.shape(), "add_scaled shape");
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Select a subset of rows (used by truncation / sketching).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select a subset of columns.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            for (c, &i) in idx.iter().enumerate() {
+                out[(r, c)] = self[(r, i)];
+            }
+        }
+        out
+    }
+
+    /// Permute the columns: output column `j` = input column `perm[j]`.
+    /// (The paper permutes input coordinates of image data so networks
+    /// cannot exploit spatial structure, §5.2.)
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        self.select_cols(perm)
+    }
+
+    /// Column-first (Fortran-order) flattening of `self` into a vector,
+    /// matching the paper's image-to-vector convention.
+    pub fn vec_col_major(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.rows * self.cols);
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                v.push(self[(r, c)]);
+            }
+        }
+        v
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Entrywise (Hadamard) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Check all entries are finite (failure-injection tests rely on
+    /// training rejecting NaNs early).
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.add_scaled(rhs, 1.0);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.add_scaled(rhs, -1.0);
+        out
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, rhs: &Mat) -> Mat {
+        self.matmul(rhs)
+    }
+}
+
+/// `‖a - b‖_∞` helper for tests.
+pub fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    a.data
+        .iter()
+        .zip(b.data.iter())
+        .fold(0.0f64, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        for r in 0..a.rows() {
+            for c in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(r, k)] * b[(k, c)];
+                }
+                out[(r, c)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 33, 9),
+            (64, 64, 64),
+            (65, 31, 129),
+        ] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(max_abs_diff(&got, &want) < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn t_matmul_and_matmul_t_match() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Mat::gaussian(23, 41, 1.0, &mut rng);
+        let b = Mat::gaussian(23, 17, 1.0, &mut rng);
+        assert!(max_abs_diff(&a.t_matmul(&b), &a.t().matmul(&b)) < 1e-10);
+        let c = Mat::gaussian(19, 41, 1.0, &mut rng);
+        assert!(max_abs_diff(&a.matmul_t(&c), &a.matmul(&c.t())) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Mat::gaussian(37, 53, 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::seed_from_u64(4);
+        let a = Mat::gaussian(13, 29, 1.0, &mut rng);
+        let x = rng.gaussian_vec(29, 1.0);
+        let xm = Mat::from_vec(29, 1, x.clone());
+        let want = a.matmul(&xm);
+        let got = a.matvec(&x);
+        for i in 0..13 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = Mat::gaussian(8, 8, 1.0, &mut rng);
+        assert!(max_abs_diff(&a.matmul(&Mat::eye(8)), &a) < 1e-15);
+        assert!(max_abs_diff(&Mat::eye(8).matmul(&a), &a) < 1e-15);
+    }
+
+    #[test]
+    fn fro_and_trace() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((a.fro2() - 30.0).abs() < 1e-12);
+        assert!((a.trace() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_and_permute() {
+        let a = Mat::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0, 3.0]);
+        let p = a.permute_cols(&[3, 2, 1, 0]);
+        assert_eq!(p.row(0), &[3.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn col_major_vectorisation() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.vec_col_major(), vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn add_sub_ops() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![10.0, 20.0, 30.0]);
+        assert_eq!((&a + &b).data(), &[11.0, 22.0, 33.0]);
+        assert_eq!((&b - &a).data(), &[9.0, 18.0, 27.0]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Dense numerical linear algebra substrate.
+//!
+//! The paper's experiments need matrix products, QR, symmetric
+//! eigendecomposition, (truncated) SVD / PCA, and — for learning the
+//! butterfly sketch of §6 — *backward* (adjoint) rules for QR and eigh.
+//! No BLAS/LAPACK crates exist in the offline registry, so the whole
+//! stack is implemented here, in portable Rust, with tests pinning the
+//! classical invariants (orthogonality, reconstruction, adjointness).
+//!
+//! Layout is row-major `f64`. Matrices are small-to-medium (`n ≤ 4096`)
+//! throughout the paper, so cache-blocked scalar kernels with
+//! `std::thread` parallelism are sufficient; see `bench_butterfly_ops`
+//! for measured throughput and `EXPERIMENTS.md` §Perf for the tuning log.
+
+mod backward;
+mod eigh;
+mod mat;
+mod parallel;
+mod qr;
+mod svd;
+
+pub use backward::{eigh_backward, matmul_backward, qr_backward};
+pub use eigh::{eigh, Eigh};
+pub use mat::{max_abs_diff, Mat};
+pub use parallel::{num_threads, par_chunks};
+pub use qr::{qr_thin, Qr};
+pub use svd::{best_rank_k, pca_error, svd_thin, truncated_svd, Svd};

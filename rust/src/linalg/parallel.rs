@@ -1,0 +1,104 @@
+//! Minimal data-parallel helpers over `std::thread::scope`.
+//!
+//! A stand-in for `rayon` (unavailable offline): split a mutable slice
+//! into contiguous chunks and process them on a fixed pool of scoped
+//! threads. Used by the blocked matmul and the data generators.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads to use for data-parallel loops.
+///
+/// Defaults to the number of available cores, clamped to 16; can be
+/// overridden with the `BUTTERFLY_NET_THREADS` environment variable
+/// (benchmarks use this to measure scaling).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("BUTTERFLY_NET_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    })
+}
+
+/// Process disjoint chunks of `data` (each of at most `chunk` elements)
+/// in parallel. `f(chunk_index, chunk_slice)` runs on worker threads.
+///
+/// Falls back to sequential execution for small inputs where thread
+/// spawn overhead would dominate.
+pub fn par_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], chunk: usize, f: F) {
+    assert!(chunk > 0);
+    let n_chunks = data.len().div_ceil(chunk.max(1));
+    if n_chunks <= 1 || num_threads() == 1 || data.len() < 4096 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<&mut [T]> = data.chunks_mut(chunk).collect();
+    // Hand each worker an index into the chunk list via a work-stealing
+    // counter; the chunks themselves are moved into per-slot options so
+    // each is processed exactly once.
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> = chunks
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| std::sync::Mutex::new(Some((i, c))))
+        .collect();
+    let workers = num_threads().min(n_chunks);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                if let Some((idx, c)) = slots[i].lock().unwrap().take() {
+                    f(idx, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processes_every_chunk_exactly_once() {
+        let mut data = vec![0u32; 10_000];
+        par_chunks(&mut data, 97, |_, c| {
+            for v in c.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn chunk_indices_match_offsets() {
+        let mut data = vec![0usize; 5000];
+        par_chunks(&mut data, 128, |i, c| {
+            for v in c.iter_mut() {
+                *v = i;
+            }
+        });
+        for (pos, &v) in data.iter().enumerate() {
+            assert_eq!(v, pos / 128);
+        }
+    }
+
+    #[test]
+    fn small_input_sequential_path() {
+        let mut data = vec![1i64; 16];
+        par_chunks(&mut data, 4, |_, c| c.iter_mut().for_each(|v| *v *= 2));
+        assert!(data.iter().all(|&v| v == 2));
+    }
+}

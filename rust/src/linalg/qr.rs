@@ -1,0 +1,153 @@
+//! Thin (reduced) QR factorisation via Householder reflections.
+//!
+//! Used to orthonormalise the row space of the sketched matrix `BX`
+//! when computing the rank-`k` approximation `B_k(X)` (§6), and as a
+//! building block for the random orthogonal vectors of the synthetic
+//! low-rank Gaussian data (§5.2).
+
+use super::Mat;
+
+/// Thin QR of an `m×n` matrix with `m ≥ n`: `A = Q·R`, `Q` is `m×n`
+/// with orthonormal columns, `R` is `n×n` upper-triangular.
+#[derive(Clone, Debug)]
+pub struct Qr {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Compute the thin QR of `a` (requires `rows ≥ cols`).
+///
+/// The sign convention forces the diagonal of `R` to be non-negative,
+/// which makes the factorisation unique for full-rank inputs — the QR
+/// backward rule in [`super::qr_backward`] assumes this.
+pub fn qr_thin(a: &Mat) -> Qr {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects a tall matrix, got {m}x{n}");
+    // Householder bidiagonalisation of a working copy.
+    let mut w = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for j in 0..n {
+        // Build the Householder vector for column j below the diagonal.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            let v = w[(i, j)];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm <= f64::EPSILON * 16.0 {
+            vs.push(v); // zero column: identity reflector
+            continue;
+        }
+        let a0 = w[(j, j)];
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        v[0] = a0 - alpha;
+        for i in (j + 1)..m {
+            v[i - j] = w[(i, j)];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing block.
+            for c in j..n {
+                let mut dot = 0.0;
+                for i in j..m {
+                    dot += v[i - j] * w[(i, c)];
+                }
+                let s = 2.0 * dot / vnorm2;
+                for i in j..m {
+                    w[(i, c)] -= s * v[i - j];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // R = leading n×n upper triangle of w.
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = w[(i, j)];
+        }
+    }
+    // Q = H_0 H_1 ... H_{n-1} * [I_n; 0]  (apply reflectors in reverse).
+    let mut q = Mat::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q[(i, c)];
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in j..m {
+                q[(i, c)] -= s * v[i - j];
+            }
+        }
+    }
+    // Fix signs so diag(R) >= 0 (flip matching Q columns).
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for c in j..n {
+                r[(j, c)] = -r[(j, c)];
+            }
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    Qr { q, r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mat::max_abs_diff;
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reconstructs_and_orthonormal() {
+        let mut rng = Rng::seed_from_u64(10);
+        for &(m, n) in &[(5, 5), (20, 7), (128, 16), (33, 32)] {
+            let a = Mat::gaussian(m, n, 1.0, &mut rng);
+            let Qr { q, r } = qr_thin(&a);
+            assert!(
+                max_abs_diff(&q.matmul(&r), &a) < 1e-9,
+                "{m}x{n} reconstruct"
+            );
+            let qtq = q.t_matmul(&q);
+            assert!(
+                max_abs_diff(&qtq, &Mat::eye(n)) < 1e-9,
+                "{m}x{n} orthonormal"
+            );
+            // R upper triangular with non-negative diagonal
+            for i in 0..n {
+                assert!(r[(i, i)] >= 0.0);
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient_columns() {
+        // second column is a multiple of the first
+        let a = Mat::from_vec(4, 2, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        let Qr { q, r } = qr_thin(&a);
+        assert!(max_abs_diff(&q.matmul(&r), &a) < 1e-9);
+        assert!(r[(1, 1)].abs() < 1e-9, "rank-1 input => zero second pivot");
+    }
+
+    #[test]
+    fn identity_input() {
+        let Qr { q, r } = qr_thin(&Mat::eye(6));
+        assert!(max_abs_diff(&q, &Mat::eye(6)) < 1e-12);
+        assert!(max_abs_diff(&r, &Mat::eye(6)) < 1e-12);
+    }
+}

@@ -1,0 +1,165 @@
+//! Thin and truncated SVD, PCA error (`Δ_k`), best rank-`k` projection.
+//!
+//! Strategy: eigendecompose the smaller Gram matrix (`AᵀA` or `AAᵀ`)
+//! with the Jacobi solver and recover the other factor. This squares
+//! the condition number, which is acceptable here: every use in the
+//! paper's experiments (PCA baselines `Δ_k`, `B_k(X)` computation,
+//! spectra of `Σ(B)` for Theorem 1) consumes the *leading* part of the
+//! spectrum. Singular values below `~1e-8·σ_max` are treated as zero.
+
+use super::{eigh, Eigh, Mat};
+
+/// Thin SVD `A = U diag(s) Vᵀ` with `r = min(m, n)` columns.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors as columns (`n×r`).
+    pub v: Mat,
+}
+
+/// Thin SVD via eigendecomposition of the smaller Gram matrix.
+pub fn svd_thin(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        // G = AᵀA = V S² Vᵀ, U = A V S⁻¹.
+        let g = a.t_matmul(a);
+        let Eigh { w, v } = eigh(&g);
+        let s: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let smax = s.first().copied().unwrap_or(0.0);
+        let av = a.matmul(&v);
+        let mut u = Mat::zeros(m, n);
+        for c in 0..n {
+            let sc = s[c];
+            if sc > 1e-12 * (1.0 + smax) {
+                for r in 0..m {
+                    u[(r, c)] = av[(r, c)] / sc;
+                }
+            }
+            // Null directions keep a zero column in U: rank-k uses of the
+            // SVD never touch them (their singular value is 0).
+        }
+        Svd { u, s, v }
+    } else {
+        // Decompose Aᵀ and swap factors.
+        let Svd { u, s, v } = svd_thin(&a.t());
+        Svd { u: v, s, v: u }
+    }
+}
+
+/// Leading `k` singular triplets of `a`.
+pub fn truncated_svd(a: &Mat, k: usize) -> Svd {
+    let Svd { u, s, v } = svd_thin(a);
+    let k = k.min(s.len());
+    let idx: Vec<usize> = (0..k).collect();
+    Svd {
+        u: u.select_cols(&idx),
+        s: s[..k].to_vec(),
+        v: v.select_cols(&idx),
+    }
+}
+
+/// Best rank-`k` approximation `A_k = U_k diag(s_k) V_kᵀ`.
+pub fn best_rank_k(a: &Mat, k: usize) -> Mat {
+    let Svd { u, s, v } = truncated_svd(a, k);
+    let mut us = u;
+    for r in 0..us.rows() {
+        for c in 0..us.cols() {
+            us[(r, c)] *= s[c];
+        }
+    }
+    us.matmul_t(&v)
+}
+
+/// PCA (Eckart–Young) error `Δ_k = ‖A − A_k‖_F² = Σ_{i>k} σ_i²`.
+///
+/// Computed from the spectrum directly — cheaper and more accurate than
+/// materialising `A_k`.
+pub fn pca_error(a: &Mat, k: usize) -> f64 {
+    let Svd { s, .. } = svd_thin(a);
+    s.iter().skip(k).map(|x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mat::max_abs_diff;
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reconstructs_tall_wide_square() {
+        let mut rng = Rng::seed_from_u64(30);
+        for &(m, n) in &[(12, 12), (40, 9), (9, 40), (64, 17)] {
+            let a = Mat::gaussian(m, n, 1.0, &mut rng);
+            let Svd { u, s, v } = svd_thin(&a);
+            let r = s.len();
+            let mut us = u.clone();
+            for rr in 0..m {
+                for c in 0..r {
+                    us[(rr, c)] *= s[c];
+                }
+            }
+            let rec = us.matmul_t(&v);
+            assert!(max_abs_diff(&rec, &a) < 1e-7, "{m}x{n}");
+            // descending
+            assert!(s.windows(2).all(|w| w[0] >= w[1] - 1e-10));
+            // orthonormal factors
+            assert!(max_abs_diff(&u.t_matmul(&u), &Mat::eye(r)) < 1e-7);
+            assert!(max_abs_diff(&v.t_matmul(&v), &Mat::eye(r)) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn eckart_young_optimality() {
+        // rank-k truncation is a (near) minimiser: perturbations of the
+        // projection basis cannot do better.
+        let mut rng = Rng::seed_from_u64(31);
+        let a = Mat::gaussian(24, 18, 1.0, &mut rng);
+        for &k in &[1, 3, 7] {
+            let ak = best_rank_k(&a, k);
+            let err = (&a - &ak).fro2();
+            let delta = pca_error(&a, k);
+            assert!((err - delta).abs() < 1e-6 * (1.0 + delta), "k={k}");
+            // any projection on random k-dim subspace is no better
+            let q = super::super::qr_thin(&Mat::gaussian(18, k, 1.0, &mut rng)).q;
+            let proj = a.matmul(&q).matmul_t(&q);
+            assert!((&a - &proj).fro2() >= delta - 1e-8);
+        }
+    }
+
+    #[test]
+    fn exact_low_rank_recovered() {
+        let mut rng = Rng::seed_from_u64(32);
+        let b = Mat::gaussian(30, 4, 1.0, &mut rng);
+        let c = Mat::gaussian(4, 25, 1.0, &mut rng);
+        let a = b.matmul(&c); // exactly rank 4
+        assert!(pca_error(&a, 4) < 1e-8);
+        assert!(pca_error(&a, 3) > 1e-2);
+        let a4 = best_rank_k(&a, 4);
+        assert!(max_abs_diff(&a4, &a) < 1e-6);
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_matrix() {
+        let mut rng = Rng::seed_from_u64(33);
+        let q = super::super::qr_thin(&Mat::gaussian(16, 16, 1.0, &mut rng)).q;
+        let Svd { s, .. } = svd_thin(&q);
+        for &x in &s {
+            assert!((x - 1.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn truncated_shapes() {
+        let mut rng = Rng::seed_from_u64(34);
+        let a = Mat::gaussian(20, 12, 1.0, &mut rng);
+        let t = truncated_svd(&a, 5);
+        assert_eq!(t.u.shape(), (20, 5));
+        assert_eq!(t.s.len(), 5);
+        assert_eq!(t.v.shape(), (12, 5));
+        // k > rank clamps
+        let t2 = truncated_svd(&a, 99);
+        assert_eq!(t2.s.len(), 12);
+    }
+}

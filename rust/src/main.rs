@@ -1,0 +1,254 @@
+//! `butterfly-net` CLI — the L3 entry point.
+//!
+//! ```text
+//! butterfly-net experiment <id>|all [--quick] [--seed N] [--out results]
+//! butterfly-net serve [--addr 127.0.0.1:7070] [--config cfg.toml] [--set k=v]
+//! butterfly-net train-ae [--dataset gaussian1] [--k 32] [--iters 400]
+//! butterfly-net sketch [--l 20] [--k 10] [--iters 400]
+//! butterfly-net runtime-info [--artifacts artifacts]
+//! butterfly-net params
+//! ```
+
+use anyhow::{bail, Result};
+use butterfly_net::cli::Args;
+use butterfly_net::config::Config;
+use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator, NativeHeadEngine, PjrtEngine};
+use butterfly_net::experiments::{self, ExpContext};
+use butterfly_net::model::Head;
+use butterfly_net::rng::Rng;
+use butterfly_net::runtime::{Runtime, RuntimeHandle, Tensor};
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("train-ae") => cmd_train_ae(&args),
+        Some("sketch") => cmd_sketch(&args),
+        Some("runtime-info") => cmd_runtime_info(&args),
+        Some("params") => {
+            let ctx = ExpContext::default();
+            experiments::fig01_params::run(&ctx)
+        }
+        Some(other) => bail!("unknown command `{other}`; run with no args for help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "butterfly-net — sparse linear networks with a fixed butterfly structure\n\n\
+         commands:\n\
+         \x20 experiment <id>|all   regenerate a paper table/figure ({})\n\
+         \x20 serve                 start the serving coordinator (dense vs butterfly variants)\n\
+         \x20 train-ae              train the §4 encoder-decoder butterfly network\n\
+         \x20 sketch                train the §6 butterfly sketch\n\
+         \x20 runtime-info          list + compile the AOT artifacts\n\
+         \x20 params                print the Figure-1 parameter table\n\n\
+         common flags: --quick --seed N --out DIR --artifacts DIR",
+        experiments::ALL.join(", ")
+    );
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.expect_known(&["quick", "seed", "out"])?;
+    let ctx = ExpContext {
+        out_dir: args.get("out").unwrap_or("results").into(),
+        seed: args.get_u64("seed", 0)?,
+        quick: args.flag("quick"),
+    };
+    let ids: Vec<String> = if args.positional.is_empty() {
+        vec!["all".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    for id in ids {
+        experiments::run(&id, &ctx)?;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&["addr", "config", "set", "artifacts", "no-pjrt", "once"])?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_file(p)?,
+        None => Config::new(),
+    };
+    for kv in args.get_all("set") {
+        cfg.set_override(kv)?;
+    }
+    let addr = args
+        .get("addr")
+        .map(String::from)
+        .unwrap_or_else(|| cfg.get_str("server.addr", "127.0.0.1:7070"));
+    let n1 = cfg.get_usize("model.n1", 1024);
+    let n2 = cfg.get_usize("model.n2", 512);
+    let bcfg = BatcherConfig {
+        max_batch: cfg.get_usize("server.max_batch", 32),
+        max_wait: std::time::Duration::from_micros(cfg.get_usize("server.max_wait_us", 2000) as u64),
+        queue_cap: cfg.get_usize("server.queue_cap", 1024),
+    };
+    let mut rng = Rng::seed_from_u64(cfg.get_i64("model.seed", 0) as u64);
+    let mut coordinator = Coordinator::new();
+    coordinator.register(
+        "dense",
+        Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng))),
+        bcfg.clone(),
+    );
+    coordinator.register(
+        "butterfly",
+        Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
+        bcfg.clone(),
+    );
+    // PJRT-backed variants when artifacts are present (and not disabled).
+    let artifacts_dir = args.get("artifacts").unwrap_or("artifacts");
+    if !args.flag("no-pjrt") {
+        match RuntimeHandle::spawn(artifacts_dir) {
+            Ok(rt) => match build_pjrt_classifier_engines(&rt) {
+                Ok(engines) => {
+                    for (name, eng) in engines {
+                        coordinator.register(&name, eng, bcfg.clone());
+                    }
+                }
+                Err(e) => eprintln!("pjrt variants unavailable: {e:#}"),
+            },
+            Err(e) => eprintln!("artifacts not loaded ({e:#}); native variants only"),
+        }
+    }
+    let coordinator = Arc::new(coordinator);
+    let handle = serve(Arc::clone(&coordinator), &addr)?;
+    println!(
+        "serving on {} — variants: {}",
+        handle.addr,
+        coordinator.variant_names().join(", ")
+    );
+    println!("protocol: INFER <variant> <v0> ... | METRICS | VARIANTS | PING");
+    if args.flag("once") {
+        // test hook: serve briefly then exit cleanly
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        handle.stop();
+        return Ok(());
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Build the PJRT classifier engines with random bound weights taken
+/// from the artifact manifest shapes.
+fn build_pjrt_classifier_engines(
+    rt: &RuntimeHandle,
+) -> Result<Vec<(String, Box<dyn butterfly_net::coordinator::Engine>)>> {
+    let mut rng = Rng::seed_from_u64(7);
+    let mut out: Vec<(String, Box<dyn butterfly_net::coordinator::Engine>)> = Vec::new();
+    for (artifact, name) in [
+        ("classifier_fwd_dense", "pjrt-dense"),
+        ("classifier_fwd_bfly", "pjrt-butterfly"),
+    ] {
+        let spec = match rt.spec(artifact)? {
+            Some(s) => s,
+            None => continue,
+        };
+        // bind all inputs except the final batch input
+        let mut bound = Vec::new();
+        for ts in &spec.inputs[..spec.inputs.len() - 1] {
+            bound.push(random_tensor(ts, &mut rng));
+        }
+        let engine = PjrtEngine::new(rt.clone(), artifact, bound, 0)?;
+        out.push((name.to_string(), Box::new(engine)));
+    }
+    Ok(out)
+}
+
+fn random_tensor(spec: &butterfly_net::runtime::TensorSpec, rng: &mut Rng) -> Tensor {
+    use butterfly_net::runtime::Dtype;
+    match spec.dtype {
+        Dtype::I32 => {
+            // index buffers: the identity subset keeps shapes valid
+            let n = spec.num_elements();
+            Tensor::from_indices(&(0..n).collect::<Vec<_>>())
+        }
+        _ => {
+            let data = rng.gaussian_vec(spec.num_elements(), 0.05);
+            Tensor::from_f64(&spec.shape, &data)
+        }
+    }
+}
+
+fn cmd_train_ae(args: &Args) -> Result<()> {
+    args.expect_known(&["dataset", "k", "l", "iters", "seed", "quick", "out"])?;
+    let seed = args.get_u64("seed", 0)?;
+    let k = args.get_usize("k", 32)?;
+    let iters = args.get_usize("iters", 400)?;
+    let quick = args.flag("quick");
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = if quick { 128 } else { 1024 };
+    let name = args.get("dataset").unwrap_or("gaussian1").to_string();
+    let x = match name.as_str() {
+        "gaussian1" => {
+            butterfly_net::data::lowrank_gaussian::rank_r_gaussian(n, n, n / 32, &mut rng)
+        }
+        "gaussian2" => {
+            butterfly_net::data::lowrank_gaussian::rank_r_gaussian(n, n, n / 16, &mut rng)
+        }
+        "mnist" => butterfly_net::data::permute_coordinates(
+            &butterfly_net::data::images::mnist_like(n, &mut rng).t(),
+            &mut rng,
+        ),
+        other => bail!("unknown dataset `{other}` (gaussian1|gaussian2|mnist)"),
+    };
+    let l = args.get_usize("l", (4 * k).min(x.rows()))?;
+    println!(
+        "training butterfly AE on {name}: n={} d={} k={k} ℓ={l}",
+        x.rows(),
+        x.cols()
+    );
+    let loss = experiments::fig04_autoencoder::train_butterfly_ae(&x, k, l, iters, seed);
+    let pca = butterfly_net::linalg::pca_error(&x, k);
+    println!(
+        "final loss {loss:.6}  (PCA floor Δ_k = {pca:.6}, ratio {:.3})",
+        loss / pca.max(1e-12)
+    );
+    Ok(())
+}
+
+fn cmd_sketch(args: &Args) -> Result<()> {
+    args.expect_known(&["l", "k", "iters", "seed", "quick", "out"])?;
+    let ctx = ExpContext {
+        out_dir: args.get("out").unwrap_or("results").into(),
+        seed: args.get_u64("seed", 0)?,
+        quick: args.flag("quick"),
+    };
+    experiments::fig07_sketch::run(&ctx)
+}
+
+fn cmd_runtime_info(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts"])?;
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let mut rt = Runtime::open(dir)?;
+    println!("platform: {}", rt.platform());
+    for name in rt.artifact_names() {
+        let t0 = std::time::Instant::now();
+        match rt.load(&name) {
+            Ok(a) => println!(
+                "  {name}: {} inputs, {} outputs, compiled in {:?}",
+                a.spec.inputs.len(),
+                a.spec.outputs.len(),
+                t0.elapsed()
+            ),
+            Err(e) => println!("  {name}: FAILED to compile: {e:#}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! Serving metrics: counters, gauges and latency histograms.
+//!
+//! The coordinator records per-request latency and batch occupancy into
+//! lock-cheap structures; `/metrics`-style text snapshots are exposed
+//! through the coordinator protocol and printed by the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: buckets are `[2^i .. 2^{i+1})` µs,
+/// `i ∈ [0, 40)`, which covers 1µs .. ~13 days with 2× resolution — the
+/// standard trick for allocation-free tail-latency tracking.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(39);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    /// Text snapshot (one line).
+    pub fn snapshot(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:?} p50={:?} p99={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Windowed gauge of batch sizes (mean occupancy of the dynamic batcher).
+#[derive(Default)]
+pub struct BatchStats {
+    inner: Mutex<(u64, u64, u64)>, // (batches, total_items, max_batch)
+}
+
+impl BatchStats {
+    pub fn record(&self, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 += batch_size as u64;
+        g.2 = g.2.max(batch_size as u64);
+    }
+
+    /// (num_batches, mean_batch_size, max_batch_size)
+    pub fn summary(&self) -> (u64, f64, u64) {
+        let g = self.inner.lock().unwrap();
+        let mean = if g.0 == 0 {
+            0.0
+        } else {
+            g.1 as f64 / g.0 as f64
+        };
+        (g.0, mean, g.2)
+    }
+}
+
+/// All coordinator metrics in one place.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: Counter,
+    pub responses: Counter,
+    pub errors: Counter,
+    pub rejected: Counter,
+    pub latency: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub batches: BatchStats,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> String {
+        let (nb, mean_b, max_b) = self.batches.summary();
+        format!(
+            "requests={} responses={} errors={} rejected={}\n{}\n{}\nbatches={} mean_batch={:.2} max_batch={}",
+            self.requests.get(),
+            self.responses.get(),
+            self.errors.get(),
+            self.rejected.get(),
+            self.latency.snapshot("latency"),
+            self.queue_wait.snapshot("queue_wait"),
+            nb,
+            mean_b,
+            max_b
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean() >= Duration::from_micros(400));
+        assert!(h.max() >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn batch_stats() {
+        let b = BatchStats::default();
+        b.record(4);
+        b.record(8);
+        let (n, mean, max) = b.summary();
+        assert_eq!(n, 2);
+        assert!((mean - 6.0).abs() < 1e-12);
+        assert_eq!(max, 8);
+    }
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        m.requests.inc();
+        m.requests.add(2);
+        m.latency.record(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert!(s.contains("requests=3"));
+        assert!(s.contains("latency"));
+    }
+}

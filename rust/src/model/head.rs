@@ -1,0 +1,198 @@
+//! Classification heads: dense baseline vs butterfly replacement,
+//! behind one interface so the §5.1 experiments can swap them.
+
+use super::replacement::{ReplacementLayer, ReplacementTape};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Plain dense linear layer `y = W·x (+ no bias — matching the layers
+/// the paper replaces)`.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    /// `out×in`.
+    pub w: Mat,
+}
+
+impl DenseLayer {
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let bound = 1.0 / (n_in as f64).sqrt();
+        DenseLayer {
+            w: Mat::from_fn(n_out, n_in, |_, _| (rng.f64() * 2.0 - 1.0) * bound),
+        }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        x.matmul_t(&self.w)
+    }
+}
+
+/// A classification head: dense or the §3.2 replacement.
+#[derive(Clone, Debug)]
+pub enum Head {
+    Dense(DenseLayer),
+    Butterfly(ReplacementLayer),
+}
+
+/// Tape for the head's backward pass.
+pub enum HeadTape<'a> {
+    Dense(&'a Mat), // input
+    Butterfly(Box<ReplacementTape>, &'a Mat),
+}
+
+impl Head {
+    /// Dense head `n_in → n_out`.
+    pub fn dense(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        Head::Dense(DenseLayer::new(n_in, n_out, rng))
+    }
+
+    /// Butterfly head with §5.1 sizes (`k_i = log2 n_i`, floored at the
+    /// class count on the output side so all classes stay expressible).
+    pub fn butterfly(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let k1 = ((n_in as f64).log2().ceil() as usize).max(1);
+        let k2 = ((n_out as f64).log2().ceil() as usize).max(1);
+        Head::Butterfly(ReplacementLayer::new(n_in, n_out, k1, k2, rng))
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Head::Dense(d) => d.w.shape(),
+            Head::Butterfly(b) => b.shape(),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        match self {
+            Head::Dense(d) => d.w.data().len(),
+            Head::Butterfly(b) => b.num_params(),
+        }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            Head::Dense(d) => d.forward(x),
+            Head::Butterfly(b) => b.forward(x),
+        }
+    }
+
+    /// Forward keeping what backward needs.
+    pub fn forward_tape<'a>(&self, x: &'a Mat) -> (Mat, HeadTape<'a>) {
+        match self {
+            Head::Dense(_) => {
+                let y = self.forward(x);
+                (y, HeadTape::Dense(x))
+            }
+            Head::Butterfly(b) => {
+                let (y, t) = b.forward_tape(x);
+                (y, HeadTape::Butterfly(Box::new(t), x))
+            }
+        }
+    }
+
+    /// VJP: returns (input cotangent, flat parameter grads matching
+    /// [`Self::params`]).
+    pub fn vjp(&self, tape: &HeadTape, dout: &Mat) -> (Mat, Vec<f64>) {
+        match (self, tape) {
+            (Head::Dense(d), HeadTape::Dense(x)) => {
+                // y = x·Wᵀ: dW = doutᵀ·x ; dx = dout·W
+                let dw = dout.t_matmul(x);
+                let dx = dout.matmul(&d.w);
+                (dx, dw.data().to_vec())
+            }
+            (Head::Butterfly(b), HeadTape::Butterfly(t, _)) => {
+                let (dx, g) = b.vjp(t, dout);
+                (dx, ReplacementLayer::flat_grads(&g))
+            }
+            _ => panic!("head/tape mismatch"),
+        }
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        match self {
+            Head::Dense(d) => d.w.data().to_vec(),
+            Head::Butterfly(b) => b.params(),
+        }
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        match self {
+            Head::Dense(d) => d.w.data_mut().copy_from_slice(p),
+            Head::Butterfly(b) => b.set_params(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_heads_forward_and_count() {
+        let mut rng = Rng::seed_from_u64(200);
+        let x = Mat::gaussian(4, 64, 1.0, &mut rng);
+        let d = Head::dense(64, 16, &mut rng);
+        let b = Head::butterfly(64, 16, &mut rng);
+        assert_eq!(d.forward(&x).shape(), (4, 16));
+        assert_eq!(b.forward(&x).shape(), (4, 16));
+        assert!(b.num_params() < d.num_params());
+    }
+
+    #[test]
+    fn dense_vjp_matches_fd() {
+        let mut rng = Rng::seed_from_u64(201);
+        let head = Head::dense(6, 3, &mut rng);
+        let x = Mat::gaussian(2, 6, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 3, 1.0, &mut rng);
+        let (_, tape) = head.forward_tape(&x);
+        let (dx, g) = head.vjp(&tape, &cot);
+        let loss = |h: &Head, x: &Mat| -> f64 { h.forward(x).hadamard(&cot).data().iter().sum() };
+        let eps = 1e-6;
+        for r in 0..2 {
+            for c in 0..6 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[(r, c)] += eps;
+                xm[(r, c)] -= eps;
+                let fd = (loss(&head, &xp) - loss(&head, &xm)) / (2.0 * eps);
+                assert!((fd - dx[(r, c)]).abs() < 1e-6);
+            }
+        }
+        let p0 = head.params();
+        for i in [0usize, 7, 17] {
+            let mut hp = head.clone();
+            let mut hm = head.clone();
+            let mut pp = p0.clone();
+            let mut pm = p0.clone();
+            pp[i] += eps;
+            pm[i] -= eps;
+            hp.set_params(&pp);
+            hm.set_params(&pm);
+            let fd = (loss(&hp, &x) - loss(&hm, &x)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-6, "param {i}");
+        }
+    }
+
+    #[test]
+    fn butterfly_head_vjp_matches_fd() {
+        let mut rng = Rng::seed_from_u64(202);
+        let head = Head::butterfly(16, 8, &mut rng);
+        let x = Mat::gaussian(2, 16, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let (_, tape) = head.forward_tape(&x);
+        let (_, g) = head.vjp(&tape, &cot);
+        let loss = |h: &Head, x: &Mat| -> f64 { h.forward(x).hadamard(&cot).data().iter().sum() };
+        let p0 = head.params();
+        let eps = 1e-6;
+        for i in [0usize, p0.len() / 2, p0.len() - 1] {
+            let mut hp = head.clone();
+            let mut hm = head.clone();
+            let mut pp = p0.clone();
+            let mut pm = p0.clone();
+            pp[i] += eps;
+            pm[i] -= eps;
+            hp.set_params(&pp);
+            hm.set_params(&pm);
+            let fd = (loss(&hp, &x) - loss(&hm, &x)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-5, "param {i}");
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Classification losses and metrics.
+
+use crate::linalg::Mat;
+
+/// Softmax cross-entropy over logits (`batch×classes`) with integer
+/// labels. Returns `(mean loss, d_logits)` where `d_logits` is the
+/// gradient of the *mean* loss (softmax − one-hot, divided by batch).
+pub fn softmax_cross_entropy(logits: &Mat, labels: &[usize]) -> (f64, Mat) {
+    let (b, c) = logits.shape();
+    assert_eq!(labels.len(), b);
+    let mut dl = Mat::zeros(b, c);
+    let mut loss = 0.0;
+    for r in 0..b {
+        let row = logits.row(r);
+        let maxv = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = row.iter().map(|v| (v - maxv).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let label = labels[r];
+        assert!(label < c, "label {label} out of range {c}");
+        loss += -(exps[label] / z).ln();
+        let drow = dl.row_mut(r);
+        for j in 0..c {
+            drow[j] = (exps[j] / z - if j == label { 1.0 } else { 0.0 }) / b as f64;
+        }
+    }
+    (loss / b as f64, dl)
+}
+
+/// Top-1 accuracy.
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
+    let (b, c) = logits.shape();
+    let mut correct = 0usize;
+    for r in 0..b {
+        let row = logits.row(r);
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[r] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = Mat::zeros(4, 8);
+        let (loss, _) = softmax_cross_entropy(&logits, &[0, 1, 2, 3]);
+        assert!((loss - (8.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let logits = Mat::from_vec(2, 3, vec![0.5, -1.0, 2.0, 0.0, 0.3, -0.7]);
+        let labels = [2usize, 1];
+        let (_, g) = softmax_cross_entropy(&logits, &labels);
+        let h = 1e-6;
+        for r in 0..2 {
+            for c in 0..3 {
+                let mut lp = logits.clone();
+                let mut lm = logits.clone();
+                lp[(r, c)] += h;
+                lm[(r, c)] -= h;
+                let fp = softmax_cross_entropy(&lp, &labels).0;
+                let fm = softmax_cross_entropy(&lm, &labels).0;
+                let fd = (fp - fm) / (2.0 * h);
+                assert!((fd - g[(r, c)]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_logits_high_accuracy_low_loss() {
+        let mut logits = Mat::zeros(3, 3);
+        for i in 0..3 {
+            logits[(i, i)] = 20.0;
+        }
+        let labels = [0usize, 1, 2];
+        assert_eq!(accuracy(&logits, &labels), 1.0);
+        let (loss, _) = softmax_cross_entropy(&logits, &labels);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts_ties_deterministically() {
+        let logits = Mat::zeros(2, 2); // tie → argmax picks index 0
+        assert_eq!(accuracy(&logits, &[0, 1]), 0.5);
+    }
+}

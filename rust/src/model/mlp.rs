@@ -1,0 +1,286 @@
+//! The §5.1 proxy classifier: trainable hidden layer + ReLU + a
+//! swappable classification head (dense vs butterfly replacement).
+//!
+//! The paper replaces the *final* dense layer of large vision/NLP
+//! models; everything upstream is an opaque feature extractor from the
+//! head's point of view. The proxy keeps exactly that structure — one
+//! trainable representation layer feeding the head under test — so the
+//! accuracy/parameter/time comparisons isolate the object the paper
+//! studies.
+
+use super::head::Head;
+use super::metrics::{accuracy, softmax_cross_entropy};
+use crate::data::classif::ClassifData;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::train::{Adam, Optimizer, Sgd};
+
+/// Model configuration.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub classes: usize,
+    /// "dense" or "butterfly" head.
+    pub butterfly_head: bool,
+    /// Output width of the head (≥ classes; §5.1 heads are n2 wide with
+    /// a fixed class readout when n2 > classes).
+    pub head_out: usize,
+}
+
+/// The proxy network: `logits = readout(head(relu(x·W1ᵀ)))` where
+/// `readout` is a *fixed* random projection `head_out → classes`
+/// (identity when `head_out == classes`).
+#[derive(Clone)]
+pub struct Mlp {
+    pub w1: Mat, // hidden×input
+    pub head: Head,
+    readout: Option<Mat>, // classes×head_out, fixed
+    pub cfg: MlpConfig,
+}
+
+/// Per-epoch training log.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub train_loss: Vec<f64>,
+    pub test_acc: Vec<f64>,
+    pub train_time_s: f64,
+}
+
+impl Mlp {
+    pub fn new(cfg: &MlpConfig, rng: &mut Rng) -> Self {
+        assert!(cfg.head_out >= cfg.classes);
+        let bound = 1.0 / (cfg.input_dim as f64).sqrt();
+        let w1 = Mat::from_fn(cfg.hidden_dim, cfg.input_dim, |_, _| {
+            (rng.f64() * 2.0 - 1.0) * bound
+        });
+        let head = if cfg.butterfly_head {
+            Head::butterfly(cfg.hidden_dim, cfg.head_out, rng)
+        } else {
+            Head::dense(cfg.hidden_dim, cfg.head_out, rng)
+        };
+        let readout = if cfg.head_out == cfg.classes {
+            None
+        } else {
+            Some(Mat::gaussian(
+                cfg.classes,
+                cfg.head_out,
+                1.0 / (cfg.head_out as f64).sqrt(),
+                rng,
+            ))
+        };
+        Mlp {
+            w1,
+            head,
+            readout,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Trainable parameter count (readout is fixed).
+    pub fn num_params(&self) -> usize {
+        self.w1.data().len() + self.head.num_params()
+    }
+
+    fn hidden(&self, x: &Mat) -> Mat {
+        let mut h = x.matmul_t(&self.w1);
+        for v in h.data_mut() {
+            *v = v.max(0.0);
+        }
+        h
+    }
+
+    /// Logits for a batch.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let h = self.hidden(x);
+        let z = self.head.forward(&h);
+        match &self.readout {
+            None => z,
+            Some(r) => z.matmul_t(r),
+        }
+    }
+
+    /// Loss + full gradient step state. Returns (loss, flat grads).
+    fn loss_grad(&self, x: &Mat, labels: &[usize]) -> (f64, Vec<f64>) {
+        let h = self.hidden(x); // batch×hidden (post-relu)
+        let (z, head_tape) = self.head.forward_tape(&h);
+        let logits = match &self.readout {
+            None => z.clone(),
+            Some(r) => z.matmul_t(r),
+        };
+        let (loss, dlogits) = softmax_cross_entropy(&logits, labels);
+        let dz = match &self.readout {
+            None => dlogits,
+            Some(r) => dlogits.matmul(r),
+        };
+        let (dh, ghead) = self.head.vjp(&head_tape, &dz);
+        // relu backward: zero where h == 0
+        let mut dh = dh;
+        for (dv, &hv) in dh.data_mut().iter_mut().zip(h.data().iter()) {
+            if hv <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        // w1 backward: h_pre = x·W1ᵀ → dW1 = dhᵀ·x
+        let gw1 = dh.t_matmul(x);
+        let mut g = gw1.data().to_vec();
+        g.extend_from_slice(&ghead);
+        (loss, g)
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.w1.data().to_vec();
+        p.extend_from_slice(&self.head.params());
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let n1 = self.w1.data().len();
+        self.w1.data_mut().copy_from_slice(&p[..n1]);
+        self.head.set_params(&p[n1..]);
+    }
+
+    /// Accuracy on a dataset.
+    pub fn accuracy(&self, data: &ClassifData) -> f64 {
+        accuracy(&self.forward(&data.x), &data.y)
+    }
+
+    /// Train with minibatch SGD or Adam for `epochs`, logging per-epoch
+    /// train loss and test accuracy — the curves of Figures 3/14.
+    pub fn train(
+        &mut self,
+        train: &ClassifData,
+        test: &ClassifData,
+        epochs: usize,
+        batch: usize,
+        lr: f64,
+        use_adam: bool,
+        rng: &mut Rng,
+    ) -> TrainReport {
+        let n = train.y.len();
+        let mut report = TrainReport::default();
+        let mut params = self.params();
+        let mut sgd = Sgd::with_momentum(lr, 0.9);
+        let mut adam = Adam::new(lr);
+        let t0 = std::time::Instant::now();
+        for _ in 0..epochs {
+            let perm = rng.permutation(n);
+            let mut epoch_loss = 0.0;
+            let mut batches = 0.0;
+            for chunk in perm.chunks(batch) {
+                let xb = train.x.select_rows(chunk);
+                let yb: Vec<usize> = chunk.iter().map(|&i| train.y[i]).collect();
+                let (loss, g) = self.loss_grad(&xb, &yb);
+                if use_adam {
+                    adam.step(&mut params, &g);
+                } else {
+                    sgd.step(&mut params, &g);
+                }
+                self.set_params(&params);
+                epoch_loss += loss;
+                batches += 1.0;
+            }
+            report.train_loss.push(epoch_loss / batches);
+            report.test_acc.push(self.accuracy(test));
+        }
+        report.train_time_s = t0.elapsed().as_secs_f64();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classif::{generate, split, ClassifOpts};
+
+    fn small_task(seed: u64) -> (ClassifData, ClassifData) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let data = generate(
+            &ClassifOpts {
+                dim: 32,
+                classes: 4,
+                per_class: 40,
+                intrinsic: 4,
+                noise: 0.25,
+            },
+            &mut rng,
+        );
+        split(&data, 120)
+    }
+
+    #[test]
+    fn dense_head_learns() {
+        let (tr, te) = small_task(210);
+        let mut rng = Rng::seed_from_u64(211);
+        let mut m = Mlp::new(
+            &MlpConfig {
+                input_dim: 32,
+                hidden_dim: 32,
+                classes: 4,
+                butterfly_head: false,
+                head_out: 4,
+            },
+            &mut rng,
+        );
+        let rep = m.train(&tr, &te, 12, 16, 0.05, false, &mut rng);
+        let final_acc = *rep.test_acc.last().unwrap();
+        assert!(final_acc > 0.6, "dense head acc {final_acc}");
+        assert!(rep.train_loss[0] > *rep.train_loss.last().unwrap());
+    }
+
+    #[test]
+    fn butterfly_head_learns_with_fewer_params() {
+        let (tr, te) = small_task(212);
+        let mut rng = Rng::seed_from_u64(213);
+        let cfg_d = MlpConfig {
+            input_dim: 32,
+            hidden_dim: 64,
+            classes: 4,
+            butterfly_head: false,
+            head_out: 64,
+        };
+        let cfg_b = MlpConfig {
+            butterfly_head: true,
+            ..cfg_d.clone()
+        };
+        let dense = Mlp::new(&cfg_d, &mut rng);
+        let mut bfly = Mlp::new(&cfg_b, &mut rng);
+        assert!(bfly.head.num_params() < dense.head.num_params());
+        let rep = bfly.train(&tr, &te, 15, 16, 0.01, true, &mut rng);
+        let final_acc = *rep.test_acc.last().unwrap();
+        assert!(final_acc > 0.6, "butterfly head acc {final_acc}");
+    }
+
+    #[test]
+    fn grad_matches_fd_through_whole_network() {
+        let mut rng = Rng::seed_from_u64(214);
+        let mut m = Mlp::new(
+            &MlpConfig {
+                input_dim: 8,
+                hidden_dim: 8,
+                classes: 3,
+                butterfly_head: true,
+                head_out: 8,
+            },
+            &mut rng,
+        );
+        let x = Mat::gaussian(4, 8, 1.0, &mut rng);
+        let labels = vec![0usize, 1, 2, 1];
+        let (_, g) = m.loss_grad(&x, &labels);
+        let p0 = m.params();
+        let h = 1e-6;
+        for i in [0usize, 30, p0.len() - 1] {
+            let mut pp = p0.clone();
+            let mut pm = p0.clone();
+            pp[i] += h;
+            pm[i] -= h;
+            m.set_params(&pp);
+            let fp = softmax_cross_entropy(&m.forward(&x), &labels).0;
+            m.set_params(&pm);
+            let fm = softmax_cross_entropy(&m.forward(&x), &labels).0;
+            m.set_params(&p0);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-5, "param {i}: fd={fd} got={}", g[i]);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The §3.2 dense-layer replacement and the §5.1 proxy networks.
+//!
+//! [`ReplacementLayer`] is the paper's proposed architecture: a dense
+//! `n2×n1` linear layer is replaced by
+//!
+//! ```text
+//! y = J2ᵀ · W' · J1 · x
+//! ```
+//!
+//! with `J1 : k1×n1` and `J2 : k2×n2` truncated butterfly networks and
+//! `W' : k2×k1` dense — `n1·n2` parameters become
+//! `k1·k2 + O(n1·log k1) + O(n2·log k2)` (§5.1 uses `k_i = log n_i`).
+//!
+//! [`Mlp`] is the proxy classifier used by the §5.1 experiments: a
+//! trainable hidden layer + ReLU followed by a classification head
+//! that is either dense or a [`ReplacementLayer`] — the object whose
+//! accuracy/parameters/time trade-off Figures 1–3 and 10–14 report.
+
+mod head;
+mod metrics;
+mod mlp;
+mod replacement;
+
+pub use head::{DenseLayer, Head};
+pub use metrics::{accuracy, softmax_cross_entropy};
+pub use mlp::{Mlp, MlpConfig, TrainReport};
+pub use replacement::ReplacementLayer;

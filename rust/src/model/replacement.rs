@@ -1,0 +1,222 @@
+//! The §3.2 replacement: `J2ᵀ · W' · J1` with truncated butterflies.
+
+use crate::butterfly::{ButterflyGrad, Tape, TruncatedButterfly};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Butterfly-based replacement for a dense `n2×n1` layer.
+#[derive(Clone, Debug)]
+pub struct ReplacementLayer {
+    /// `J1 : k1×n1` truncated butterfly (input side).
+    pub j1: TruncatedButterfly,
+    /// Dense core `W' : k2×k1`.
+    pub w: Mat,
+    /// `J2 : k2×n2` truncated butterfly, applied transposed (output side).
+    pub j2: TruncatedButterfly,
+}
+
+/// Gradients for the three blocks.
+pub struct ReplacementGrads {
+    pub d_j1: ButterflyGrad,
+    pub d_w: Mat,
+    pub d_j2: ButterflyGrad,
+}
+
+/// Forward intermediates kept for the VJP.
+pub struct ReplacementTape {
+    tape1: Tape,
+    h1: Mat,
+    tape2: Tape,
+}
+
+impl ReplacementLayer {
+    /// §5.1 construction: `k1 = ⌈log2 n1⌉`, `k2 = ⌈log2 n2⌉` unless
+    /// given explicitly; butterflies sampled from FJLT; `W'`
+    /// PyTorch-uniform.
+    pub fn new(n1: usize, n2: usize, k1: usize, k2: usize, rng: &mut Rng) -> Self {
+        assert!(n1.is_power_of_two() && n2.is_power_of_two());
+        let j1 = TruncatedButterfly::fjlt(n1, k1, rng);
+        let j2 = TruncatedButterfly::fjlt(n2, k2, rng);
+        let bound = 1.0 / (k1 as f64).sqrt();
+        let w = Mat::from_fn(k2, k1, |_, _| (rng.f64() * 2.0 - 1.0) * bound);
+        ReplacementLayer { j1, w, j2 }
+    }
+
+    /// Default §5.1 sizes: `k_i = log2(n_i)` (rounded up to ≥ classes
+    /// by callers when used as a classification head).
+    pub fn with_log_sizes(n1: usize, n2: usize, rng: &mut Rng) -> Self {
+        let k1 = (n1 as f64).log2().ceil() as usize;
+        let k2 = (n2 as f64).log2().ceil() as usize;
+        Self::new(n1, n2, k1.max(1), k2.max(1), rng)
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.j2.n(), self.j1.n())
+    }
+
+    /// Trainable parameters (both butterflies' effective weights + core).
+    pub fn num_params(&self) -> usize {
+        self.j1.effective_params() + self.w.data().len() + self.j2.effective_params()
+    }
+
+    /// Parameter count of the dense layer this replaces.
+    pub fn dense_params(&self) -> usize {
+        self.j1.n() * self.j2.n()
+    }
+
+    /// Forward for a batch (`rows` are inputs): `batch×n1 → batch×n2`.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let h1 = self.j1.forward(x); // batch×k1
+        let h2 = h1.matmul_t(&self.w); // batch×k2
+        self.j2.forward_t(&h2) // batch×n2
+    }
+
+    /// Forward keeping the tape for [`Self::vjp`].
+    pub fn forward_tape(&self, x: &Mat) -> (Mat, ReplacementTape) {
+        let (h1, tape1) = self.j1.forward_tape(x);
+        let h2 = h1.matmul_t(&self.w);
+        let (y, tape2) = self.j2.forward_t_tape(&h2);
+        (y, ReplacementTape { tape1, h1, tape2 })
+    }
+
+    /// VJP: cotangent of the output → (cotangent of input, grads).
+    pub fn vjp(&self, tape: &ReplacementTape, dout: &Mat) -> (Mat, ReplacementGrads) {
+        // y = J2ᵀ(h2) — vjp_t gives cotangent of h2 and J2's weights.
+        let (d_h2, d_j2) = self.j2.vjp_t(&tape.tape2, dout);
+        // h2 = h1·Wᵀ: ∂/∂W = d_h2ᵀ·h1 ; ∂/∂h1 = d_h2·W
+        let d_w = d_h2.t_matmul(&tape.h1);
+        let d_h1 = d_h2.matmul(&self.w);
+        let (d_x, d_j1) = self.j1.vjp(&tape.tape1, &d_h1);
+        (d_x, ReplacementGrads { d_j1, d_w, d_j2 })
+    }
+
+    /// Flat parameters: J1 weights, W, J2 weights.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.j1.net().flat_weights();
+        p.extend_from_slice(self.w.data());
+        p.extend_from_slice(&self.j2.net().flat_weights());
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let n1 = self.j1.net().num_params();
+        let nw = self.w.data().len();
+        self.j1.net_mut().set_flat_weights(&p[..n1]);
+        self.w.data_mut().copy_from_slice(&p[n1..n1 + nw]);
+        self.j2.net_mut().set_flat_weights(&p[n1 + nw..]);
+    }
+
+    pub fn flat_grads(g: &ReplacementGrads) -> Vec<f64> {
+        let mut out = Vec::new();
+        for lg in &g.d_j1.layers {
+            for quad in &lg.w {
+                out.extend_from_slice(quad);
+            }
+        }
+        out.extend_from_slice(g.d_w.data());
+        for lg in &g.d_j2.layers {
+            for quad in &lg.w {
+                out.extend_from_slice(quad);
+            }
+        }
+        out
+    }
+
+    /// Dense materialisation `J2ᵀ W' J1` (`n2×n1`) — tests only.
+    pub fn dense(&self) -> Mat {
+        let d1 = self.j1.dense(); // k1×n1
+        let d2 = self.j2.dense(); // k2×n2
+        d2.t_matmul(&self.w.matmul(&d1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::seed_from_u64(190);
+        let layer = ReplacementLayer::new(32, 16, 5, 4, &mut rng);
+        let x = Mat::gaussian(6, 32, 1.0, &mut rng);
+        let got = layer.forward(&x);
+        let want = x.matmul(&layer.dense().t());
+        assert!(max_abs_diff(&got, &want) < 1e-10);
+        assert_eq!(got.shape(), (6, 16));
+    }
+
+    #[test]
+    fn parameter_reduction_is_large() {
+        let mut rng = Rng::seed_from_u64(191);
+        // the paper's regime: n1=1024, n2=512, k_i = log2(n_i)
+        let layer = ReplacementLayer::with_log_sizes(1024, 512, &mut rng);
+        let dense = layer.dense_params();
+        let ours = layer.num_params();
+        assert!(
+            ours * 10 < dense,
+            "expected ≥10× reduction: {ours} vs {dense}"
+        );
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::seed_from_u64(192);
+        let layer = ReplacementLayer::new(8, 8, 3, 3, &mut rng);
+        let x = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let (_, tape) = layer.forward_tape(&x);
+        let (dx, g) = layer.vjp(&tape, &cot);
+        let loss = |l: &ReplacementLayer, x: &Mat| -> f64 {
+            l.forward(x).hadamard(&cot).data().iter().sum()
+        };
+        let h = 1e-6;
+        // input
+        for r in 0..2 {
+            for c in 0..8 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[(r, c)] += h;
+                xm[(r, c)] -= h;
+                let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * h);
+                assert!((fd - dx[(r, c)]).abs() < 1e-5);
+            }
+        }
+        // W'
+        for (r, c) in [(0usize, 0usize), (2, 1)] {
+            let mut lp = layer.clone();
+            let mut lm = layer.clone();
+            lp.w[(r, c)] += h;
+            lm.w[(r, c)] -= h;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * h);
+            assert!((fd - g.d_w[(r, c)]).abs() < 1e-5);
+        }
+        // a butterfly weight on each side
+        let mut lp = layer.clone();
+        let mut lm = layer.clone();
+        lp.j1.net_mut().layers_mut()[0].weights_mut()[1][0] += h;
+        lm.j1.net_mut().layers_mut()[0].weights_mut()[1][0] -= h;
+        let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * h);
+        assert!((fd - g.d_j1.layers[0].w[1][0]).abs() < 1e-5);
+        let mut lp = layer.clone();
+        let mut lm = layer.clone();
+        lp.j2.net_mut().layers_mut()[2].weights_mut()[0][3] += h;
+        lm.j2.net_mut().layers_mut()[2].weights_mut()[0][3] -= h;
+        let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * h);
+        assert!((fd - g.d_j2.layers[2].w[0][3]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Rng::seed_from_u64(193);
+        let layer = ReplacementLayer::new(16, 8, 4, 3, &mut rng);
+        let p = layer.params();
+        let mut l2 = layer.clone();
+        for v in l2.w.data_mut() {
+            *v = 0.0;
+        }
+        l2.set_params(&p);
+        let x = Mat::gaussian(3, 16, 1.0, &mut rng);
+        assert!(max_abs_diff(&layer.forward(&x), &l2.forward(&x)) < 1e-12);
+    }
+}

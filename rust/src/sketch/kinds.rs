@@ -1,0 +1,399 @@
+//! The five sketch families compared in §6 / Figures 7, 8, 16–18.
+
+use super::chain::sketch_loss_grad;
+use super::trainer::LearnableSketch;
+use super::Sketch;
+use crate::butterfly::TruncatedButterfly;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Random baselines
+// ---------------------------------------------------------------------------
+
+/// Clarkson–Woodruff (CountSketch) random sketch: each column of `S`
+/// has exactly one non-zero, a ±1 at a uniformly random row.
+#[derive(Clone, Debug)]
+pub struct CwSketch {
+    l: usize,
+    n: usize,
+    /// For column `j`: (row index, sign·value).
+    pub entries: Vec<(usize, f64)>,
+}
+
+impl CwSketch {
+    pub fn sample(l: usize, n: usize, rng: &mut Rng) -> Self {
+        let entries = (0..n).map(|_| (rng.below(l), rng.sign())).collect();
+        CwSketch { l, n, entries }
+    }
+}
+
+impl Sketch for CwSketch {
+    fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n);
+        let mut out = Mat::zeros(self.l, x.cols());
+        for (j, &(r, v)) in self.entries.iter().enumerate() {
+            let src = x.row(j);
+            let dst = out.row_mut(r);
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += v * s;
+            }
+        }
+        out
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.l, self.n)
+    }
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.l, self.n);
+        for (j, &(r, v)) in self.entries.iter().enumerate() {
+            m[(r, j)] = v;
+        }
+        m
+    }
+}
+
+/// Dense i.i.d. Gaussian sketch with `1/√ℓ` scaling.
+#[derive(Clone, Debug)]
+pub struct GaussianSketch {
+    pub m: Mat,
+}
+
+impl GaussianSketch {
+    pub fn sample(l: usize, n: usize, rng: &mut Rng) -> Self {
+        GaussianSketch {
+            m: Mat::gaussian(l, n, 1.0 / (l as f64).sqrt(), rng),
+        }
+    }
+}
+
+impl Sketch for GaussianSketch {
+    fn apply(&self, x: &Mat) -> Mat {
+        self.m.matmul(x)
+    }
+    fn shape(&self) -> (usize, usize) {
+        self.m.shape()
+    }
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn dense(&self) -> Mat {
+        self.m.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Learned families
+// ---------------------------------------------------------------------------
+
+/// Indyk et al. (2019): CW sparsity pattern (one non-zero per column at
+/// a fixed random row), value learned.
+#[derive(Clone, Debug)]
+pub struct LearnedSparse {
+    l: usize,
+    n: usize,
+    pub rows: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl LearnedSparse {
+    /// Initialise with a random CW sample (pattern frozen, values ±1).
+    pub fn init(l: usize, n: usize, rng: &mut Rng) -> Self {
+        let cw = CwSketch::sample(l, n, rng);
+        LearnedSparse {
+            l,
+            n,
+            rows: cw.entries.iter().map(|e| e.0).collect(),
+            vals: cw.entries.iter().map(|e| e.1).collect(),
+        }
+    }
+}
+
+impl Sketch for LearnedSparse {
+    fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n);
+        let mut out = Mat::zeros(self.l, x.cols());
+        for j in 0..self.n {
+            let (r, v) = (self.rows[j], self.vals[j]);
+            let src = x.row(j);
+            let dst = out.row_mut(r);
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += v * s;
+            }
+        }
+        out
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.l, self.n)
+    }
+    fn num_params(&self) -> usize {
+        self.n
+    }
+    fn dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.l, self.n);
+        for j in 0..self.n {
+            m[(self.rows[j], j)] = self.vals[j];
+        }
+        m
+    }
+}
+
+impl LearnableSketch for LearnedSparse {
+    fn params(&self) -> Vec<f64> {
+        self.vals.clone()
+    }
+    fn set_params(&mut self, p: &[f64]) {
+        self.vals.copy_from_slice(p);
+    }
+    fn loss_grad(&self, x: &Mat, k: usize) -> (f64, Vec<f64>) {
+        let a = self.apply(x);
+        let cg = sketch_loss_grad(x, &a, k);
+        // dS = dA·Xᵀ restricted to the pattern: dval[j] = dS[rows[j], j]
+        //     = Σ_d dA[rows[j], d]·X[j, d]  — computed sparsely.
+        let mut g = vec![0.0; self.n];
+        for j in 0..self.n {
+            let r = self.rows[j];
+            let da_row = cg.d_a.row(r);
+            let x_row = x.row(j);
+            g[j] = da_row.iter().zip(x_row.iter()).map(|(a, b)| a * b).sum();
+        }
+        (cg.loss, g)
+    }
+}
+
+/// Figure 8 ablation: `N` non-zeros per column at fixed random rows,
+/// all values learned. `N = ℓ` is effectively a learned dense matrix.
+#[derive(Clone, Debug)]
+pub struct LearnedDenseN {
+    l: usize,
+    n: usize,
+    /// `nnz` row indices per column (column-major: `rows[j*nnz + i]`).
+    pub rows: Vec<usize>,
+    pub vals: Vec<f64>,
+    pub nnz: usize,
+}
+
+impl LearnedDenseN {
+    pub fn init(l: usize, n: usize, nnz: usize, rng: &mut Rng) -> Self {
+        assert!(nnz >= 1 && nnz <= l);
+        let mut rows = Vec::with_capacity(n * nnz);
+        let mut vals = Vec::with_capacity(n * nnz);
+        for _ in 0..n {
+            // distinct rows per column
+            let subset = rng.subset(l, nnz);
+            for r in subset {
+                rows.push(r);
+                vals.push(rng.sign() / (nnz as f64).sqrt());
+            }
+        }
+        LearnedDenseN {
+            l,
+            n,
+            rows,
+            vals,
+            nnz,
+        }
+    }
+}
+
+impl Sketch for LearnedDenseN {
+    fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n);
+        let mut out = Mat::zeros(self.l, x.cols());
+        for j in 0..self.n {
+            let src = x.row(j);
+            for i in 0..self.nnz {
+                let idx = j * self.nnz + i;
+                let (r, v) = (self.rows[idx], self.vals[idx]);
+                let dst = out.row_mut(r);
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    *d += v * s;
+                }
+            }
+        }
+        out
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.l, self.n)
+    }
+    fn num_params(&self) -> usize {
+        self.n * self.nnz
+    }
+    fn dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.l, self.n);
+        for j in 0..self.n {
+            for i in 0..self.nnz {
+                let idx = j * self.nnz + i;
+                m[(self.rows[idx], j)] = self.vals[idx];
+            }
+        }
+        m
+    }
+}
+
+impl LearnableSketch for LearnedDenseN {
+    fn params(&self) -> Vec<f64> {
+        self.vals.clone()
+    }
+    fn set_params(&mut self, p: &[f64]) {
+        self.vals.copy_from_slice(p);
+    }
+    fn loss_grad(&self, x: &Mat, k: usize) -> (f64, Vec<f64>) {
+        let a = self.apply(x);
+        let cg = sketch_loss_grad(x, &a, k);
+        let mut g = vec![0.0; self.vals.len()];
+        for j in 0..self.n {
+            let x_row = x.row(j);
+            for i in 0..self.nnz {
+                let idx = j * self.nnz + i;
+                let da_row = cg.d_a.row(self.rows[idx]);
+                g[idx] = da_row.iter().zip(x_row.iter()).map(|(a, b)| a * b).sum();
+            }
+        }
+        (cg.loss, g)
+    }
+}
+
+/// The paper's sketch: a truncated butterfly network with learned
+/// gadget weights (§6).
+#[derive(Clone, Debug)]
+pub struct ButterflySketch {
+    pub b: TruncatedButterfly,
+}
+
+impl ButterflySketch {
+    /// FJLT-initialised butterfly sketch (§6 trains from this init).
+    pub fn init(l: usize, n: usize, rng: &mut Rng) -> Self {
+        assert!(n.is_power_of_two(), "butterfly sketch needs n=2^k");
+        ButterflySketch {
+            b: TruncatedButterfly::fjlt(n, l, rng),
+        }
+    }
+}
+
+impl Sketch for ButterflySketch {
+    fn apply(&self, x: &Mat) -> Mat {
+        // A = S X computed row-wise: Aᵀ = b.forward(Xᵀ)
+        self.b.forward(&x.t()).t()
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.b.l(), self.b.n())
+    }
+    fn num_params(&self) -> usize {
+        self.b.net().num_params()
+    }
+    fn dense(&self) -> Mat {
+        self.b.dense()
+    }
+}
+
+impl LearnableSketch for ButterflySketch {
+    fn params(&self) -> Vec<f64> {
+        self.b.net().flat_weights()
+    }
+    fn set_params(&mut self, p: &[f64]) {
+        self.b.net_mut().set_flat_weights(p);
+    }
+    fn loss_grad(&self, x: &Mat, k: usize) -> (f64, Vec<f64>) {
+        let xt = x.t(); // d×n, rows are the d columns of X
+        let (out, tape) = self.b.forward_tape(&xt); // d×ℓ = Aᵀ
+        let a = out.t();
+        let cg = sketch_loss_grad(x, &a, k);
+        // cotangent of the forward output (Aᵀ) is dAᵀ
+        let (_, bgrad) = self.b.vjp(&tape, &cg.d_a.t());
+        let mut g = Vec::with_capacity(self.num_params());
+        for lg in &bgrad.layers {
+            for quad in &lg.w {
+                g.extend_from_slice(quad);
+            }
+        }
+        (cg.loss, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cw_sketch_structure() {
+        let mut rng = Rng::seed_from_u64(70);
+        let s = CwSketch::sample(5, 40, &mut rng);
+        let d = s.dense();
+        // exactly one ±1 per column
+        for j in 0..40 {
+            let col: Vec<f64> = (0..5).map(|i| d[(i, j)]).collect();
+            let nnz: Vec<&f64> = col.iter().filter(|v| v.abs() > 0.0).collect();
+            assert_eq!(nnz.len(), 1);
+            assert!((nnz[0].abs() - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn sparse_apply_matches_dense() {
+        let mut rng = Rng::seed_from_u64(71);
+        let x = Mat::gaussian(40, 13, 1.0, &mut rng);
+        let cw = CwSketch::sample(5, 40, &mut rng);
+        assert!(crate::linalg::max_abs_diff(&cw.apply(&x), &cw.dense().matmul(&x)) < 1e-12);
+        let ls = LearnedSparse::init(5, 40, &mut rng);
+        assert!(crate::linalg::max_abs_diff(&ls.apply(&x), &ls.dense().matmul(&x)) < 1e-12);
+        let ld = LearnedDenseN::init(5, 40, 3, &mut rng);
+        assert!(crate::linalg::max_abs_diff(&ld.apply(&x), &ld.dense().matmul(&x)) < 1e-12);
+    }
+
+    #[test]
+    fn butterfly_apply_matches_dense() {
+        let mut rng = Rng::seed_from_u64(72);
+        let x = Mat::gaussian(32, 9, 1.0, &mut rng);
+        let bs = ButterflySketch::init(6, 32, &mut rng);
+        assert!(crate::linalg::max_abs_diff(&bs.apply(&x), &bs.dense().matmul(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn learned_sparse_grad_matches_fd() {
+        let mut rng = Rng::seed_from_u64(73);
+        let u = Mat::gaussian(16, 4, 1.0, &mut rng);
+        let v = Mat::gaussian(4, 10, 1.0, &mut rng);
+        let x = u.matmul(&v);
+        let s = LearnedSparse::init(5, 16, &mut rng);
+        let (_, g) = s.loss_grad(&x, 2);
+        let h = 1e-6;
+        for j in [0usize, 7, 15] {
+            let mut sp = s.clone();
+            let mut sm = s.clone();
+            sp.vals[j] += h;
+            sm.vals[j] -= h;
+            let fp = sp.loss_grad(&x, 2).0;
+            let fm = sm.loss_grad(&x, 2).0;
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((fd - g[j]).abs() < 1e-4 * (1.0 + fd.abs()), "param {j}");
+        }
+    }
+
+    #[test]
+    fn butterfly_sketch_grad_matches_fd() {
+        let mut rng = Rng::seed_from_u64(74);
+        let u = Mat::gaussian(16, 4, 1.0, &mut rng);
+        let v = Mat::gaussian(4, 10, 1.0, &mut rng);
+        let x = u.matmul(&v);
+        let s = ButterflySketch::init(5, 16, &mut rng);
+        let (_, g) = s.loss_grad(&x, 2);
+        let p0 = s.params();
+        let h = 1e-6;
+        for j in [0usize, 17, 63, p0.len() - 1] {
+            let mut sp = s.clone();
+            let mut sm = s.clone();
+            let mut pp = p0.clone();
+            let mut pm = p0.clone();
+            pp[j] += h;
+            pm[j] -= h;
+            sp.set_params(&pp);
+            sm.set_params(&pm);
+            let fd = (sp.loss_grad(&x, 2).0 - sm.loss_grad(&x, 2).0) / (2.0 * h);
+            assert!((fd - g[j]).abs() < 1e-4 * (1.0 + fd.abs()), "param {j}");
+        }
+    }
+}

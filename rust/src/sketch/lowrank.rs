@@ -1,0 +1,136 @@
+//! `S_k(X)`: best rank-`k` approximation of `X` from the rows of `SX`
+//! (Algorithm 1 of Indyk et al. 2019, which the paper reuses), plus the
+//! §6 test-error metrics.
+
+use crate::linalg::{eigh, qr_thin, Mat};
+
+/// Compute `S_k(X)` given `X ∈ R^{n×d}` and the sketched matrix
+/// `A = SX ∈ R^{ℓ×d}`.
+///
+/// Pipeline (all differentiable; mirrored by [`super::chain`]):
+/// 1. thin QR of `Aᵀ` → `Q ∈ R^{d×ℓ}`, an orthonormal basis of
+///    `rowspan(A)`;
+/// 2. project: `Y = XQ ∈ R^{n×ℓ}`;
+/// 3. best rank-`k` of the projected matrix via the `ℓ×ℓ` Gram
+///    eigendecomposition: `G = YᵀY = V Λ Vᵀ`, `P = V_k V_kᵀ`;
+/// 4. `S_k(X) = Y P Qᵀ` — rank ≤ `k`, rows in `rowspan(SX)`.
+pub fn sketched_rank_k_from(x: &Mat, a: &Mat, k: usize) -> Mat {
+    assert_eq!(x.cols(), a.cols(), "X and SX must share the d axis");
+    if a.rows() >= a.cols() {
+        // ℓ ≥ d: rowspan(SX) is (generically) all of R^d — the sketch
+        // constrains nothing and S_k(X) is the plain best rank-k.
+        return crate::linalg::best_rank_k(x, k);
+    }
+    let q = qr_thin(&a.t()).q; // d×ℓ
+    let y = x.matmul(&q); // n×ℓ
+    let g = y.t_matmul(&y); // ℓ×ℓ
+    let e = eigh(&g);
+    let l = a.rows();
+    let k = k.min(l);
+    let idx: Vec<usize> = (0..k).collect();
+    let vk = e.v.select_cols(&idx); // ℓ×k
+                                    // Y P Qᵀ with P = V_k V_kᵀ
+    let yvk = y.matmul(&vk); // n×k
+    let yp = yvk.matmul_t(&vk); // n×ℓ
+    yp.matmul_t(&q) // n×d
+}
+
+/// `S_k(X)` for a sketch operator.
+pub fn sketched_rank_k(x: &Mat, sketch: &dyn super::Sketch, k: usize) -> Mat {
+    let a = sketch.apply(x);
+    sketched_rank_k_from(x, &a, k)
+}
+
+/// `App_Te = E_X ‖X − X_k‖_F²` — the unavoidable PCA error of a test
+/// set (§6).
+pub fn app_te(test: &[Mat], k: usize) -> f64 {
+    let s: f64 = test.iter().map(|x| crate::linalg::pca_error(x, k)).sum();
+    s / test.len() as f64
+}
+
+/// `Err_Te(S) = E_X ‖X − S_k(X)‖_F² − App_Te` — the §6 test error.
+pub fn err_te(test: &[Mat], sketch: &dyn super::Sketch, k: usize, app: f64) -> f64 {
+    let s: f64 = test
+        .iter()
+        .map(|x| {
+            let approx = sketched_rank_k(x, sketch, k);
+            (x - &approx).fro2()
+        })
+        .sum();
+    s / test.len() as f64 - app
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{best_rank_k, pca_error};
+    use crate::rng::Rng;
+
+    struct DenseSketch(Mat);
+    impl super::super::Sketch for DenseSketch {
+        fn apply(&self, x: &Mat) -> Mat {
+            self.0.matmul(x)
+        }
+        fn shape(&self) -> (usize, usize) {
+            self.0.shape()
+        }
+        fn num_params(&self) -> usize {
+            0
+        }
+        fn dense(&self) -> Mat {
+            self.0.clone()
+        }
+    }
+
+    #[test]
+    fn output_rank_at_most_k() {
+        let mut rng = Rng::seed_from_u64(50);
+        let x = Mat::gaussian(20, 15, 1.0, &mut rng);
+        let s = Mat::gaussian(6, 20, 1.0, &mut rng);
+        let approx = sketched_rank_k_from(&x, &s.matmul(&x), 3);
+        assert_eq!(approx.shape(), (20, 15));
+        assert!(pca_error(&approx, 3) < 1e-8, "rank must be ≤ 3");
+    }
+
+    #[test]
+    fn never_beats_pca_and_close_for_big_sketch() {
+        let mut rng = Rng::seed_from_u64(51);
+        // Low-rank + noise matrix: sketching should capture it well.
+        let u = Mat::gaussian(30, 4, 1.0, &mut rng);
+        let v = Mat::gaussian(4, 25, 1.0, &mut rng);
+        let mut x = u.matmul(&v);
+        let noise = Mat::gaussian(30, 25, 0.01, &mut rng);
+        x.add_scaled(&noise, 1.0);
+        let k = 4;
+        let delta = pca_error(&x, k);
+        // Gaussian sketch with ℓ = 12 rows
+        let s = Mat::gaussian(12, 30, 1.0, &mut rng);
+        let approx = sketched_rank_k_from(&x, &s.matmul(&x), k);
+        let err = (&x - &approx).fro2();
+        assert!(err >= delta - 1e-9, "sketched cannot beat PCA");
+        assert!(err <= 2.0 * delta + 1e-6, "err={err} delta={delta}");
+    }
+
+    #[test]
+    fn identity_sketch_recovers_pca() {
+        let mut rng = Rng::seed_from_u64(52);
+        let x = Mat::gaussian(10, 8, 1.0, &mut rng);
+        // S = I means rowspan(SX) = rowspan(X): S_k(X) = X_k.
+        let approx = sketched_rank_k_from(&x, &x.clone(), 3);
+        let want = best_rank_k(&x, 3);
+        assert!(crate::linalg::max_abs_diff(&approx, &want) < 1e-6);
+    }
+
+    #[test]
+    fn err_te_nonnegative_and_app_te_matches() {
+        let mut rng = Rng::seed_from_u64(53);
+        let test: Vec<Mat> = (0..4)
+            .map(|_| Mat::gaussian(16, 12, 1.0, &mut rng))
+            .collect();
+        let app = app_te(&test, 5);
+        assert!(app > 0.0);
+        let s = DenseSketch(Mat::gaussian(8, 16, 1.0, &mut rng));
+        let err = err_te(&test, &s, 5, app);
+        assert!(err >= -1e-9, "Err_Te must be ≥ 0, got {err}");
+    }
+}

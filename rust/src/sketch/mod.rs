@@ -1,0 +1,52 @@
+//! Sketching for low-rank matrix decomposition (§6).
+//!
+//! Given a distribution of matrices `X ∈ R^{n×d}`, learn (or sample) a
+//! sketching matrix `S : ℓ×n` so that the best rank-`k` approximation
+//! of `X` *from the rows of `SX`* — written `S_k(X)` — is as good as
+//! possible:
+//!
+//! ```text
+//! min_S  E_X ‖X − S_k(X)‖_F²
+//! ```
+//!
+//! Five sketch families are implemented, matching the paper's Figure 7/8
+//! comparison set:
+//!
+//! * [`CwSketch`] — random Clarkson–Woodruff: one ±1 per column
+//!   (the classical streaming sketch; baseline "random").
+//! * [`GaussianSketch`] — dense i.i.d. Gaussian rows (baseline).
+//! * [`LearnedSparse`] — CW sparsity pattern, learned values
+//!   (Indyk et al. 2019; baseline "sparse learned").
+//! * [`LearnedDenseN`] — `N` random non-zeros per column, learned
+//!   (Figure 8's "dense learned" ablation; `N = ℓ` is fully dense).
+//! * [`ButterflySketch`] — truncated butterfly structure, learned
+//!   weights (the paper's contribution).
+//!
+//! The differentiable pipeline `S → SX → QR → projection → eigh →
+//! ‖X − S_k(X)‖²` is implemented once in [`chain`] using the
+//! `linalg::backward` adjoints; each learnable family maps the shared
+//! cotangent `∂L/∂(SX)` onto its own parameters.
+
+pub mod chain;
+mod kinds;
+mod lowrank;
+mod trainer;
+
+pub use chain::{sketch_loss_grad, ChainGrad};
+pub use kinds::{ButterflySketch, CwSketch, GaussianSketch, LearnedDenseN, LearnedSparse};
+pub use lowrank::{app_te, err_te, sketched_rank_k, sketched_rank_k_from};
+pub use trainer::{train_sketch, LearnableSketch, TrainLog, TrainOpts};
+
+use crate::linalg::Mat;
+
+/// Any sketching operator `S : ℓ×n`.
+pub trait Sketch {
+    /// Apply to a data matrix: `SX` (`ℓ×d` from `n×d`).
+    fn apply(&self, x: &Mat) -> Mat;
+    /// Sketch dimensions `(ℓ, n)`.
+    fn shape(&self) -> (usize, usize);
+    /// Number of trainable parameters (0 for random sketches).
+    fn num_params(&self) -> usize;
+    /// Dense materialisation (tests / small experiments).
+    fn dense(&self) -> Mat;
+}

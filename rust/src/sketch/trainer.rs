@@ -1,0 +1,177 @@
+//! Training loop for learnable sketches: Adam over the empirical loss
+//! `Σ_i ‖X_i − S_k(X_i)‖_F²` (Equation 2 of the paper).
+
+use super::Sketch;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::train::{clip_grad_norm, Adam, Optimizer};
+
+/// A sketch with trainable parameters.
+pub trait LearnableSketch: Sketch {
+    /// Flat parameter vector.
+    fn params(&self) -> Vec<f64>;
+    /// Load a flat parameter vector.
+    fn set_params(&mut self, p: &[f64]);
+    /// Loss and flat gradient for one training matrix.
+    fn loss_grad(&self, x: &Mat, k: usize) -> (f64, Vec<f64>);
+}
+
+/// Training options (defaults match §6: Adam, lr 1e-2 scaled per
+/// family, minibatch of one training matrix per step).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub k: usize,
+    pub iters: usize,
+    pub lr: f64,
+    /// Gradient-norm clip (stability of the eigh backward near
+    /// degenerate spectra).
+    pub clip: f64,
+    /// Evaluate on held-out matrices every `eval_every` iterations
+    /// (0 = never); results land in [`TrainLog::eval_curve`].
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            k: 10,
+            iters: 500,
+            lr: 1e-2,
+            clip: 1e3,
+            eval_every: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Training trace.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// Per-iteration training loss `‖X_i − S_k(X_i)‖²`.
+    pub train_curve: Vec<f64>,
+    /// `(iteration, mean test loss)` pairs if `eval_every > 0`.
+    pub eval_curve: Vec<(usize, f64)>,
+}
+
+/// Train a sketch on `train` matrices; optionally track the §6 test
+/// error on `test` during training (Figure 18).
+pub fn train_sketch<S: LearnableSketch>(
+    sketch: &mut S,
+    train: &[Mat],
+    test: &[Mat],
+    opts: &TrainOpts,
+) -> TrainLog {
+    assert!(!train.is_empty());
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut adam = Adam::new(opts.lr);
+    let mut params = sketch.params();
+    let mut log = TrainLog::default();
+    for it in 0..opts.iters {
+        let x = &train[rng.below(train.len())];
+        let (loss, mut grad) = sketch.loss_grad(x, opts.k);
+        clip_grad_norm(&mut grad, opts.clip);
+        if !loss.is_finite() || grad.iter().any(|g| !g.is_finite()) {
+            // Degenerate spectrum step: skip rather than poison params.
+            log.train_curve.push(f64::NAN);
+            continue;
+        }
+        adam.step(&mut params, &grad);
+        sketch.set_params(&params);
+        log.train_curve.push(loss);
+        if opts.eval_every > 0 && (it + 1) % opts.eval_every == 0 && !test.is_empty() {
+            let mean: f64 = test
+                .iter()
+                .map(|t| {
+                    let approx = super::sketched_rank_k(t, sketch, opts.k);
+                    (t - &approx).fro2()
+                })
+                .sum::<f64>()
+                / test.len() as f64;
+            log.eval_curve.push((it + 1, mean));
+        }
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kinds::{ButterflySketch, LearnedSparse};
+    use super::super::lowrank::{app_te, err_te};
+    use super::*;
+
+    fn lowrank_dataset(n: usize, d: usize, rank: usize, count: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::seed_from_u64(seed);
+        // Shared column space, varying coefficients — a learnable family.
+        let basis = Mat::gaussian(n, rank, 1.0, &mut rng);
+        (0..count)
+            .map(|_| {
+                let coef = Mat::gaussian(rank, d, 1.0, &mut rng);
+                let mut x = basis.matmul(&coef);
+                x.add_scaled(&Mat::gaussian(n, d, 0.05, &mut rng), 1.0);
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn training_reduces_loss_sparse() {
+        let data = lowrank_dataset(32, 20, 4, 6, 80);
+        let (train, test) = data.split_at(4);
+        let mut rng = Rng::seed_from_u64(81);
+        let mut s = LearnedSparse::init(8, 32, &mut rng);
+        let app = app_te(test, 3);
+        let before = err_te(test, &s, 3, app);
+        let opts = TrainOpts {
+            k: 3,
+            iters: 120,
+            lr: 5e-2,
+            ..Default::default()
+        };
+        train_sketch(&mut s, train, &[], &opts);
+        let after = err_te(test, &s, 3, app);
+        assert!(
+            after < before,
+            "learned sparse should improve: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn training_reduces_loss_butterfly() {
+        let data = lowrank_dataset(32, 20, 4, 6, 82);
+        let (train, test) = data.split_at(4);
+        let mut rng = Rng::seed_from_u64(83);
+        let mut s = ButterflySketch::init(8, 32, &mut rng);
+        let app = app_te(test, 3);
+        let before = err_te(test, &s, 3, app);
+        let opts = TrainOpts {
+            k: 3,
+            iters: 120,
+            lr: 1e-2,
+            ..Default::default()
+        };
+        let log = train_sketch(&mut s, train, &[], &opts);
+        let after = err_te(test, &s, 3, app);
+        assert!(
+            after < before,
+            "butterfly should improve: {before} -> {after}"
+        );
+        assert_eq!(log.train_curve.len(), 120);
+    }
+
+    #[test]
+    fn eval_curve_recorded() {
+        let data = lowrank_dataset(16, 10, 2, 3, 84);
+        let mut rng = Rng::seed_from_u64(85);
+        let mut s = LearnedSparse::init(4, 16, &mut rng);
+        let opts = TrainOpts {
+            k: 2,
+            iters: 20,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let log = train_sketch(&mut s, &data[..2], &data[2..], &opts);
+        assert_eq!(log.eval_curve.len(), 2);
+        assert_eq!(log.eval_curve[0].0, 10);
+    }
+}

@@ -1,0 +1,174 @@
+//! Property-testing mini-framework (`proptest` is unavailable offline).
+//!
+//! Provides seeded generators, a `forall` runner with failure reporting
+//! (seed + case index so any failure replays deterministically), and
+//! greedy shrinking for integer tuples. Used by
+//! `rust/tests/prop_coordinator.rs` and `rust/tests/prop_linalg_butterfly.rs`
+//! to check coordinator routing/batching/state invariants and linalg /
+//! butterfly algebra over randomised inputs.
+
+use crate::rng::Rng;
+
+/// Configuration of a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // PROP_CASES / PROP_SEED allow widening runs or replaying failures.
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xB077_E4F1);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeded inputs; panics with a replayable
+/// report on the first failure.
+///
+/// `gen` draws an input from the RNG; `prop` checks it.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> CaseResult,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (replay with \
+                 PROP_SEED={} PROP_CASES=1 offset {case}):\ninput: {input:?}\n{msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Greedy shrink of a vector of usizes against a failing predicate:
+/// repeatedly halve elements / drop suffixes while the property still
+/// fails, returning a (locally) minimal counterexample.
+pub fn shrink_usizes(mut input: Vec<usize>, still_fails: impl Fn(&[usize]) -> bool) -> Vec<usize> {
+    if !still_fails(&input) {
+        return input;
+    }
+    loop {
+        let mut improved = false;
+        // Try dropping a suffix.
+        while input.len() > 1 {
+            let cand = &input[..input.len() - 1];
+            if still_fails(cand) {
+                input.truncate(input.len() - 1);
+                improved = true;
+            } else {
+                break;
+            }
+        }
+        // Try halving each element.
+        for i in 0..input.len() {
+            while input[i] > 0 {
+                let mut cand = input.clone();
+                cand[i] /= 2;
+                if still_fails(&cand) {
+                    input = cand;
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return input;
+        }
+    }
+}
+
+/// Generator helpers used across property tests.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// Power of two in `[lo, hi]` (both must be powers of two).
+    pub fn pow2(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_log = lo.trailing_zeros();
+        let hi_log = hi.trailing_zeros();
+        1usize << (lo_log + rng.below((hi_log - lo_log + 1) as usize) as u32)
+    }
+
+    /// Usize in `[lo, hi]`.
+    pub fn range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Vector of Gaussian f64s.
+    pub fn vec_f64(rng: &mut Rng, len: usize) -> Vec<f64> {
+        rng.gaussian_vec(len, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        let cfg = PropConfig { cases: 32, seed: 1 };
+        forall(
+            "x*0==0",
+            &cfg,
+            |r| r.below(1000),
+            |&x| {
+                if x * 0 == 0 {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn forall_reports_failure() {
+        let cfg = PropConfig { cases: 4, seed: 2 };
+        forall(
+            "always-fails",
+            &cfg,
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "fails" when any element >= 10: minimal failing input
+        // should shrink elements below 10 away and land near [10].
+        let fails = |xs: &[usize]| xs.iter().any(|&x| x >= 10);
+        let shrunk = shrink_usizes(vec![57, 3, 100, 4], fails);
+        assert!(fails(&shrunk));
+        // single element, minimal-ish
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 10 && shrunk[0] <= 25, "{shrunk:?}");
+    }
+
+    #[test]
+    fn gen_pow2_in_range() {
+        let mut r = crate::rng::Rng::seed_from_u64(3);
+        for _ in 0..100 {
+            let p = gen::pow2(&mut r, 4, 64);
+            assert!(p.is_power_of_two() && (4..=64).contains(&p));
+        }
+    }
+}

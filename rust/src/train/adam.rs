@@ -1,0 +1,113 @@
+//! Adam optimizer (Kingma & Ba), the paper's default for the
+//! auto-encoder and sketch-learning experiments (§5.2, §6).
+
+use super::Optimizer;
+
+/// Adam with bias correction; PyTorch-default hyperparameters.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Adam {
+    /// Adam with β₁=0.9, β₂=0.999, ε=1e-8 (PyTorch defaults, which the
+    /// paper's code used).
+    pub fn new(lr: f64) -> Self {
+        Self::with_betas(lr, 0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_betas(lr: f64, beta1: f64, beta2: f64, eps: f64) -> Self {
+        Adam {
+            lr,
+            beta1,
+            beta2,
+            eps,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(
+            params.len(),
+            grads.len(),
+            "adam: param/grad length mismatch"
+        );
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With bias correction the first step has magnitude ≈ lr.
+        let mut opt = Adam::new(0.1);
+        let mut p = vec![0.0];
+        opt.step(&mut p, &[123.0]);
+        assert!((p[0] + 0.1).abs() < 1e-6, "p={}", p[0]);
+    }
+
+    #[test]
+    fn state_resets_on_shape_change() {
+        let mut opt = Adam::new(0.1);
+        let mut p = vec![0.0; 2];
+        opt.step(&mut p, &[1.0, 1.0]);
+        assert_eq!(opt.steps(), 1);
+        let mut p3 = vec![0.0; 3];
+        opt.step(&mut p3, &[1.0, 1.0, 1.0]);
+        assert_eq!(opt.steps(), 1, "state must reset for a new param shape");
+    }
+
+    #[test]
+    fn scale_invariance_of_direction() {
+        // Adam's per-coordinate normalisation: gradient scale should not
+        // change the first-step direction magnitude much.
+        let mut a = Adam::new(0.01);
+        let mut b = Adam::new(0.01);
+        let mut pa = vec![0.0];
+        let mut pb = vec![0.0];
+        a.step(&mut pa, &[1e-3]);
+        b.step(&mut pb, &[1e3]);
+        assert!((pa[0] - pb[0]).abs() < 1e-5);
+    }
+}

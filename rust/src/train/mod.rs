@@ -1,0 +1,96 @@
+//! Optimizers and learning-rate schedules.
+//!
+//! All optimizers operate on flat `&mut [f64]` parameter / gradient
+//! slices; model types expose flat views of their parameters so one
+//! optimizer instance can drive a heterogeneous parameter set (dense
+//! matrices + butterfly gadget weights), exactly like the PyTorch
+//! parameter groups the paper used.
+
+mod adam;
+mod schedule;
+mod sgd;
+
+pub use adam::Adam;
+pub use schedule::{ConstantLr, CosineLr, LrSchedule, StepDecayLr};
+pub use sgd::Sgd;
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait Optimizer {
+    /// Apply one update `params ← params − step(grads)`.
+    fn step(&mut self, params: &mut [f64], grads: &[f64]);
+
+    /// Current learning rate (after schedule).
+    fn lr(&self) -> f64;
+
+    /// Set the base learning rate (schedules scale it).
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// Gradient clipping by global L2 norm; returns the pre-clip norm.
+/// Training loops use this both as a stabiliser and as a convergence
+/// signal.
+pub fn clip_grad_norm(grads: &mut [f64], max_norm: f64) -> f64 {
+    let norm: f64 = grads.iter().map(|g| g * g).sum::<f64>().sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let s = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= s;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic bowl `f(x) = ½‖x − t‖²` must be minimised by every
+    /// optimizer we ship.
+    fn converges<O: Optimizer>(mut opt: O, iters: usize, tol: f64) {
+        let target = [3.0, -1.5, 0.25, 10.0];
+        let mut x = [0.0; 4];
+        for _ in 0..iters {
+            let mut g = [0.0; 4];
+            for i in 0..4 {
+                g[i] = x[i] - target[i];
+            }
+            opt.step(&mut x, &g);
+        }
+        for i in 0..4 {
+            assert!(
+                (x[i] - target[i]).abs() < tol,
+                "x[{i}]={} target={}",
+                x[i],
+                target[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        converges(Sgd::new(0.1), 400, 1e-6);
+    }
+
+    #[test]
+    fn sgd_momentum_converges_on_quadratic() {
+        converges(Sgd::with_momentum(0.05, 0.9), 600, 1e-6);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        converges(Adam::new(0.05), 3000, 1e-3);
+    }
+
+    #[test]
+    fn clip_grad_norm_scales() {
+        let mut g = vec![3.0, 4.0];
+        let pre = clip_grad_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-12);
+        let post: f64 = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((post - 1.0).abs() < 1e-12);
+        // below the cap: untouched
+        let mut g2 = vec![0.3, 0.4];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Learning-rate schedules.
+
+/// A learning-rate schedule: maps (epoch, base_lr) → lr.
+pub trait LrSchedule {
+    fn lr_at(&self, epoch: usize, base_lr: f64) -> f64;
+}
+
+/// Constant learning rate.
+pub struct ConstantLr;
+
+impl LrSchedule for ConstantLr {
+    fn lr_at(&self, _epoch: usize, base_lr: f64) -> f64 {
+        base_lr
+    }
+}
+
+/// Step decay: multiply by `gamma` every `every` epochs (the classic
+/// CIFAR schedule the paper's vision baselines use).
+pub struct StepDecayLr {
+    pub every: usize,
+    pub gamma: f64,
+}
+
+impl LrSchedule for StepDecayLr {
+    fn lr_at(&self, epoch: usize, base_lr: f64) -> f64 {
+        base_lr * self.gamma.powi((epoch / self.every.max(1)) as i32)
+    }
+}
+
+/// Cosine annealing to zero over `total` epochs.
+pub struct CosineLr {
+    pub total: usize,
+}
+
+impl LrSchedule for CosineLr {
+    fn lr_at(&self, epoch: usize, base_lr: f64) -> f64 {
+        let t = (epoch.min(self.total)) as f64 / self.total.max(1) as f64;
+        0.5 * base_lr * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        assert_eq!(ConstantLr.lr_at(0, 0.1), 0.1);
+        assert_eq!(ConstantLr.lr_at(99, 0.1), 0.1);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = StepDecayLr {
+            every: 10,
+            gamma: 0.1,
+        };
+        assert!((s.lr_at(0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(9, 1.0) - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(10, 1.0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(25, 1.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let c = CosineLr { total: 100 };
+        assert!((c.lr_at(0, 1.0) - 1.0).abs() < 1e-12);
+        assert!(c.lr_at(50, 1.0) > 0.49 && c.lr_at(50, 1.0) < 0.51);
+        assert!(c.lr_at(100, 1.0) < 1e-12);
+        // clamps past the end
+        assert!(c.lr_at(1000, 1.0) < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Stochastic gradient descent, optionally with classical momentum.
+
+use super::Optimizer;
+
+/// SGD: `v ← µ·v + g; p ← p − lr·v` (µ=0 reduces to plain SGD).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    lr: f64,
+    momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Self {
+        Sgd {
+            lr,
+            momentum: 0.0,
+            velocity: Vec::new(),
+        }
+    }
+
+    pub fn with_momentum(lr: f64, momentum: f64) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), grads.len(), "sgd: param/grad length mismatch");
+        if self.momentum == 0.0 {
+            for (p, &g) in params.iter_mut().zip(grads.iter()) {
+                *p -= self.lr * g;
+            }
+            return;
+        }
+        if self.velocity.len() != params.len() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        for ((p, &g), v) in params
+            .iter_mut()
+            .zip(grads.iter())
+            .zip(self.velocity.iter_mut())
+        {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_step_math() {
+        let mut opt = Sgd::new(0.5);
+        let mut p = vec![1.0, 2.0];
+        opt.step(&mut p, &[0.2, -0.4]);
+        assert!((p[0] - 0.9).abs() < 1e-15);
+        assert!((p[1] - 2.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::with_momentum(1.0, 0.5);
+        let mut p = vec![0.0];
+        opt.step(&mut p, &[1.0]); // v=1, p=-1
+        opt.step(&mut p, &[1.0]); // v=1.5, p=-2.5
+        assert!((p[0] + 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        let mut opt = Sgd::new(0.1);
+        let mut p = vec![0.0; 2];
+        opt.step(&mut p, &[1.0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-language parity: rust implementations vs JAX autodiff golden
+//! files (written by `python -m compile.gen_golden`, part of
+//! `make artifacts`).
+//!
+//! The inputs are deterministic pseudo-random arrays (SplitMix64,
+//! bit-exact in both languages), so any layout or
+//! math divergence between `ref.py` and `rust/src/butterfly` — or
+//! between jax autodiff and our hand-written adjoint chain — fails
+//! loudly here.
+
+use butterfly_net::butterfly::Butterfly;
+use butterfly_net::linalg::Mat;
+use butterfly_net::sketch::chain::sketch_loss_grad;
+
+fn golden_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("golden");
+    if dir.join("bfly_fwd.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: golden files missing — run `make artifacts` first");
+        None
+    }
+}
+
+/// Parse the `name / shape ... / values` format of gen_golden.py.
+fn load(dir: &std::path::Path, name: &str) -> (Vec<usize>, Vec<f64>) {
+    let text = std::fs::read_to_string(dir.join(format!("{name}.txt")))
+        .unwrap_or_else(|e| panic!("read golden {name}: {e}"));
+    let mut lines = text.lines();
+    let _name = lines.next().unwrap();
+    let shape: Vec<usize> = lines
+        .next()
+        .unwrap()
+        .strip_prefix("shape")
+        .unwrap()
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let values: Vec<f64> = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
+    (shape, values)
+}
+
+/// Deterministic input generator — must match gen_golden.det_array
+/// (SplitMix64 → uniform in [−1, 1); bit-exact across languages).
+fn det_array(len: usize, seed: u64) -> Vec<f64> {
+    (0..len)
+        .map(|i| {
+            let mut s = seed.wrapping_add(i as u64);
+            let z = butterfly_net::rng::splitmix64(&mut s);
+            (z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+        })
+        .collect()
+}
+
+fn butterfly_from_flat(n: usize, flat: &[f64]) -> Butterfly {
+    let mut b = Butterfly::identity(n);
+    b.set_flat_weights(flat);
+    b
+}
+
+#[test]
+fn golden_inputs_regenerate_identically() {
+    let Some(dir) = golden_dir() else { return };
+    let (shape, w) = load(&dir, "bfly_w");
+    assert_eq!(shape, vec![4, 8, 4]);
+    let local = det_array(w.len(), 1);
+    for (a, b) in w.iter().zip(local.iter()) {
+        assert!(a == b, "det_array drifted: {a} vs {b}");
+    }
+}
+
+#[test]
+fn butterfly_forward_matches_jax() {
+    let Some(dir) = golden_dir() else { return };
+    let (ws, w) = load(&dir, "bfly_w");
+    let (xs, x) = load(&dir, "bfly_x");
+    let (_, want_fwd) = load(&dir, "bfly_fwd");
+    let (_, want_t) = load(&dir, "bfly_fwd_t");
+    let n = ws[1] * 2;
+    let b = butterfly_from_flat(n, &w);
+    let xm = Mat::from_vec(xs[0], xs[1], x);
+    let got = b.forward(&xm);
+    for (g, w) in got.data().iter().zip(want_fwd.iter()) {
+        assert!((g - w).abs() < 1e-10, "forward: {g} vs {w}");
+    }
+    let got_t = b.forward_t(&xm);
+    for (g, w) in got_t.data().iter().zip(want_t.iter()) {
+        assert!((g - w).abs() < 1e-10, "transpose: {g} vs {w}");
+    }
+}
+
+#[test]
+fn butterfly_weight_grad_matches_jax_autodiff() {
+    let Some(dir) = golden_dir() else { return };
+    let (ws, w) = load(&dir, "bfly_w");
+    let (xs, x) = load(&dir, "bfly_x");
+    let (_, cot) = load(&dir, "bfly_cot");
+    let (_, want_grad) = load(&dir, "bfly_wgrad");
+    let n = ws[1] * 2;
+    let b = butterfly_from_flat(n, &w);
+    let xm = Mat::from_vec(xs[0], xs[1], x);
+    let cotm = Mat::from_vec(xs[0], xs[1], cot);
+    let tape = b.forward_tape(&xm);
+    let (_, grad) = b.vjp(&tape, &cotm);
+    let mut flat = Vec::new();
+    for lg in &grad.layers {
+        for quad in &lg.w {
+            flat.extend_from_slice(quad);
+        }
+    }
+    assert_eq!(flat.len(), want_grad.len());
+    for (i, (g, w)) in flat.iter().zip(want_grad.iter()).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-9 * (1.0 + w.abs()),
+            "wgrad[{i}]: rust {g} vs jax {w}"
+        );
+    }
+}
+
+#[test]
+fn sketch_chain_gradient_matches_jax_autodiff() {
+    let Some(dir) = golden_dir() else { return };
+    let (ws, w) = load(&dir, "sketch_w");
+    let (_, keep_f) = load(&dir, "sketch_keep");
+    let (xs, x) = load(&dir, "sketch_x");
+    let (_, want_loss) = load(&dir, "sketch_loss");
+    let (_, want_grad) = load(&dir, "sketch_wgrad");
+    let n = ws[1] * 2;
+    let keep: Vec<usize> = keep_f.iter().map(|&v| v as usize).collect();
+    let k = 2;
+    // rust: the same chain via TruncatedButterfly + adjoints
+    let b = butterfly_from_flat(n, &w);
+    let tb = butterfly_net::butterfly::TruncatedButterfly::new(b, keep);
+    let xm = Mat::from_vec(xs[0], xs[1], x);
+    // forward through the butterfly on Xᵀ rows
+    let (out, tape) = tb.forward_tape(&xm.t());
+    let a = out.t(); // SX
+    let cg = sketch_loss_grad(&xm, &a, k);
+    assert!(
+        (cg.loss - want_loss[0]).abs() < 1e-4 * (1.0 + want_loss[0]),
+        "loss: rust {} vs jax {}",
+        cg.loss,
+        want_loss[0]
+    );
+    let (_, bgrad) = tb.vjp(&tape, &cg.d_a.t());
+    let mut flat = Vec::new();
+    for lg in &bgrad.layers {
+        for quad in &lg.w {
+            flat.extend_from_slice(quad);
+        }
+    }
+    assert_eq!(flat.len(), want_grad.len());
+    // jax runs the same math with a 30-iteration subspace solver vs our
+    // exact eigh, so compare with a relative tolerance
+    let scale = want_grad
+        .iter()
+        .fold(0.0f64, |m, v| m.max(v.abs()))
+        .max(1e-12);
+    for (i, (g, w)) in flat.iter().zip(want_grad.iter()).enumerate() {
+        assert!(
+            (g - w).abs() < 2e-3 * scale,
+            "sketch wgrad[{i}]: rust {g} vs jax {w} (scale {scale})"
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! Integration: the PJRT runtime loads the real AOT artifacts and the
+//! numbers agree with the native rust implementations.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise, so plain
+//! `cargo test` works on a fresh checkout).
+
+use butterfly_net::butterfly::Butterfly;
+use butterfly_net::linalg::{max_abs_diff, Mat};
+use butterfly_net::rng::Rng;
+use butterfly_net::runtime::{Runtime, RuntimeHandle, Tensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn with_runtime(f: impl FnOnce(&mut Runtime)) {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).expect("open runtime");
+    f(&mut rt);
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    with_runtime(|rt| {
+        let names = rt.artifact_names();
+        for expected in [
+            "butterfly_fwd",
+            "replacement_fwd",
+            "classifier_fwd_dense",
+            "classifier_fwd_bfly",
+            "classifier_train_dense",
+            "classifier_train_bfly",
+            "ae_train_step",
+            "sketch_loss_grad",
+        ] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}");
+        }
+    });
+}
+
+#[test]
+fn butterfly_fwd_artifact_matches_native_rust() {
+    with_runtime(|rt| {
+        let spec = rt.spec("butterfly_fwd").unwrap().clone();
+        let (batch, n) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let mut rng = Rng::seed_from_u64(42);
+        let x = Mat::gaussian(batch, n, 1.0, &mut rng);
+        // weights in the shared flat layout
+        let b = Butterfly::gaussian(n, 0.5, &mut rng);
+        let w_tensor = Tensor::from_f64(&spec.inputs[1].shape, &b.flat_weights());
+        let outs = rt
+            .execute("butterfly_fwd", &[Tensor::from_mat(&x), w_tensor])
+            .expect("execute butterfly_fwd");
+        let got = outs[0].to_mat().unwrap();
+        let want = b.forward(&x);
+        // f32 artifact vs f64 native: tolerance scaled to magnitude
+        let scale = want.max_abs().max(1.0);
+        assert!(
+            max_abs_diff(&got, &want) < 1e-3 * scale,
+            "kernel-artifact vs native mismatch: {} (scale {scale})",
+            max_abs_diff(&got, &want)
+        );
+    });
+}
+
+#[test]
+fn classifier_train_dense_reduces_loss_via_pjrt() {
+    with_runtime(|rt| {
+        let spec = rt.spec("classifier_train_dense").unwrap().clone();
+        let mut rng = Rng::seed_from_u64(7);
+        // inputs: wh, hw, ro, x, y, lr
+        let mk = |i: usize, std: f64, rng: &mut Rng| {
+            let s = &spec.inputs[i];
+            Tensor::from_f64(&s.shape, &rng.gaussian_vec(s.num_elements(), std))
+        };
+        let mut wh = mk(0, 0.05, &mut rng);
+        let mut hw = mk(1, 0.05, &mut rng);
+        let ro = mk(2, 0.1, &mut rng);
+        let x = mk(3, 1.0, &mut rng);
+        let y_spec = &spec.inputs[4];
+        let (b, c) = (y_spec.shape[0], y_spec.shape[1]);
+        let mut y = vec![0.0f64; b * c];
+        for r in 0..b {
+            y[r * c + (r % c)] = 1.0;
+        }
+        let y = Tensor::from_f64(&y_spec.shape, &y);
+        let lr = Tensor::scalar_f32(0.1);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let outs = rt
+                .execute(
+                    "classifier_train_dense",
+                    &[
+                        wh.clone(),
+                        hw.clone(),
+                        ro.clone(),
+                        x.clone(),
+                        y.clone(),
+                        lr.clone(),
+                    ],
+                )
+                .expect("train step");
+            wh = outs[0].clone();
+            hw = outs[1].clone();
+            losses.push(outs[2].to_scalar().unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.9),
+            "PJRT training did not reduce loss: first {} last {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    });
+}
+
+#[test]
+fn ae_train_step_runs_and_converges_via_pjrt() {
+    with_runtime(|rt| {
+        let spec = rt.spec("ae_train_step").unwrap().clone();
+        let mut rng = Rng::seed_from_u64(9);
+        let mk = |i: usize, std: f64, rng: &mut Rng| {
+            let s = &spec.inputs[i];
+            Tensor::from_f64(&s.shape, &rng.gaussian_vec(s.num_elements(), std))
+        };
+        // d, e, w, keep, xt, yt, lr
+        let mut d = mk(0, 0.05, &mut rng);
+        let mut e = mk(1, 0.05, &mut rng);
+        let n = spec.inputs[4].shape[1];
+        let b = Butterfly::hadamard(n);
+        let mut w = Tensor::from_f64(&spec.inputs[2].shape, &b.flat_weights());
+        let l = spec.inputs[3].shape[0];
+        let keep = Tensor::from_indices(&(0..l).collect::<Vec<_>>());
+        let xt = mk(4, 1.0, &mut rng);
+        let lr = Tensor::scalar_f32(2e-4);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let outs = rt
+                .execute(
+                    "ae_train_step",
+                    &[
+                        d.clone(),
+                        e.clone(),
+                        w.clone(),
+                        keep.clone(),
+                        xt.clone(),
+                        xt.clone(),
+                        lr.clone(),
+                    ],
+                )
+                .expect("ae step");
+            d = outs[0].clone();
+            e = outs[1].clone();
+            w = outs[2].clone();
+            losses.push(outs[3].to_scalar().unwrap());
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.95),
+            "AE loss should fall: first {} last {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    });
+}
+
+#[test]
+fn sketch_loss_grad_artifact_is_finite_and_descends() {
+    with_runtime(|rt| {
+        let spec = rt.spec("sketch_loss_grad").unwrap().clone();
+        let mut rng = Rng::seed_from_u64(11);
+        let n = spec.inputs[2].shape[0];
+        let b = Butterfly::hadamard(n);
+        let w0 = b.flat_weights();
+        let w = Tensor::from_f64(&spec.inputs[0].shape, &w0);
+        let l = spec.inputs[1].shape[0];
+        let keep = Tensor::from_indices(&(0..l).map(|i| i * (n / l)).collect::<Vec<_>>());
+        let x = Tensor::from_f64(
+            &spec.inputs[2].shape,
+            &rng.gaussian_vec(spec.inputs[2].num_elements(), 1.0),
+        );
+        let outs = rt
+            .execute("sketch_loss_grad", &[w.clone(), keep.clone(), x.clone()])
+            .expect("sketch loss");
+        let loss0 = outs[0].to_scalar().unwrap();
+        let grad = outs[1].to_f64_vec();
+        assert!(loss0.is_finite() && loss0 > 0.0);
+        assert!(grad.iter().all(|g| g.is_finite()));
+        let gmax = grad.iter().fold(0.0f64, |m, g| m.max(g.abs())).max(1e-9);
+        let w1: Vec<f64> = w0
+            .iter()
+            .zip(grad.iter())
+            .map(|(a, g)| a - 1e-3 * g / gmax)
+            .collect();
+        let outs2 = rt
+            .execute(
+                "sketch_loss_grad",
+                &[Tensor::from_f64(&spec.inputs[0].shape, &w1), keep, x],
+            )
+            .unwrap();
+        let loss1 = outs2[0].to_scalar().unwrap();
+        assert!(loss1 < loss0, "no descent: {loss0} -> {loss1}");
+    });
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes_and_unknown_names() {
+    with_runtime(|rt| {
+        let bad = Tensor::from_f64(&[2, 2], &[0.0; 4]);
+        let err = rt
+            .execute("butterfly_fwd", &[bad.clone(), bad.clone()])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"));
+        let err2 = rt.execute("no_such_artifact", &[bad]).unwrap_err();
+        assert!(format!("{err2:#}").contains("unknown artifact"));
+    });
+}
+
+#[test]
+fn runtime_handle_actor_works_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = RuntimeHandle::spawn(dir).expect("spawn");
+    let names = handle.artifact_names().unwrap();
+    assert!(names.len() >= 8);
+    let spec = handle.spec("butterfly_fwd").unwrap().unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        let spec = spec.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(t);
+            let x = Tensor::from_f64(
+                &spec.inputs[0].shape,
+                &rng.gaussian_vec(spec.inputs[0].num_elements(), 1.0),
+            );
+            let w = Tensor::from_f64(
+                &spec.inputs[1].shape,
+                &rng.gaussian_vec(spec.inputs[1].num_elements(), 0.3),
+            );
+            let outs = h.execute("butterfly_fwd", vec![x, w]).unwrap();
+            assert_eq!(outs[0].shape(), spec.outputs[0].shape.as_slice());
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    handle.shutdown();
+}

@@ -1,0 +1,124 @@
+//! Integration: the §6 sketch-learning pipeline end to end — data
+//! generation → preprocessing → training → Err_Te evaluation, plus the
+//! cross-family orderings the paper reports.
+
+use butterfly_net::experiments::sketch_common::{evaluate_methods, tiny_dataset};
+use butterfly_net::rng::Rng;
+use butterfly_net::sketch::{
+    app_te, err_te, sketched_rank_k, train_sketch, ButterflySketch, CwSketch, GaussianSketch,
+    LearnedDenseN, Sketch, TrainOpts,
+};
+
+#[test]
+fn full_pipeline_err_ordering() {
+    let ds = tiny_dataset(100);
+    let rows = evaluate_methods(&ds, 10, 5, 200, 3).unwrap();
+    let get = |n: &str| rows.iter().find(|(m, _)| m == n).unwrap().1;
+    let (bfly, sparse) = (get("butterfly-learned"), get("sparse-learned"));
+    let (cw, gauss) = (get("cw-random"), get("gaussian-random"));
+    // every error is a valid Err_Te
+    for (m, e) in &rows {
+        assert!(e.is_finite() && *e >= -1e-6, "{m}: {e}");
+    }
+    // paper ordering: learned ≤ random (with tolerance for the tiny set)
+    assert!(
+        bfly <= cw * 1.05 && bfly <= gauss * 1.05,
+        "bfly {bfly} cw {cw} gauss {gauss}"
+    );
+    assert!(sparse <= cw * 1.4 + 1e-6, "sparse {sparse} cw {cw}");
+}
+
+#[test]
+fn sketched_rank_k_rows_live_in_sketch_rowspan() {
+    // structural invariant of Algorithm 1: S_k(X) = Z·(SX) for some Z,
+    // i.e. its rows are linear combinations of the sketched rows.
+    let mut rng = Rng::seed_from_u64(7);
+    let x = butterfly_net::linalg::Mat::gaussian(24, 18, 1.0, &mut rng);
+    let s = GaussianSketch::sample(6, 24, &mut rng);
+    let approx = sketched_rank_k(&x, &s, 3);
+    let sx = s.apply(&x); // 6×18
+                          // residual of projecting approx rows onto rowspan(SX) must be ~0
+    let q = butterfly_net::linalg::qr_thin(&sx.t()).q; // 18×6
+    let proj = approx.matmul(&q).matmul_t(&q);
+    let resid = (&approx - &proj).fro2();
+    assert!(resid < 1e-12 * (1.0 + approx.fro2()), "resid {resid}");
+}
+
+#[test]
+fn training_improves_each_learnable_family() {
+    let ds = tiny_dataset(200);
+    let k = 4;
+    let app = app_te(&ds.test, k);
+    let mut rng = Rng::seed_from_u64(8);
+    // butterfly
+    {
+        let mut s = ButterflySketch::init(8, ds.n, &mut rng);
+        let before = err_te(&ds.test, &s, k, app);
+        train_sketch(
+            &mut s,
+            &ds.train,
+            &[],
+            &TrainOpts {
+                k,
+                iters: 200,
+                lr: 5e-3,
+                ..Default::default()
+            },
+        );
+        let after = err_te(&ds.test, &s, k, app);
+        assert!(after < before, "butterfly {before} -> {after}");
+    }
+    // dense-N
+    {
+        let mut s = LearnedDenseN::init(8, ds.n, 4, &mut rng);
+        let before = err_te(&ds.test, &s, k, app);
+        train_sketch(
+            &mut s,
+            &ds.train,
+            &[],
+            &TrainOpts {
+                k,
+                iters: 200,
+                lr: 2e-2,
+                ..Default::default()
+            },
+        );
+        let after = err_te(&ds.test, &s, k, app);
+        assert!(after < before, "dense-N {before} -> {after}");
+    }
+}
+
+#[test]
+fn cw_sketch_is_unbiased_isometry_in_expectation() {
+    // E[‖Sx‖²] = ‖x‖² for CountSketch — sanity of the baseline.
+    let mut rng = Rng::seed_from_u64(9);
+    let n = 128;
+    let x = butterfly_net::linalg::Mat::gaussian(n, 1, 1.0, &mut rng).t(); // 1×n... rows
+    let xv = butterfly_net::linalg::Mat::from_vec(n, 1, x.data().to_vec());
+    let norm2 = xv.fro2();
+    let mut mean = 0.0;
+    let trials = 200;
+    for _ in 0..trials {
+        let s = CwSketch::sample(16, n, &mut rng);
+        mean += s.apply(&xv).fro2();
+    }
+    mean /= trials as f64;
+    assert!(
+        (mean - norm2).abs() < 0.15 * norm2,
+        "E‖Sx‖²={mean} vs ‖x‖²={norm2}"
+    );
+}
+
+#[test]
+fn err_te_definition_consistency() {
+    // Err_Te(identity-like big sketch) must be ≈ 0: the sketch spans
+    // everything so S_k(X) = X_k and the PCA term cancels.
+    let ds = tiny_dataset(300);
+    let k = 4;
+    let app = app_te(&ds.test, k);
+    let mut rng = Rng::seed_from_u64(10);
+    // ℓ = n ⇒ rowspan(SX) = rowspan(X) (generic S)
+    let s = GaussianSketch::sample(ds.n, ds.n, &mut rng);
+    let err = err_te(&ds.test, &s, k, app);
+    assert!(err.abs() < 1e-6 * (1.0 + app), "err {err}");
+}

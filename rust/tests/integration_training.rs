@@ -1,0 +1,159 @@
+//! Integration: full training pipelines across modules — §5.1 proxy
+//! classifiers, §5.2 auto-encoders against the Theorem-1/PCA floors,
+//! §5.3 two-phase learning, all through the public API.
+
+use butterfly_net::autoencoder::landscape::optimal_loss_fixed_b;
+use butterfly_net::autoencoder::{train_two_phase, ButterflyAe, DenseAe, TwoPhaseOpts};
+use butterfly_net::data::classif::{generate, split, ClassifOpts};
+use butterfly_net::data::lowrank_gaussian::rank_r_gaussian;
+use butterfly_net::linalg::pca_error;
+use butterfly_net::model::{Mlp, MlpConfig};
+use butterfly_net::rng::Rng;
+use butterfly_net::train::{Adam, Optimizer};
+
+#[test]
+fn butterfly_classifier_matches_dense_at_fraction_of_params() {
+    let mut rng = Rng::seed_from_u64(1);
+    let data = generate(
+        &ClassifOpts {
+            dim: 64,
+            classes: 6,
+            per_class: 50,
+            intrinsic: 6,
+            noise: 0.3,
+        },
+        &mut rng,
+    );
+    let (tr, te) = split(&data, 220);
+    let mut accs = Vec::new();
+    let mut params = Vec::new();
+    for butterfly in [false, true] {
+        let cfg = MlpConfig {
+            input_dim: 64,
+            hidden_dim: 128,
+            classes: 6,
+            butterfly_head: butterfly,
+            head_out: 128,
+        };
+        let mut rng_m = Rng::seed_from_u64(2);
+        let mut m = Mlp::new(&cfg, &mut rng_m);
+        let rep = m.train(&tr, &te, 18, 32, 1e-3, true, &mut rng_m);
+        accs.push(*rep.test_acc.last().unwrap());
+        params.push(m.head.num_params());
+    }
+    let (dense_acc, bfly_acc) = (accs[0], accs[1]);
+    assert!(params[1] * 3 < params[0], "{params:?}");
+    assert!(dense_acc > 0.6, "dense {dense_acc}");
+    assert!(
+        bfly_acc > dense_acc - 0.15,
+        "butterfly {bfly_acc} vs dense {dense_acc}"
+    );
+}
+
+#[test]
+fn butterfly_ae_within_pca_factor_and_beats_param_matched_info() {
+    // rank-8 Gaussian, k=8 ⇒ Δ_k ≈ 0; the AE must reach ≈ 0 too.
+    let mut rng = Rng::seed_from_u64(3);
+    let x = rank_r_gaussian(64, 80, 8, &mut rng);
+    let k = 8;
+    let mut ae = ButterflyAe::new(64, 32, k, 64, &mut rng);
+    let mut opt = Adam::new(3e-3);
+    let mut p = ae.params();
+    for _ in 0..900 {
+        let g = ae.grad(&x, &x);
+        opt.step(&mut p, &ButterflyAe::flat_grads(&g));
+        ae.set_params(&p);
+    }
+    let loss = ae.loss(&x, &x);
+    let scale = x.fro2();
+    assert!(
+        loss < 0.02 * scale,
+        "AE failed to capture a rank-k matrix: loss {loss} scale {scale}"
+    );
+}
+
+#[test]
+fn dense_and_butterfly_ae_agree_on_easy_data() {
+    let mut rng = Rng::seed_from_u64(4);
+    let x = rank_r_gaussian(32, 40, 4, &mut rng);
+    let k = 4;
+    // dense AE
+    let mut dae = DenseAe::new(32, k, 32, &mut rng);
+    let mut opt = Adam::new(5e-3);
+    let mut p = dae.params();
+    for _ in 0..800 {
+        let (_, gd, ge) = dae.grad(&x, &x);
+        let mut g = gd.data().to_vec();
+        g.extend_from_slice(ge.data());
+        opt.step(&mut p, &g);
+        dae.set_params(&p);
+    }
+    // butterfly AE
+    let mut bae = ButterflyAe::new(32, 16, k, 32, &mut rng);
+    let mut opt2 = Adam::new(5e-3);
+    let mut p2 = bae.params();
+    for _ in 0..800 {
+        let g = bae.grad(&x, &x);
+        opt2.step(&mut p2, &ButterflyAe::flat_grads(&g));
+        bae.set_params(&p2);
+    }
+    let scale = x.fro2();
+    let (dl, bl) = (dae.loss(&x, &x), bae.loss(&x, &x));
+    assert!(dl < 0.02 * scale, "dense AE loss {dl}");
+    assert!(bl < 0.02 * scale, "butterfly AE loss {bl}");
+}
+
+#[test]
+fn two_phase_guarantee_holds_end_to_end() {
+    // Theorem 1 + Proposition 4.1: phase 1 reaches the fixed-B optimum;
+    // phase 2 only improves; everything ≥ Δ_k.
+    let mut rng = Rng::seed_from_u64(5);
+    let x = {
+        let u = butterfly_net::linalg::Mat::gaussian(32, 5, 1.0, &mut rng);
+        let v = butterfly_net::linalg::Mat::gaussian(5, 40, 1.0, &mut rng);
+        let mut x = u.matmul(&v);
+        x.add_scaled(
+            &butterfly_net::linalg::Mat::gaussian(32, 40, 0.05, &mut rng),
+            1.0,
+        );
+        x
+    };
+    let k = 3;
+    let mut ae = ButterflyAe::new(32, 12, k, 32, &mut rng);
+    let fixed_b_opt = optimal_loss_fixed_b(&x, &x, &ae.b.dense(), k);
+    let log = train_two_phase(
+        &mut ae,
+        &x,
+        &x,
+        &TwoPhaseOpts {
+            phase1_iters: 3000,
+            phase2_iters: 800,
+            lr1: 8e-3,
+            lr2: 2e-3,
+            log_every: 100,
+        },
+    );
+    let delta_k = pca_error(&x, k);
+    assert!(log.phase1_final >= fixed_b_opt - 1e-6);
+    assert!(
+        log.phase1_final <= fixed_b_opt * 1.1,
+        "phase1 {} vs prediction {}",
+        log.phase1_final,
+        fixed_b_opt
+    );
+    assert!(log.phase2_final <= log.phase1_final + 1e-9);
+    assert!(log.phase2_final >= delta_k - 1e-6);
+}
+
+#[test]
+fn training_rejects_nan_poisoning() {
+    // failure injection: a NaN in the data must not silently produce
+    // NaN-trained weights that pass as "converged".
+    let mut rng = Rng::seed_from_u64(6);
+    let mut x = rank_r_gaussian(16, 16, 2, &mut rng);
+    x[(3, 3)] = f64::NAN;
+    let ae = ButterflyAe::new(16, 8, 2, 16, &mut rng);
+    let g = ae.grad(&x, &x);
+    assert!(!g.loss.is_finite(), "loss must expose the NaN");
+    assert!(!x.is_finite());
+}

@@ -1,0 +1,240 @@
+//! Property tests for the coordinator invariants (DESIGN.md §7):
+//! conservation, batch bound, deadline, backpressure — over randomised
+//! request patterns, engine latencies and batcher configurations.
+
+use butterfly_net::coordinator::{Batcher, BatcherConfig, Coordinator, Engine, NativeHeadEngine};
+use butterfly_net::linalg::Mat;
+use butterfly_net::metrics::Metrics;
+use butterfly_net::model::Head;
+use butterfly_net::rng::Rng;
+use butterfly_net::testing::{forall, gen, PropConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Engine with configurable latency that records every batch size.
+struct Recorder {
+    dim: usize,
+    latency: Duration,
+    batch_sizes: Arc<std::sync::Mutex<Vec<usize>>>,
+    calls: Arc<AtomicUsize>,
+}
+
+impl Engine for Recorder {
+    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.batch_sizes.lock().unwrap().push(x.rows());
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        Ok(x.clone())
+    }
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+    fn output_dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[derive(Debug)]
+struct Scenario {
+    max_batch: usize,
+    queue_cap: usize,
+    n_threads: usize,
+    reqs_per_thread: usize,
+    latency_us: u64,
+}
+
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    Scenario {
+        max_batch: gen::range(rng, 1, 12),
+        queue_cap: gen::range(rng, 8, 128),
+        n_threads: gen::range(rng, 1, 6),
+        reqs_per_thread: gen::range(rng, 1, 15),
+        latency_us: gen::range(rng, 0, 300) as u64,
+    }
+}
+
+#[test]
+fn conservation_and_batch_bound() {
+    let cfg = PropConfig {
+        cases: 12,
+        ..Default::default()
+    };
+    forall("coordinator-conservation", &cfg, random_scenario, |s| {
+        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let engine = Recorder {
+            dim: 3,
+            latency: Duration::from_micros(s.latency_us),
+            batch_sizes: Arc::clone(&sizes),
+            calls: Arc::clone(&calls),
+        };
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "prop",
+            Box::new(engine),
+            BatcherConfig {
+                max_batch: s.max_batch,
+                max_wait: Duration::from_micros(200),
+                queue_cap: s.queue_cap,
+            },
+            Arc::clone(&metrics),
+        );
+        let b = Arc::new(b);
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let answered = Arc::new(AtomicUsize::new(0));
+        let rejected = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for t in 0..s.n_threads {
+                let b = Arc::clone(&b);
+                let accepted = Arc::clone(&accepted);
+                let answered = Arc::clone(&answered);
+                let rejected = Arc::clone(&rejected);
+                scope.spawn(move || {
+                    for i in 0..s.reqs_per_thread {
+                        match b.submit(vec![t as f64, i as f64, 0.0]) {
+                            Ok(rx) => {
+                                accepted.fetch_add(1, Ordering::SeqCst);
+                                let out = rx.recv().unwrap().unwrap();
+                                // response corresponds to this request
+                                if out[0] == t as f64 && out[1] == i as f64 {
+                                    answered.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(_) => {
+                                rejected.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let total = s.n_threads * s.reqs_per_thread;
+        let (acc, ans, rej) = (
+            accepted.load(Ordering::SeqCst),
+            answered.load(Ordering::SeqCst),
+            rejected.load(Ordering::SeqCst),
+        );
+        if acc + rej != total {
+            return Err(format!("conservation: {acc}+{rej} != {total}"));
+        }
+        if ans != acc {
+            return Err(format!(
+                "every accepted request answered exactly once: {ans} != {acc}"
+            ));
+        }
+        // batch bound
+        let sizes = sizes.lock().unwrap();
+        if let Some(&max) = sizes.iter().max() {
+            if max > s.max_batch {
+                return Err(format!("batch bound: {max} > {}", s.max_batch));
+            }
+        }
+        let batched: usize = sizes.iter().sum();
+        if batched != acc {
+            return Err(format!("rows batched {batched} != accepted {acc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_conservation_across_variants() {
+    let cfg = PropConfig {
+        cases: 8,
+        ..Default::default()
+    };
+    forall(
+        "router-conservation",
+        &cfg,
+        |rng| {
+            (
+                gen::range(rng, 1, 4),  // variants
+                gen::range(rng, 4, 24), // requests
+                rng.next_u64(),
+            )
+        },
+        |&(n_variants, n_reqs, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut c = Coordinator::new();
+            for v in 0..n_variants {
+                c.register(
+                    &format!("v{v}"),
+                    Box::new(NativeHeadEngine::new(Head::dense(4, 2, &mut rng))),
+                    BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_micros(100),
+                        queue_cap: 64,
+                    },
+                );
+            }
+            let c = Arc::new(c);
+            let ok = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|s| {
+                for i in 0..n_reqs {
+                    let c = Arc::clone(&c);
+                    let ok = Arc::clone(&ok);
+                    s.spawn(move || {
+                        let variant = format!("v{}", i % n_variants);
+                        if c.infer(&variant, vec![1.0, 2.0, 3.0, 4.0]).is_ok() {
+                            ok.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            });
+            let responses = c.metrics.responses.get() as usize;
+            let got = ok.load(Ordering::SeqCst);
+            if got != n_reqs {
+                return Err(format!("{got}/{n_reqs} succeeded"));
+            }
+            if responses != n_reqs {
+                return Err(format!("metrics responses {responses} != {n_reqs}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deadline_bounds_queue_wait() {
+    // With max_batch never reached, every request must still be
+    // dispatched within ~max_wait + engine time.
+    let cfg = PropConfig {
+        cases: 6,
+        ..Default::default()
+    };
+    forall(
+        "deadline",
+        &cfg,
+        |rng| gen::range(rng, 1, 8) as u64, // max_wait ms
+        |&wait_ms| {
+            let metrics = Arc::new(Metrics::new());
+            let b = Batcher::spawn(
+                "deadline",
+                Box::new(Recorder {
+                    dim: 1,
+                    latency: Duration::ZERO,
+                    batch_sizes: Arc::new(std::sync::Mutex::new(Vec::new())),
+                    calls: Arc::new(AtomicUsize::new(0)),
+                }),
+                BatcherConfig {
+                    max_batch: 1_000_000,
+                    max_wait: Duration::from_millis(wait_ms),
+                    queue_cap: 16,
+                },
+                Arc::clone(&metrics),
+            );
+            let t0 = std::time::Instant::now();
+            let rx = b.submit(vec![1.0]).map_err(|e| e.to_string())?;
+            rx.recv().unwrap().map_err(|e| e)?;
+            let waited = t0.elapsed();
+            let bound = Duration::from_millis(wait_ms) + Duration::from_millis(250);
+            if waited > bound {
+                return Err(format!("waited {waited:?} > bound {bound:?}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,235 @@
+//! Property tests over the math substrate and the butterfly operator:
+//! algebraic identities on random shapes, seeds and scales.
+
+use butterfly_net::butterfly::{Butterfly, TruncatedButterfly};
+use butterfly_net::linalg::{eigh, max_abs_diff, qr_thin, svd_thin, Mat};
+use butterfly_net::rng::Rng;
+use butterfly_net::sketch::sketched_rank_k_from;
+use butterfly_net::testing::{forall, gen, PropConfig};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_qr_reconstructs() {
+    forall(
+        "qr-reconstruct",
+        &cfg(24),
+        |rng| {
+            let n = gen::range(rng, 1, 12);
+            let m = n + gen::range(rng, 0, 20);
+            (m, n, rng.next_u64())
+        },
+        |&(m, n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let a = Mat::gaussian(m, n, 1.0, &mut rng);
+            let f = qr_thin(&a);
+            let err = max_abs_diff(&f.q.matmul(&f.r), &a);
+            if err > 1e-8 {
+                return Err(format!("‖QR−A‖∞ = {err}"));
+            }
+            let orth = max_abs_diff(&f.q.t_matmul(&f.q), &Mat::eye(n));
+            if orth > 1e-8 {
+                return Err(format!("‖QᵀQ−I‖∞ = {orth}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_svd_eigh_consistent() {
+    forall(
+        "svd-eigh",
+        &cfg(16),
+        |rng| {
+            let m = gen::range(rng, 2, 20);
+            let n = gen::range(rng, 2, 20);
+            (m, n, rng.next_u64())
+        },
+        |&(m, n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let a = Mat::gaussian(m, n, 1.0, &mut rng);
+            // σᵢ(A)² must equal λᵢ(AᵀA)
+            let s = svd_thin(&a).s;
+            let w = eigh(&a.t_matmul(&a)).w;
+            for i in 0..n.min(m) {
+                let lhs = s[i] * s[i];
+                let rhs = w[i].max(0.0);
+                if (lhs - rhs).abs() > 1e-6 * (1.0 + rhs) {
+                    return Err(format!("σ{i}²={lhs} vs λ{i}={rhs}"));
+                }
+            }
+            // Frobenius identity: ‖A‖² = Σσᵢ²
+            let fro = a.fro2();
+            let sum: f64 = s.iter().map(|v| v * v).sum();
+            if (fro - sum).abs() > 1e-6 * (1.0 + fro) {
+                return Err(format!("‖A‖²={fro} vs Σσ²={sum}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_butterfly_forward_equals_dense_and_adjoint() {
+    forall(
+        "butterfly-dense-adjoint",
+        &cfg(20),
+        |rng| (gen::pow2(rng, 2, 64), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let b = Butterfly::gaussian(n, 1.0, &mut rng);
+            let d = b.dense();
+            let x = Mat::gaussian(3, n, 1.0, &mut rng);
+            let err = max_abs_diff(&b.forward(&x), &x.matmul(&d.t()));
+            if err > 1e-9 * (1.0 + d.max_abs()) {
+                return Err(format!("forward≠dense: {err}"));
+            }
+            // adjoint: ⟨Bx, y⟩ = ⟨x, Bᵀy⟩
+            let y = Mat::gaussian(3, n, 1.0, &mut rng);
+            let lhs: f64 = b
+                .forward(&x)
+                .data()
+                .iter()
+                .zip(y.data())
+                .map(|(a, b)| a * b)
+                .sum();
+            let rhs: f64 = x
+                .data()
+                .iter()
+                .zip(b.forward_t(&y).data())
+                .map(|(a, b)| a * b)
+                .sum();
+            if (lhs - rhs).abs() > 1e-6 * (1.0 + lhs.abs()) {
+                return Err(format!("adjoint: {lhs} vs {rhs}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_butterfly_param_bound() {
+    // Appendix F: effective params ≤ 2n·log2(ℓ) + 6n for EVERY kept set.
+    forall(
+        "appendix-f-bound",
+        &cfg(30),
+        |rng| {
+            let n = gen::pow2(rng, 4, 512);
+            let l = gen::range(rng, 1, n);
+            (n, l, rng.next_u64())
+        },
+        |&(n, l, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let j = TruncatedButterfly::fjlt(n, l, &mut rng);
+            let eff = j.effective_params();
+            let bound = j.param_bound();
+            if eff > bound {
+                return Err(format!("n={n} ℓ={l}: eff {eff} > bound {bound}"));
+            }
+            if eff > j.net().num_params() {
+                return Err("effective > total".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_butterfly_vjp_consistent_with_fd() {
+    forall(
+        "butterfly-vjp-fd",
+        &cfg(8),
+        |rng| (gen::pow2(rng, 2, 16), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let b = Butterfly::gaussian(n, 1.0, &mut rng);
+            let x = Mat::gaussian(2, n, 1.0, &mut rng);
+            let cot = Mat::gaussian(2, n, 1.0, &mut rng);
+            let tape = b.forward_tape(&x);
+            let (_, grad) = b.vjp(&tape, &cot);
+            let loss = |b: &Butterfly| -> f64 { b.forward(&x).hadamard(&cot).data().iter().sum() };
+            // check a random weight coordinate per case
+            let li = rng.below(b.depth());
+            let pi = rng.below(n / 2);
+            let qi = rng.below(4);
+            let h = 1e-6;
+            let mut bp = b.clone();
+            let mut bm = b.clone();
+            bp.layers_mut()[li].weights_mut()[pi][qi] += h;
+            bm.layers_mut()[li].weights_mut()[pi][qi] -= h;
+            let fd = (loss(&bp) - loss(&bm)) / (2.0 * h);
+            let got = grad.layers[li].w[pi][qi];
+            if (fd - got).abs() > 1e-4 * (1.0 + fd.abs()) {
+                return Err(format!("layer {li} pair {pi} w{qi}: fd {fd} vs {got}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sketched_rank_k_sandwich() {
+    // Δ_k ≤ ‖X − S_k(X)‖² always; equality when rowspan is full.
+    forall(
+        "sketch-sandwich",
+        &cfg(16),
+        |rng| {
+            let n = gen::range(rng, 6, 24);
+            let d = gen::range(rng, 6, 24);
+            let l = gen::range(rng, 2, d.saturating_sub(1).max(2));
+            let k = gen::range(rng, 1, l);
+            (n, d, l, k, rng.next_u64())
+        },
+        |&(n, d, l, k, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let x = Mat::gaussian(n, d, 1.0, &mut rng);
+            let s = Mat::gaussian(l, n, 1.0, &mut rng);
+            let approx = sketched_rank_k_from(&x, &s.matmul(&x), k);
+            let err = (&x - &approx).fro2();
+            let delta = butterfly_net::linalg::pca_error(&x, k);
+            if err < delta - 1e-7 * (1.0 + delta) {
+                return Err(format!("beat PCA: err {err} < Δ_k {delta}"));
+            }
+            // rank constraint
+            let rank_err = butterfly_net::linalg::pca_error(&approx, k);
+            if rank_err > 1e-7 * (1.0 + approx.fro2()) {
+                return Err(format!("rank > k: residual {rank_err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fjlt_jl_property() {
+    // ‖Jx‖ concentrates around ‖x‖ over FJLT draws.
+    forall(
+        "fjlt-jl",
+        &cfg(6),
+        |rng| {
+            let n = gen::pow2(rng, 64, 256);
+            (n, rng.next_u64())
+        },
+        |&(n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let l = n / 4;
+            let x = Mat::gaussian(1, n, 1.0, &mut rng);
+            let mut ratios = Vec::new();
+            for _ in 0..20 {
+                let j = TruncatedButterfly::fjlt(n, l, &mut rng);
+                ratios.push(j.forward(&x).fro2() / x.fro2());
+            }
+            let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+            if (mean - 1.0).abs() > 0.3 {
+                return Err(format!("mean ratio {mean}"));
+            }
+            Ok(())
+        },
+    );
+}
