@@ -1,0 +1,193 @@
+//! End-to-end model-store flow: **train → save → restart → serve → swap**.
+//!
+//! ```bash
+//! cargo run --release --example store_e2e
+//! ```
+//!
+//! 1. Train two classification heads (dense baseline and the §3.2
+//!    butterfly replacement) against the same random linear teacher.
+//! 2. Publish both to a model store as `head@v1` (dense) and `head@v2`
+//!    (butterfly), and record the pre-save outputs on a probe batch.
+//! 3. Drop every in-memory model ("restart"), reopen the store through
+//!    a fresh `ModelRegistry`, and serve `head` (latest) behind the
+//!    coordinator's TCP front-end.
+//! 4. Verify the restored model's outputs are **bitwise identical** to
+//!    the pre-save outputs.
+//! 5. While concurrent clients hammer the variant, hot-swap it from
+//!    v2 to v1 over the wire (`SWAP` verb) and check conservation:
+//!    every accepted request is answered exactly once, by exactly one
+//!    of the two versions.
+
+use anyhow::{anyhow, bail, Result};
+use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator};
+use butterfly_net::linalg::Mat;
+use butterfly_net::model::{fit_head_to_teacher, Head};
+use butterfly_net::rng::Rng;
+use butterfly_net::store::{Model, ModelRegistry};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+const N_IN: usize = 64;
+const N_OUT: usize = 32;
+
+fn main() -> Result<()> {
+    let dir = std::env::temp_dir().join(format!("bfly-store-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = Rng::seed_from_u64(0);
+
+    // ---- 1. train ------------------------------------------------------
+    println!("== train: dense + butterfly heads ({N_IN}→{N_OUT}) ==");
+    let teacher = Mat::gaussian(N_OUT, N_IN, 1.0 / (N_IN as f64).sqrt(), &mut rng);
+    let mut dense = Head::dense(N_IN, N_OUT, &mut rng);
+    let mut bfly = Head::butterfly(N_IN, N_OUT, &mut rng);
+    let mse_d = fit_head_to_teacher(&mut dense, &teacher, 300, 32, &mut rng);
+    let mse_b = fit_head_to_teacher(&mut bfly, &teacher, 300, 32, &mut rng);
+    println!(
+        "  dense     mse {mse_d:.5}  ({} params)\n  butterfly mse {mse_b:.5}  ({} params)",
+        dense.num_params(),
+        bfly.num_params()
+    );
+
+    // probe outputs recorded *before* saving — the bitwise reference
+    let probe = Mat::gaussian(8, N_IN, 1.0, &mut rng);
+    let want_dense = dense.forward(&probe);
+    let want_bfly = bfly.forward(&probe);
+
+    // ---- 2. save -------------------------------------------------------
+    println!("\n== save: publish head@v1 (dense), head@v2 (butterfly) to {} ==", dir.display());
+    {
+        let mut reg = ModelRegistry::open(&dir)?;
+        let p1 = reg.save("head", 1, &Model::Head(dense))?;
+        let p2 = reg.save("head", 2, &Model::Head(bfly))?;
+        for p in [&p1, &p2] {
+            println!("  {} ({} bytes)", p.display(), std::fs::metadata(p)?.len());
+        }
+    } // registry and both trained heads dropped here — the "restart"
+
+    // ---- 3. restart + serve --------------------------------------------
+    println!("\n== restart: fresh registry scan, serve behind the coordinator ==");
+    let reg = ModelRegistry::open(&dir)?;
+    print!("{}", reg.describe());
+    let mut coordinator = Coordinator::new();
+    coordinator.register_store(
+        &reg,
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(500),
+            queue_cap: 4096,
+        },
+    )?;
+    let coordinator = Arc::new(coordinator);
+
+    // ---- 4. bitwise identity after the round trip ----------------------
+    let restored_b = reg.load("head")?; // latest = v2 = butterfly
+    let restored_d = reg.load("head@v1")?;
+    for (name, restored, want) in [
+        ("butterfly head@v2", &restored_b, &want_bfly),
+        ("dense head@v1", &restored_d, &want_dense),
+    ] {
+        let got = restored.forward(&probe);
+        let identical = got.shape() == want.shape()
+            && got
+                .data()
+                .iter()
+                .zip(want.data().iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !identical {
+            bail!("{name}: restored outputs differ from pre-save outputs");
+        }
+        println!("  {name}: save → load → forward is bitwise identical ✓");
+    }
+
+    // ---- 5. hot swap under concurrent load -----------------------------
+    println!("\n== swap: v2 → v1 over the wire while clients infer ==");
+    let server = serve(Arc::clone(&coordinator), "127.0.0.1:0")?;
+    let addr = server.addr;
+    let v2_hits = Arc::new(AtomicUsize::new(0));
+    let v1_hits = Arc::new(AtomicUsize::new(0));
+    let lost = Arc::new(AtomicUsize::new(0));
+    // classify each response against both references computed locally
+    let x_probe: Vec<f64> = probe.row(0).to_vec();
+    let y_v2: Vec<f64> = want_bfly.row(0).to_vec();
+    let y_v1: Vec<f64> = want_dense.row(0).to_vec();
+    let n_clients = 4;
+    let per_client = 200;
+    let mut handles = Vec::new();
+    for _ in 0..n_clients {
+        let (x_probe, y_v1, y_v2) = (x_probe.clone(), y_v1.clone(), y_v2.clone());
+        let (v1_hits, v2_hits, lost) = (
+            Arc::clone(&v1_hits),
+            Arc::clone(&v2_hits),
+            Arc::clone(&lost),
+        );
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let stream = TcpStream::connect(addr)?;
+            let mut w = stream.try_clone()?;
+            let mut r = BufReader::new(stream);
+            for _ in 0..per_client {
+                let mut line = String::from("INFER head");
+                for v in &x_probe {
+                    line.push_str(&format!(" {v}"));
+                }
+                line.push('\n');
+                w.write_all(line.as_bytes())?;
+                let mut resp = String::new();
+                r.read_line(&mut resp)?;
+                let toks: Vec<&str> = resp.split_whitespace().collect();
+                if toks.first() != Some(&"OK") {
+                    lost.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                let out: Vec<f64> = toks[1..].iter().filter_map(|t| t.parse().ok()).collect();
+                let close = |a: &[f64], b: &[f64]| {
+                    a.len() == b.len()
+                        && a.iter().zip(b).all(|(p, q)| (p - q).abs() < 1e-9)
+                };
+                if close(&out, &y_v2) {
+                    v2_hits.fetch_add(1, Ordering::SeqCst);
+                } else if close(&out, &y_v1) {
+                    v1_hits.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    lost.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Ok(())
+        }));
+    }
+    // let some traffic land on v2, then swap to v1 over the wire
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    {
+        let stream = TcpStream::connect(addr)?;
+        let mut w = stream.try_clone()?;
+        let mut r = BufReader::new(stream);
+        w.write_all(b"SWAP head head@v1\n")?;
+        let mut resp = String::new();
+        r.read_line(&mut resp)?;
+        if resp.trim() != "OK" {
+            bail!("swap refused: {resp}");
+        }
+        println!("  SWAP head head@v1 → OK");
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("client panicked"))??;
+    }
+    let (a, b, l) = (
+        v2_hits.load(Ordering::SeqCst),
+        v1_hits.load(Ordering::SeqCst),
+        lost.load(Ordering::SeqCst),
+    );
+    println!(
+        "  answered by v2: {a}, by v1: {b}, lost/garbled: {l} (total {})",
+        n_clients * per_client
+    );
+    if l != 0 || a + b != n_clients * per_client {
+        bail!("conservation violated across the hot swap");
+    }
+    println!("\nmetrics:\n{}", coordinator.metrics.snapshot());
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("store e2e OK");
+    Ok(())
+}

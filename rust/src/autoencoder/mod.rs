@@ -14,6 +14,11 @@
 //! Conventions: matrices follow the paper (`X : n×d` — columns are
 //! samples; `Y : m×d`). Internally the butterfly operates on `Xᵀ`
 //! (rows are vectors); the trainers cache the transpose.
+//!
+//! Both autoencoders persist through [`crate::store`] (kinds
+//! `dense-ae` / `butterfly-ae`); the store's serving engine transposes
+//! at the boundary, so restored AEs serve the coordinator's
+//! rows-are-samples convention unchanged.
 
 mod butterfly_ae;
 mod dense_ae;

@@ -15,6 +15,11 @@
 //! ([`TruncatedButterfly::fjlt`]), the operator is a fast
 //! Johnson–Lindenstrauss transform: `‖J x‖ ≈ ‖x‖` w.h.p. — the property
 //! Proposition 3.1 builds on and `experiments::prop31` measures.
+//!
+//! Persistence: [`Butterfly`], [`TruncatedButterfly`] and single
+//! [`ButterflyLayer`]s round-trip bitwise through the checkpoint
+//! format in [`crate::store`] — `2n log₂ n` weights on disk, not
+//! `n²`, which is what makes serving cold-starts cheap (DESIGN.md §8).
 
 mod layer;
 mod network;

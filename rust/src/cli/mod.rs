@@ -4,6 +4,10 @@
 //! Grammar: `butterfly-net <command> [positional...] [--flag] [--key value]`.
 //! Flags may also be written `--key=value`. Unknown flags are an error so
 //! typos fail loudly.
+//!
+//! Commands are dispatched in `main.rs`; the serving/store surface is
+//! `serve [--store DIR]`, `save`, `swap <variant> <name[@vN]>` and
+//! `store-ls` (see DESIGN.md §8 for the checkpoint/registry design).
 
 use std::collections::BTreeMap;
 

@@ -96,6 +96,16 @@ impl Config {
         }
     }
 
+    /// String lookup with no default — for keys whose *absence* is
+    /// meaningful (e.g. `store.dir`: no value means no model store,
+    /// not a default path).
+    pub fn get_str_opt(&self, key: &str) -> Option<String> {
+        match self.values.get(key) {
+            Some(Value::Str(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
     /// Insert programmatically (used by tests and experiment presets).
     pub fn insert(&mut self, key: &str, value: Value) {
         self.values.insert(key.to_string(), value);
@@ -140,6 +150,16 @@ variants = ["dense", "butterfly"]
         let c = Config::from_str("").unwrap();
         assert_eq!(c.get_i64("nope", 42), 42);
         assert_eq!(c.get_str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn optional_strings_distinguish_absence() {
+        let c = Config::from_str("[store]\ndir = \"checkpoints\"\n").unwrap();
+        assert_eq!(c.get_str_opt("store.dir"), Some("checkpoints".to_string()));
+        assert_eq!(c.get_str_opt("store.missing"), None);
+        // non-string values are not silently coerced
+        let c2 = Config::from_str("[store]\ndir = 7\n").unwrap();
+        assert_eq!(c2.get_str_opt("store.dir"), None);
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub struct Job {
 
 enum Msg {
     Job(Job),
+    /// Hot-swap: install a new engine once every job queued ahead of
+    /// this message has been dispatched; ack when installed.
+    Swap(Box<dyn Engine>, SyncSender<()>),
     Shutdown,
 }
 
@@ -64,11 +67,19 @@ impl Batcher {
                     // Block for the first job of the next batch.
                     let first = match rx.recv() {
                         Ok(Msg::Job(j)) => j,
+                        Ok(Msg::Swap(e, ack)) => {
+                            // Queue empty ahead of the swap: install now.
+                            engine = e;
+                            metrics.swaps.inc();
+                            let _ = ack.try_send(());
+                            continue;
+                        }
                         Ok(Msg::Shutdown) | Err(_) => break,
                     };
                     let deadline = first.enqueued + cfg.max_wait;
                     let mut jobs = vec![first];
                     let mut stop = false;
+                    let mut pending_swap: Option<(Box<dyn Engine>, SyncSender<()>)> = None;
                     // Fill until max_batch or the first job's deadline.
                     while jobs.len() < cfg.max_batch {
                         let now = Instant::now();
@@ -77,6 +88,12 @@ impl Batcher {
                         }
                         match rx.recv_timeout(deadline - now) {
                             Ok(Msg::Job(j)) => jobs.push(j),
+                            Ok(Msg::Swap(e, ack)) => {
+                                // Close the batch: jobs submitted before
+                                // the swap run on the old engine.
+                                pending_swap = Some((e, ack));
+                                break;
+                            }
                             Ok(Msg::Shutdown) => {
                                 stop = true;
                                 break;
@@ -85,13 +102,29 @@ impl Batcher {
                         }
                     }
                     Self::dispatch(&mut *engine, &jobs, &metrics);
+                    // Drain-and-replace: the in-flight batch has been
+                    // answered on the old engine; everything queued after
+                    // the swap message sees the new one. No request is
+                    // ever dropped.
+                    if let Some((e, ack)) = pending_swap {
+                        engine = e;
+                        metrics.swaps.inc();
+                        let _ = ack.try_send(());
+                    }
                     if stop {
                         break;
                     }
                 }
                 // Drain anything left after shutdown signal.
-                while let Ok(Msg::Job(j)) = rx.try_recv() {
-                    Self::dispatch(&mut *engine, &[j], &metrics);
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Job(j) => Self::dispatch(&mut *engine, &[j], &metrics),
+                        // Unblock any swapper; the engine no longer matters.
+                        Msg::Swap(_, ack) => {
+                            let _ = ack.try_send(());
+                        }
+                        Msg::Shutdown => {}
+                    }
                 }
             })
             .expect("spawn batcher thread");
@@ -156,6 +189,22 @@ impl Batcher {
             Err(TrySendError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
             Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher stopped")),
         }
+    }
+
+    /// Replace the engine behind this batcher with zero dropped
+    /// requests: jobs queued before the swap are answered by the old
+    /// engine, jobs queued after by the new one. Blocks until the new
+    /// engine is installed (the swap message rides the same queue as
+    /// jobs, so ordering is exact; unlike `submit`, a full queue blocks
+    /// rather than rejects — control messages are never load-shed).
+    pub fn swap(&self, engine: Box<dyn Engine>) -> Result<()> {
+        let (atx, arx) = sync_channel(1);
+        self.tx
+            .send(Msg::Swap(engine, atx))
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        arx.recv()
+            .map_err(|_| anyhow!("batcher stopped during swap"))?;
+        Ok(())
     }
 
     /// Stop the batching thread (drains remaining jobs first).
@@ -287,6 +336,54 @@ mod tests {
         for rx in receivers {
             assert!(rx.recv().unwrap().is_ok());
         }
+        b.shutdown();
+    }
+
+    #[test]
+    fn swap_preserves_order_and_switches_engine() {
+        struct Mul(f64);
+        impl Engine for Mul {
+            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+                let f = self.0;
+                Ok(x.map(|v| v * f))
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn output_dim(&self) -> usize {
+                1
+            }
+        }
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::spawn(
+            "t",
+            Box::new(Mul(2.0)),
+            BatcherConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+            Arc::clone(&m),
+        );
+        // Jobs queued ahead of the swap run on the old engine...
+        let pre: Vec<_> = (1..=5).map(|i| b.submit(vec![i as f64]).unwrap()).collect();
+        b.swap(Box::new(Mul(3.0))).unwrap();
+        // ...jobs submitted after the swap ack run on the new one.
+        let post: Vec<_> = (1..=5).map(|i| b.submit(vec![i as f64]).unwrap()).collect();
+        for (i, rx) in pre.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], 2.0 * (i + 1) as f64, "pre-swap job {i}");
+        }
+        for (i, rx) in post.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], 3.0 * (i + 1) as f64, "post-swap job {i}");
+        }
+        assert_eq!(m.swaps.get(), 1);
+        // swap on an idle batcher also works
+        b.swap(Box::new(Mul(5.0))).unwrap();
+        let rx = b.submit(vec![2.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap()[0], 10.0);
+        assert_eq!(m.swaps.get(), 2);
         b.shutdown();
     }
 

@@ -1,5 +1,8 @@
 //! Inference engines behind the batcher: native rust heads (dense /
-//! butterfly) and PJRT-artifact execution.
+//! butterfly) and PJRT-artifact execution. A third implementation,
+//! [`crate::store::ModelEngine`], serves any model restored from a
+//! checkpoint; engines of any implementation can be hot-swapped into a
+//! running variant via `Coordinator::swap_variant`.
 
 use crate::linalg::Mat;
 use crate::model::Head;

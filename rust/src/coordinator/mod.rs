@@ -37,13 +37,17 @@ pub use protocol::{parse_request, Request, Response};
 pub use server::{serve, ServerHandle};
 
 use crate::metrics::Metrics;
+use crate::store::ModelRegistry;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 /// A running coordinator: named variants, each with its own batcher.
 pub struct Coordinator {
     variants: HashMap<String, Batcher>,
+    /// Checkpoint directory backing the `SWAP` verb (optional).
+    store_dir: Mutex<Option<PathBuf>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -51,8 +55,49 @@ impl Coordinator {
     pub fn new() -> Self {
         Coordinator {
             variants: HashMap::new(),
+            store_dir: Mutex::new(None),
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Point the coordinator at a model-store directory; required for
+    /// [`Self::swap_from_store`] (the protocol `SWAP` verb). The
+    /// directory is rescanned per swap so checkpoints published after
+    /// startup are visible.
+    pub fn set_store_dir(&self, dir: impl Into<PathBuf>) {
+        *self.store_dir.lock().unwrap() = Some(dir.into());
+    }
+
+    /// Is `name` currently registered?
+    pub fn has_variant(&self, name: &str) -> bool {
+        self.variants.contains_key(name)
+    }
+
+    /// Register every checkpoint in `registry` as a serving variant:
+    /// `name@vN` for each entry, plus the bare `name` as an alias for
+    /// its latest version. A store name colliding with an
+    /// already-registered variant (e.g. a checkpoint named `dense`
+    /// next to the built-in `dense`) is skipped with a warning rather
+    /// than silently shadowing the running engine. Returns the number
+    /// of variants registered.
+    pub fn register_store(&mut self, registry: &ModelRegistry, cfg: BatcherConfig) -> Result<usize> {
+        let mut n = 0;
+        let ids: Vec<String> = registry
+            .entries()
+            .iter()
+            .map(|e| e.id())
+            .chain(registry.names())
+            .collect();
+        for id in ids {
+            if self.has_variant(&id) {
+                eprintln!("store: variant `{id}` already registered — skipping (rename the checkpoint or swap explicitly)");
+                continue;
+            }
+            self.register(&id, registry.engine(&id)?, cfg.clone());
+            n += 1;
+        }
+        self.set_store_dir(registry.dir());
+        Ok(n)
     }
 
     /// Register a model variant behind a dynamic batcher.
@@ -71,10 +116,17 @@ impl Coordinator {
     /// Returns `Err` on unknown variant or queue-full backpressure.
     pub fn infer(&self, variant: &str, input: Vec<f64>) -> Result<Vec<f64>> {
         self.metrics.requests.inc();
-        let b = self
-            .variants
-            .get(variant)
-            .ok_or_else(|| anyhow!("unknown variant `{variant}`"))?;
+        // Unknown variants count as rejections so `requests` always
+        // reconciles against `responses + rejected + errors` — before
+        // this, unknown-variant lookups inflated `requests` with no
+        // matching accounting on the rejection side.
+        let b = match self.variants.get(variant) {
+            Some(b) => b,
+            None => {
+                self.metrics.rejected.inc();
+                return Err(anyhow!("unknown variant `{variant}`"));
+            }
+        };
         let rx = b.submit(input).map_err(|e| {
             self.metrics.rejected.inc();
             e
@@ -87,6 +139,35 @@ impl Coordinator {
         self.metrics.latency.record(started.elapsed());
         self.metrics.responses.inc();
         Ok(out)
+    }
+
+    /// Atomically replace a running variant's engine with zero dropped
+    /// requests (drain-and-replace inside the batcher thread): requests
+    /// accepted before the swap are answered by the old engine,
+    /// requests accepted after by the new one, and the conservation
+    /// invariant holds throughout (`rust/tests/prop_coordinator.rs`).
+    /// Blocks until the new engine is serving.
+    pub fn swap_variant(&self, variant: &str, engine: Box<dyn Engine>) -> Result<()> {
+        let b = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant `{variant}`"))?;
+        b.swap(engine)
+    }
+
+    /// Hot-swap `variant` to the model behind `checkpoint`
+    /// (`name` or `name@vN`) from the configured store directory —
+    /// the handler for the protocol `SWAP` verb.
+    pub fn swap_from_store(&self, variant: &str, checkpoint: &str) -> Result<()> {
+        let dir = self
+            .store_dir
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| anyhow!("no model store configured (serve with --store <dir>)"))?;
+        let registry = ModelRegistry::open(&dir)?;
+        let engine = registry.engine(checkpoint)?;
+        self.swap_variant(variant, engine)
     }
 
     /// Graceful shutdown: drain queues, join batcher threads.
@@ -144,6 +225,69 @@ mod tests {
     fn unknown_variant_rejected() {
         let c = Coordinator::new();
         assert!(c.infer("nope", vec![0.0]).is_err());
+        // accounting reconciles: the request shows up as a rejection
+        assert_eq!(c.metrics.requests.get(), 1);
+        assert_eq!(c.metrics.rejected.get(), 1);
+        assert_eq!(c.metrics.responses.get(), 0);
+    }
+
+    #[test]
+    fn swap_variant_switches_engine_in_place() {
+        struct Triple;
+        impl Engine for Triple {
+            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+                Ok(x.map(|v| v * 3.0))
+            }
+            fn input_dim(&self) -> usize {
+                4
+            }
+            fn output_dim(&self) -> usize {
+                4
+            }
+        }
+        let mut c = Coordinator::new();
+        c.register("d", Box::new(Doubler), cfg());
+        assert_eq!(c.infer("d", vec![1.0; 4]).unwrap(), vec![2.0; 4]);
+        c.swap_variant("d", Box::new(Triple)).unwrap();
+        assert_eq!(c.infer("d", vec![1.0; 4]).unwrap(), vec![3.0; 4]);
+        assert!(c.swap_variant("ghost", Box::new(Triple)).is_err());
+        assert_eq!(c.metrics.swaps.get(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn swap_from_store_round_trips_through_disk() {
+        use crate::butterfly::Butterfly;
+        use crate::rng::Rng;
+        use crate::store::{Model, ModelRegistry};
+        let dir = std::env::temp_dir().join(format!(
+            "bfly-coord-swap-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::seed_from_u64(77);
+        let m1 = Model::Network(Butterfly::gaussian(4, 1.0, &mut rng));
+        let m2 = Model::Network(Butterfly::gaussian(4, 1.0, &mut rng));
+        let mut reg = ModelRegistry::open(&dir).unwrap();
+        reg.save("net", 1, &m1).unwrap();
+        let mut c = Coordinator::new();
+        c.register_store(&reg, cfg()).unwrap();
+        // "net@v1" and alias "net" both serve
+        let x = vec![0.5, -1.0, 2.0, 0.25];
+        let want1 = m1.forward(&Mat::from_vec(1, 4, x.clone())).row(0).to_vec();
+        assert_eq!(c.infer("net@v1", x.clone()).unwrap(), want1);
+        assert_eq!(c.infer("net", x.clone()).unwrap(), want1);
+        // publish v2 after startup, then hot-swap the alias onto it
+        reg.save("net", 2, &m2).unwrap();
+        c.swap_from_store("net", "net@v2").unwrap();
+        let want2 = m2.forward(&Mat::from_vec(1, 4, x.clone())).row(0).to_vec();
+        assert_eq!(c.infer("net", x.clone()).unwrap(), want2);
+        // bare name resolves to latest now too
+        c.swap_from_store("net@v1", "net").unwrap();
+        assert_eq!(c.infer("net@v1", x).unwrap(), want2);
+        assert!(c.swap_from_store("net", "net@v9").is_err());
+        c.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

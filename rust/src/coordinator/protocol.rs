@@ -3,11 +3,13 @@
 //! ```text
 //! client → server:
 //!   INFER <variant> <v0> <v1> ... <vd>\n
+//!   SWAP <variant> <name[@vN]>\n   (hot-swap variant to a store checkpoint)
 //!   METRICS\n
 //!   VARIANTS\n
 //!   PING\n
 //! server → client:
 //!   OK <y0> ... <yk>\n            (INFER)
+//!   OK\n                          (SWAP)
 //!   ERR <message>\n
 //!   PONG\n
 //!   <multi-line text>\nEND\n      (METRICS / VARIANTS)
@@ -17,6 +19,9 @@
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Infer { variant: String, input: Vec<f64> },
+    /// Hot-swap `variant` to the checkpoint `name[@vN]` from the
+    /// server's model store (zero-downtime drain-and-replace).
+    Swap { variant: String, checkpoint: String },
     Metrics,
     Variants,
     Ping,
@@ -48,6 +53,23 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 return Err("INFER needs at least one value".to_string());
             }
             Ok(Request::Infer { variant, input })
+        }
+        Some("SWAP") => {
+            let variant = it
+                .next()
+                .ok_or_else(|| "SWAP needs a variant".to_string())?
+                .to_string();
+            let checkpoint = it
+                .next()
+                .ok_or_else(|| "SWAP needs a checkpoint (name or name@vN)".to_string())?
+                .to_string();
+            if it.next().is_some() {
+                return Err("SWAP takes exactly two arguments".to_string());
+            }
+            Ok(Request::Swap {
+                variant,
+                checkpoint,
+            })
         }
         Some("METRICS") => Ok(Request::Metrics),
         Some("VARIANTS") => Ok(Request::Variants),
@@ -101,6 +123,27 @@ mod tests {
         assert!(parse_request("INFER v").is_err());
         assert!(parse_request("INFER v 1 x").is_err());
         assert!(parse_request("WAT 1 2").is_err());
+    }
+
+    #[test]
+    fn parse_swap() {
+        assert_eq!(
+            parse_request("SWAP head head@v3").unwrap(),
+            Request::Swap {
+                variant: "head".into(),
+                checkpoint: "head@v3".into()
+            }
+        );
+        assert_eq!(
+            parse_request("SWAP head head").unwrap(),
+            Request::Swap {
+                variant: "head".into(),
+                checkpoint: "head".into()
+            }
+        );
+        assert!(parse_request("SWAP").is_err());
+        assert!(parse_request("SWAP v").is_err());
+        assert!(parse_request("SWAP v c extra").is_err());
     }
 
     #[test]

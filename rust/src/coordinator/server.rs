@@ -82,6 +82,13 @@ fn handle_conn(stream: TcpStream, c: &Coordinator) -> Result<()> {
                 Ok(out) => Response::Ok(out),
                 Err(e) => Response::Err(format!("{e:#}")),
             },
+            Ok(Request::Swap {
+                variant,
+                checkpoint,
+            }) => match c.swap_from_store(&variant, &checkpoint) {
+                Ok(()) => Response::Ok(Vec::new()),
+                Err(e) => Response::Err(format!("{e:#}")),
+            },
         };
         writer.write_all(resp.serialize().as_bytes())?;
         writer.flush()?;
@@ -155,6 +162,46 @@ mod tests {
         let v = roundtrip(h.addr, "VARIANTS");
         assert!(v.contains("neg"));
         h.stop();
+    }
+
+    #[test]
+    fn swap_over_tcp() {
+        use crate::butterfly::Butterfly;
+        use crate::rng::Rng;
+        use crate::store::{Model, ModelRegistry};
+        let dir = std::env::temp_dir().join(format!(
+            "bfly-server-swap-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::seed_from_u64(42);
+        let mut reg = ModelRegistry::open(&dir).unwrap();
+        reg.save("net", 1, &Model::Network(Butterfly::gaussian(4, 1.0, &mut rng)))
+            .unwrap();
+        reg.save("net", 2, &Model::Network(Butterfly::gaussian(4, 1.0, &mut rng)))
+            .unwrap();
+        let mut c = Coordinator::new();
+        c.register_store(
+            &reg,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 32,
+            },
+        )
+        .unwrap();
+        let c = Arc::new(c);
+        let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        let before = roundtrip(h.addr, "INFER net 1 0 0 0");
+        assert!(before.starts_with("OK "), "{before}");
+        assert_eq!(roundtrip(h.addr, "SWAP net net@v2"), "OK\n");
+        let after = roundtrip(h.addr, "INFER net 1 0 0 0");
+        assert!(after.starts_with("OK "), "{after}");
+        assert_ne!(before, after, "swap should change the served model");
+        assert!(roundtrip(h.addr, "SWAP net ghost@v1").starts_with("ERR"));
+        assert!(roundtrip(h.addr, "SWAP ghost net@v1").starts_with("ERR"));
+        h.stop();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

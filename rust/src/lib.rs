@@ -17,6 +17,9 @@
 //! * **Runtime** — [`runtime`] (PJRT client over AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py`) and [`coordinator`]
 //!   (the L3 serving system: router, dynamic batcher, worker pool).
+//! * **Persistence** — [`store`] (versioned model checkpoints, the
+//!   directory registry, and the engines that serve restored models;
+//!   hot-swapped into the coordinator with zero dropped requests).
 //! * **Evaluation** — [`experiments`]: one module per table/figure in the
 //!   paper's evaluation section.
 //!
@@ -36,6 +39,7 @@ pub mod model;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;
+pub mod store;
 pub mod testing;
 pub mod train;
 

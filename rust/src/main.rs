@@ -3,20 +3,28 @@
 //! ```text
 //! butterfly-net experiment <id>|all [--quick] [--seed N] [--out results]
 //! butterfly-net serve [--addr 127.0.0.1:7070] [--config cfg.toml] [--set k=v]
+//!                     [--store DIR]
+//! butterfly-net save [--store DIR] [--name m] [--kind butterfly-head]
+//!                    [--n1 64] [--n2 32] [--train-steps 200] [--seed N]
+//! butterfly-net swap <variant> <name[@vN]> [--addr 127.0.0.1:7070]
+//! butterfly-net store-ls [--store DIR]
 //! butterfly-net train-ae [--dataset gaussian1] [--k 32] [--iters 400]
 //! butterfly-net sketch [--l 20] [--k 10] [--iters 400]
 //! butterfly-net runtime-info [--artifacts artifacts]
 //! butterfly-net params
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use butterfly_net::butterfly::{Butterfly, TruncatedButterfly};
 use butterfly_net::cli::Args;
 use butterfly_net::config::Config;
 use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator, NativeHeadEngine, PjrtEngine};
 use butterfly_net::experiments::{self, ExpContext};
-use butterfly_net::model::Head;
+use butterfly_net::linalg::Mat;
+use butterfly_net::model::{fit_head_to_teacher, Head};
 use butterfly_net::rng::Rng;
 use butterfly_net::runtime::{Runtime, RuntimeHandle, Tensor};
+use butterfly_net::store::{Model, ModelRegistry};
 use std::sync::Arc;
 
 fn main() {
@@ -31,6 +39,9 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("save") => cmd_save(&args),
+        Some("swap") => cmd_swap(&args),
+        Some("store-ls") => cmd_store_ls(&args),
         Some("train-ae") => cmd_train_ae(&args),
         Some("sketch") => cmd_sketch(&args),
         Some("runtime-info") => cmd_runtime_info(&args),
@@ -51,12 +62,16 @@ fn print_help() {
         "butterfly-net — sparse linear networks with a fixed butterfly structure\n\n\
          commands:\n\
          \x20 experiment <id>|all   regenerate a paper table/figure ({})\n\
-         \x20 serve                 start the serving coordinator (dense vs butterfly variants)\n\
+         \x20 serve                 start the serving coordinator (dense vs butterfly variants;\n\
+         \x20                       --store DIR serves every checkpoint in a model store)\n\
+         \x20 save                  train a small model and publish it to a model store\n\
+         \x20 swap                  hot-swap a serving variant to a store checkpoint (zero downtime)\n\
+         \x20 store-ls              list the checkpoints in a model store\n\
          \x20 train-ae              train the §4 encoder-decoder butterfly network\n\
          \x20 sketch                train the §6 butterfly sketch\n\
          \x20 runtime-info          list + compile the AOT artifacts\n\
          \x20 params                print the Figure-1 parameter table\n\n\
-         common flags: --quick --seed N --out DIR --artifacts DIR",
+         common flags: --quick --seed N --out DIR --artifacts DIR --store DIR",
         experiments::ALL.join(", ")
     );
 }
@@ -80,7 +95,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_known(&["addr", "config", "set", "artifacts", "no-pjrt", "once"])?;
+    args.expect_known(&["addr", "config", "set", "artifacts", "no-pjrt", "once", "store"])?;
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_file(p)?,
         None => Config::new(),
@@ -111,6 +126,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
         bcfg.clone(),
     );
+    // Checkpoint-backed variants: every entry of the model store is
+    // registered as `name@vN` plus a `name` alias for its latest
+    // version, and the SWAP verb is armed against the same directory.
+    let store_dir = args
+        .get("store")
+        .map(String::from)
+        .or_else(|| cfg.get_str_opt("store.dir"));
+    if let Some(dir) = &store_dir {
+        let registry = ModelRegistry::open(dir)?;
+        let n = coordinator.register_store(&registry, bcfg.clone())?;
+        println!("model store {dir}: {n} variants registered");
+    }
     // PJRT-backed variants when artifacts are present (and not disabled).
     let artifacts_dir = args.get("artifacts").unwrap_or("artifacts");
     if !args.flag("no-pjrt") {
@@ -133,7 +160,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         handle.addr,
         coordinator.variant_names().join(", ")
     );
-    println!("protocol: INFER <variant> <v0> ... | METRICS | VARIANTS | PING");
+    println!("protocol: INFER <variant> <v0> ... | SWAP <variant> <name[@vN]> | METRICS | VARIANTS | PING");
     if args.flag("once") {
         // test hook: serve briefly then exit cleanly
         std::thread::sleep(std::time::Duration::from_millis(200));
@@ -183,6 +210,116 @@ fn random_tensor(spec: &butterfly_net::runtime::TensorSpec, rng: &mut Rng) -> Te
             let data = rng.gaussian_vec(spec.num_elements(), 0.05);
             Tensor::from_f64(&spec.shape, &data)
         }
+    }
+}
+
+/// Quick supervised fit against a random linear teacher so a saved
+/// checkpoint holds *trained* weights, not an init. Returns final MSE.
+fn train_head(head: &mut Head, steps: usize, rng: &mut Rng) -> f64 {
+    let (n_out, n_in) = head.shape();
+    let teacher = Mat::gaussian(n_out, n_in, 1.0 / (n_in as f64).sqrt(), rng);
+    fit_head_to_teacher(head, &teacher, steps, 32, rng)
+}
+
+fn cmd_save(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "store",
+        "name",
+        "kind",
+        "n1",
+        "n2",
+        "l",
+        "version",
+        "train-steps",
+        "seed",
+    ])?;
+    let dir = args.get("store").unwrap_or("store");
+    let kind = args.get("kind").unwrap_or("butterfly-head");
+    let name = args.get("name").unwrap_or(kind);
+    let n1 = args.get_usize("n1", 64)?;
+    let n2 = args.get_usize("n2", 32)?;
+    let steps = args.get_usize("train-steps", 200)?;
+    let mut rng = Rng::seed_from_u64(args.get_u64("seed", 0)?);
+    if !n1.is_power_of_two() || n1 < 2 {
+        bail!("--n1 must be a power of two ≥ 2 (butterfly input side)");
+    }
+    let model = match kind {
+        "dense-head" | "butterfly-head" => {
+            if !n2.is_power_of_two() || n2 < 2 {
+                bail!("--n2 must be a power of two ≥ 2 (butterfly output side)");
+            }
+            let mut head = if kind == "dense-head" {
+                Head::dense(n1, n2, &mut rng)
+            } else {
+                Head::butterfly(n1, n2, &mut rng)
+            };
+            let mse = train_head(&mut head, steps, &mut rng);
+            println!("trained {kind} {n1}→{n2} for {steps} steps (final mse {mse:.5})");
+            Model::Head(head)
+        }
+        "butterfly" => Model::Network(Butterfly::gaussian(n1, 0.5, &mut rng)),
+        "truncated" => {
+            let l = args.get_usize("l", (n1 / 4).max(1))?;
+            if l == 0 || l > n1 {
+                bail!("--l must be in 1..=n1 (got {l}, n1={n1})");
+            }
+            Model::Truncated(TruncatedButterfly::fjlt(n1, l, &mut rng))
+        }
+        other => bail!("unknown --kind `{other}` (dense-head|butterfly-head|butterfly|truncated)"),
+    };
+    let mut registry = ModelRegistry::open(dir)?;
+    let version = match args.get_usize("version", 0)? {
+        0 => registry.next_version(name),
+        v => v as u32,
+    };
+    let path = registry.save(name, version, &model)?;
+    println!(
+        "published {}@v{version} ({}, {}→{}, {} params) to {}",
+        name,
+        model.kind().name(),
+        model.io_dims().0,
+        model.io_dims().1,
+        model.num_params(),
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_store_ls(args: &Args) -> Result<()> {
+    args.expect_known(&["store"])?;
+    let dir = args.get("store").unwrap_or("store");
+    let registry = ModelRegistry::open(dir)?;
+    if registry.entries().is_empty() {
+        println!("store {dir}: empty");
+    } else {
+        print!("{}", registry.describe());
+    }
+    Ok(())
+}
+
+/// Client side of the zero-downtime swap: one protocol round-trip.
+fn cmd_swap(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    args.expect_known(&["addr"])?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7070");
+    let (variant, checkpoint) = match &args.positional[..] {
+        [v, c] => (v.clone(), c.clone()),
+        _ => bail!("usage: swap <variant> <name[@vN]> [--addr host:port]"),
+    };
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    w.write_all(format!("SWAP {variant} {checkpoint}\n").as_bytes())?;
+    w.flush()?;
+    let mut resp = String::new();
+    r.read_line(&mut resp)?;
+    let resp = resp.trim();
+    if resp == "OK" {
+        println!("swapped `{variant}` → `{checkpoint}` with zero downtime");
+        Ok(())
+    } else {
+        bail!("server refused swap: {resp}");
     }
 }
 

@@ -138,6 +138,8 @@ pub struct Metrics {
     pub responses: Counter,
     pub errors: Counter,
     pub rejected: Counter,
+    /// Engine hot-swaps completed by batchers (store subsystem).
+    pub swaps: Counter,
     pub latency: LatencyHistogram,
     pub queue_wait: LatencyHistogram,
     pub batches: BatchStats,
@@ -151,11 +153,12 @@ impl Metrics {
     pub fn snapshot(&self) -> String {
         let (nb, mean_b, max_b) = self.batches.summary();
         format!(
-            "requests={} responses={} errors={} rejected={}\n{}\n{}\nbatches={} mean_batch={:.2} max_batch={}",
+            "requests={} responses={} errors={} rejected={} swaps={}\n{}\n{}\nbatches={} mean_batch={:.2} max_batch={}",
             self.requests.get(),
             self.responses.get(),
             self.errors.get(),
             self.rejected.get(),
+            self.swaps.get(),
             self.latency.snapshot("latency"),
             self.queue_wait.snapshot("queue_wait"),
             nb,

@@ -1,9 +1,14 @@
 //! Classification heads: dense baseline vs butterfly replacement,
 //! behind one interface so the §5.1 experiments can swap them.
+//!
+//! Both variants persist through [`crate::store`] (kinds `dense-head`
+//! and `butterfly-head`) and can be served — and hot-swapped against
+//! each other — behind the coordinator's dynamic batcher.
 
 use super::replacement::{ReplacementLayer, ReplacementTape};
 use crate::linalg::Mat;
 use crate::rng::Rng;
+use crate::train::{Optimizer, Sgd};
 
 /// Plain dense linear layer `y = W·x (+ no bias — matching the layers
 /// the paper replaces)`.
@@ -121,6 +126,36 @@ impl Head {
     }
 }
 
+/// Fit a head to a fixed linear teacher by minibatch MSE regression —
+/// the quickest way to a head whose checkpoint carries *trained*
+/// weights rather than an initialisation (used by the `save` CLI verb
+/// and `examples/store_e2e.rs`). Returns the final minibatch MSE.
+pub fn fit_head_to_teacher(
+    head: &mut Head,
+    teacher: &Mat,
+    steps: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let (n_out, n_in) = head.shape();
+    assert_eq!(teacher.shape(), (n_out, n_in), "teacher shape mismatch");
+    let mut opt = Sgd::with_momentum(0.05, 0.9);
+    let mut params = head.params();
+    let mut last = f64::NAN;
+    for _ in 0..steps {
+        let x = Mat::gaussian(batch, n_in, 1.0, rng);
+        let target = x.matmul_t(teacher);
+        let (y, tape) = head.forward_tape(&x);
+        let mut resid = &y - &target;
+        last = resid.fro2() / batch as f64;
+        resid.scale(2.0 / batch as f64);
+        let (_, g) = head.vjp(&tape, &resid);
+        opt.step(&mut params, &g);
+        head.set_params(&params);
+    }
+    last
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +169,16 @@ mod tests {
         assert_eq!(d.forward(&x).shape(), (4, 16));
         assert_eq!(b.forward(&x).shape(), (4, 16));
         assert!(b.num_params() < d.num_params());
+    }
+
+    #[test]
+    fn fit_head_reduces_teacher_mse() {
+        let mut rng = Rng::seed_from_u64(203);
+        let mut head = Head::dense(16, 8, &mut rng);
+        let teacher = Mat::gaussian(8, 16, 0.25, &mut rng);
+        let first = fit_head_to_teacher(&mut head, &teacher, 1, 32, &mut rng);
+        let last = fit_head_to_teacher(&mut head, &teacher, 200, 32, &mut rng);
+        assert!(last < first, "mse did not improve: {first} → {last}");
     }
 
     #[test]

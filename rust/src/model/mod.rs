@@ -21,7 +21,7 @@ mod metrics;
 mod mlp;
 mod replacement;
 
-pub use head::{DenseLayer, Head};
+pub use head::{fit_head_to_teacher, DenseLayer, Head};
 pub use metrics::{accuracy, softmax_cross_entropy};
 pub use mlp::{Mlp, MlpConfig, TrainReport};
 pub use replacement::ReplacementLayer;

@@ -1,0 +1,579 @@
+//! Model-level save/load on top of the container format: one
+//! checkpoint file holds one model, tagged by [`ModelKind`].
+//!
+//! Every persistable model in the crate round-trips bitwise: the f64
+//! weights are stored as raw IEEE-754 bit patterns, and reconstruction
+//! uses the same constructors the trainers use, so `save → load →
+//! forward` equals the original forward exactly (checked by
+//! `rust/tests/prop_store.rs`).
+
+use super::format::{self, Section};
+use crate::autoencoder::{ButterflyAe, DenseAe};
+use crate::butterfly::{Butterfly, ButterflyLayer, TruncatedButterfly};
+use crate::coordinator::Engine;
+use crate::linalg::Mat;
+use crate::model::{DenseLayer, Head, ReplacementLayer};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Tag of a persisted model; the u32 written at offset 12 of the file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    ButterflyLayer,
+    ButterflyNetwork,
+    TruncatedButterfly,
+    DenseHead,
+    ButterflyHead,
+    DenseAe,
+    ButterflyAe,
+}
+
+impl ModelKind {
+    pub fn tag(self) -> u32 {
+        match self {
+            ModelKind::ButterflyLayer => 1,
+            ModelKind::ButterflyNetwork => 2,
+            ModelKind::TruncatedButterfly => 3,
+            ModelKind::DenseHead => 4,
+            ModelKind::ButterflyHead => 5,
+            ModelKind::DenseAe => 6,
+            ModelKind::ButterflyAe => 7,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Option<Self> {
+        Some(match tag {
+            1 => ModelKind::ButterflyLayer,
+            2 => ModelKind::ButterflyNetwork,
+            3 => ModelKind::TruncatedButterfly,
+            4 => ModelKind::DenseHead,
+            5 => ModelKind::ButterflyHead,
+            6 => ModelKind::DenseAe,
+            7 => ModelKind::ButterflyAe,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::ButterflyLayer => "butterfly-layer",
+            ModelKind::ButterflyNetwork => "butterfly",
+            ModelKind::TruncatedButterfly => "truncated-butterfly",
+            ModelKind::DenseHead => "dense-head",
+            ModelKind::ButterflyHead => "butterfly-head",
+            ModelKind::DenseAe => "dense-ae",
+            ModelKind::ButterflyAe => "butterfly-ae",
+        }
+    }
+}
+
+/// A model restored from (or destined for) a checkpoint.
+#[derive(Clone, Debug)]
+pub enum Model {
+    Layer(ButterflyLayer),
+    Network(Butterfly),
+    Truncated(TruncatedButterfly),
+    Head(Head),
+    DenseAe(DenseAe),
+    ButterflyAe(ButterflyAe),
+}
+
+fn to_u64s(v: &[usize]) -> Vec<u64> {
+    v.iter().map(|&x| x as u64).collect()
+}
+
+fn usize_of(x: u64, what: &str) -> Result<usize> {
+    usize::try_from(x).map_err(|_| anyhow!("{what} = {x} does not fit in usize"))
+}
+
+/// Validate a butterfly dimension read from disk.
+fn check_n(n: usize) -> Result<usize> {
+    if n < 2 || !n.is_power_of_two() {
+        bail!("butterfly dimension must be a power of two ≥ 2, got {n}");
+    }
+    Ok(n)
+}
+
+/// Rebuild an `n×n` butterfly from the flat weight layout, verifying
+/// the weight count before any constructor assertion can fire.
+fn butterfly_from_flat(n: usize, w: &[f64]) -> Result<Butterfly> {
+    check_n(n)?;
+    let depth = n.trailing_zeros() as usize;
+    let expect = 2 * n * depth;
+    if w.len() != expect {
+        bail!("butterfly n={n} wants {expect} weights, checkpoint has {}", w.len());
+    }
+    let mut b = Butterfly::identity(n);
+    b.set_flat_weights(w);
+    Ok(b)
+}
+
+/// Validate a kept-coordinate list: nonempty, strictly increasing,
+/// all below `n` (the invariant `TruncatedButterfly::new` asserts).
+fn check_keep(keep: &[u64], n: usize) -> Result<Vec<usize>> {
+    if keep.is_empty() {
+        bail!("truncation keep-set is empty");
+    }
+    let mut out = Vec::with_capacity(keep.len());
+    for (i, &k) in keep.iter().enumerate() {
+        let k = usize_of(k, "keep index")?;
+        if k >= n {
+            bail!("keep index {k} out of range for n={n}");
+        }
+        if i > 0 && k <= out[i - 1] {
+            bail!("keep indices must be strictly increasing");
+        }
+        out.push(k);
+    }
+    Ok(out)
+}
+
+fn truncated_from_parts(n: usize, keep: &[u64], w: &[f64]) -> Result<TruncatedButterfly> {
+    let net = butterfly_from_flat(n, w)?;
+    let keep = check_keep(keep, n)?;
+    Ok(TruncatedButterfly::new(net, keep))
+}
+
+/// Rebuild a dense matrix, verifying `rows*cols == data.len()`.
+fn mat_from_parts(rows: usize, cols: usize, data: &[f64], what: &str) -> Result<Mat> {
+    let expect = rows
+        .checked_mul(cols)
+        .ok_or_else(|| anyhow!("{what}: {rows}×{cols} overflows"))?;
+    if data.len() != expect {
+        bail!("{what}: {rows}×{cols} wants {expect} values, checkpoint has {}", data.len());
+    }
+    Ok(Mat::from_vec(rows, cols, data.to_vec()))
+}
+
+fn expect_sections(sections: &[Section], n: usize, kind: ModelKind) -> Result<()> {
+    if sections.len() != n {
+        bail!(
+            "{} checkpoint wants {n} sections, found {}",
+            kind.name(),
+            sections.len()
+        );
+    }
+    Ok(())
+}
+
+impl Model {
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            Model::Layer(_) => ModelKind::ButterflyLayer,
+            Model::Network(_) => ModelKind::ButterflyNetwork,
+            Model::Truncated(_) => ModelKind::TruncatedButterfly,
+            Model::Head(Head::Dense(_)) => ModelKind::DenseHead,
+            Model::Head(Head::Butterfly(_)) => ModelKind::ButterflyHead,
+            Model::DenseAe(_) => ModelKind::DenseAe,
+            Model::ButterflyAe(_) => ModelKind::ButterflyAe,
+        }
+    }
+
+    /// Serving shape: (input_dim, output_dim) with batch rows as
+    /// vectors (the coordinator's convention). Autoencoders report the
+    /// full reconstruction map `n → m`.
+    pub fn io_dims(&self) -> (usize, usize) {
+        match self {
+            Model::Layer(l) => (l.n(), l.n()),
+            Model::Network(b) => (b.n(), b.n()),
+            Model::Truncated(j) => (j.n(), j.l()),
+            Model::Head(h) => {
+                let (out, inp) = h.shape();
+                (inp, out)
+            }
+            Model::DenseAe(ae) => (ae.e.cols(), ae.d.rows()),
+            Model::ButterflyAe(ae) => (ae.n(), ae.m()),
+        }
+    }
+
+    /// Trainable-parameter count (for registry listings).
+    pub fn num_params(&self) -> usize {
+        match self {
+            Model::Layer(l) => l.num_params(),
+            Model::Network(b) => b.num_params(),
+            Model::Truncated(j) => j.net().num_params(),
+            Model::Head(h) => h.num_params(),
+            Model::DenseAe(ae) => ae.num_params(),
+            Model::ButterflyAe(ae) => ae.num_params(),
+        }
+    }
+
+    /// Batch forward in the serving convention (rows are inputs).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            Model::Layer(l) => {
+                let mut y = x.clone();
+                l.apply_batch(&mut y);
+                y
+            }
+            Model::Network(b) => b.forward(x),
+            Model::Truncated(j) => j.forward(x),
+            Model::Head(h) => h.forward(x),
+            // The AEs use the paper convention (columns are samples):
+            // transpose in and out.
+            Model::DenseAe(ae) => ae.forward(&x.t()).t(),
+            Model::ButterflyAe(ae) => ae.forward(&x.t()).t(),
+        }
+    }
+
+    /// Serialise to checkpoint bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let sections = match self {
+            Model::Layer(l) => {
+                let mut w = Vec::with_capacity(l.weights().len() * 4);
+                for g in l.weights() {
+                    w.extend_from_slice(g);
+                }
+                vec![
+                    Section::U64(vec![l.n() as u64, l.stage() as u64]),
+                    Section::F64(w),
+                ]
+            }
+            Model::Network(b) => vec![
+                Section::U64(vec![b.n() as u64]),
+                Section::F64(b.flat_weights()),
+            ],
+            Model::Truncated(j) => vec![
+                Section::U64(vec![j.n() as u64]),
+                Section::U64(to_u64s(j.keep())),
+                Section::F64(j.net().flat_weights()),
+            ],
+            Model::Head(Head::Dense(d)) => vec![
+                Section::U64(vec![d.w.rows() as u64, d.w.cols() as u64]),
+                Section::F64(d.w.data().to_vec()),
+            ],
+            Model::Head(Head::Butterfly(r)) => vec![
+                Section::U64(vec![r.j1.n() as u64, r.j2.n() as u64]),
+                Section::U64(to_u64s(r.j1.keep())),
+                Section::U64(to_u64s(r.j2.keep())),
+                Section::F64(r.j1.net().flat_weights()),
+                Section::F64(r.w.data().to_vec()),
+                Section::F64(r.j2.net().flat_weights()),
+            ],
+            Model::DenseAe(ae) => vec![
+                Section::U64(vec![
+                    ae.d.rows() as u64,
+                    ae.d.cols() as u64,
+                    ae.e.cols() as u64,
+                ]),
+                Section::F64(ae.d.data().to_vec()),
+                Section::F64(ae.e.data().to_vec()),
+            ],
+            Model::ButterflyAe(ae) => vec![
+                Section::U64(vec![
+                    ae.m() as u64,
+                    ae.k() as u64,
+                    ae.n() as u64,
+                ]),
+                Section::U64(to_u64s(ae.b.keep())),
+                Section::F64(ae.d.data().to_vec()),
+                Section::F64(ae.e.data().to_vec()),
+                Section::F64(ae.b.net().flat_weights()),
+            ],
+        };
+        format::encode(self.kind().tag(), &sections)
+    }
+
+    /// Parse checkpoint bytes back into a model. Clean errors, no
+    /// panics, on malformed input.
+    pub fn decode(bytes: &[u8]) -> Result<Model> {
+        let (tag, sections) = format::decode(bytes)?;
+        let kind = ModelKind::from_tag(tag)
+            .ok_or_else(|| anyhow!("unknown model kind tag {tag}"))?;
+        match kind {
+            ModelKind::ButterflyLayer => {
+                expect_sections(&sections, 2, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 2 {
+                    bail!("butterfly-layer dims section wants [n, stage]");
+                }
+                let n = check_n(usize_of(dims[0], "n")?)?;
+                let stage = usize_of(dims[1], "stage")?;
+                if stage >= n.trailing_zeros() as usize {
+                    bail!("layer stage {stage} out of range for n={n}");
+                }
+                let w = sections[1].as_f64("weights")?;
+                if w.len() != 2 * n {
+                    bail!("butterfly-layer n={n} wants {} weights, has {}", 2 * n, w.len());
+                }
+                let mut l = ButterflyLayer::identity(n, stage);
+                for (g, chunk) in l.weights_mut().iter_mut().zip(w.chunks_exact(4)) {
+                    g.copy_from_slice(chunk);
+                }
+                Ok(Model::Layer(l))
+            }
+            ModelKind::ButterflyNetwork => {
+                expect_sections(&sections, 2, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 1 {
+                    bail!("butterfly dims section wants [n]");
+                }
+                let n = usize_of(dims[0], "n")?;
+                let b = butterfly_from_flat(n, sections[1].as_f64("weights")?)?;
+                Ok(Model::Network(b))
+            }
+            ModelKind::TruncatedButterfly => {
+                expect_sections(&sections, 3, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 1 {
+                    bail!("truncated-butterfly dims section wants [n]");
+                }
+                let n = usize_of(dims[0], "n")?;
+                let j = truncated_from_parts(
+                    n,
+                    sections[1].as_u64("keep")?,
+                    sections[2].as_f64("weights")?,
+                )?;
+                Ok(Model::Truncated(j))
+            }
+            ModelKind::DenseHead => {
+                expect_sections(&sections, 2, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 2 {
+                    bail!("dense-head dims section wants [rows, cols]");
+                }
+                let rows = usize_of(dims[0], "rows")?;
+                let cols = usize_of(dims[1], "cols")?;
+                if rows == 0 || cols == 0 {
+                    bail!("dense-head shape {rows}×{cols} is degenerate");
+                }
+                let w = mat_from_parts(rows, cols, sections[1].as_f64("weights")?, "dense-head")?;
+                Ok(Model::Head(Head::Dense(DenseLayer { w })))
+            }
+            ModelKind::ButterflyHead => {
+                expect_sections(&sections, 6, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 2 {
+                    bail!("butterfly-head dims section wants [n1, n2]");
+                }
+                let n1 = usize_of(dims[0], "n1")?;
+                let n2 = usize_of(dims[1], "n2")?;
+                let j1 = truncated_from_parts(
+                    n1,
+                    sections[1].as_u64("keep1")?,
+                    sections[3].as_f64("j1 weights")?,
+                )?;
+                let j2 = truncated_from_parts(
+                    n2,
+                    sections[2].as_u64("keep2")?,
+                    sections[5].as_f64("j2 weights")?,
+                )?;
+                let w = mat_from_parts(
+                    j2.l(),
+                    j1.l(),
+                    sections[4].as_f64("core")?,
+                    "butterfly-head core",
+                )?;
+                Ok(Model::Head(Head::Butterfly(ReplacementLayer { j1, w, j2 })))
+            }
+            ModelKind::DenseAe => {
+                expect_sections(&sections, 3, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 3 {
+                    bail!("dense-ae dims section wants [m, k, n]");
+                }
+                let m = usize_of(dims[0], "m")?;
+                let k = usize_of(dims[1], "k")?;
+                let n = usize_of(dims[2], "n")?;
+                let d = mat_from_parts(m, k, sections[1].as_f64("D")?, "dense-ae D")?;
+                let e = mat_from_parts(k, n, sections[2].as_f64("E")?, "dense-ae E")?;
+                Ok(Model::DenseAe(DenseAe { d, e }))
+            }
+            ModelKind::ButterflyAe => {
+                expect_sections(&sections, 5, kind)?;
+                let dims = sections[0].as_u64("dims")?;
+                if dims.len() != 3 {
+                    bail!("butterfly-ae dims section wants [m, k, n]");
+                }
+                let m = usize_of(dims[0], "m")?;
+                let k = usize_of(dims[1], "k")?;
+                let n = usize_of(dims[2], "n")?;
+                let b = truncated_from_parts(
+                    n,
+                    sections[1].as_u64("keep")?,
+                    sections[4].as_f64("B weights")?,
+                )?;
+                let d = mat_from_parts(m, k, sections[2].as_f64("D")?, "butterfly-ae D")?;
+                let e = mat_from_parts(k, b.l(), sections[3].as_f64("E")?, "butterfly-ae E")?;
+                Ok(Model::ButterflyAe(ButterflyAe { d, e, b }))
+            }
+        }
+    }
+
+    /// Write to `path` (plain overwrite; the registry layers atomic
+    /// rename + immutability on top of this).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.encode())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Model> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Model::decode(&bytes).with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Wrap in a coordinator engine — the "construct the right Engine"
+    /// half of the registry contract.
+    pub fn into_engine(self) -> Box<dyn Engine> {
+        Box::new(ModelEngine::new(self))
+    }
+}
+
+/// Engine adapter: serves any restored [`Model`] behind the batcher.
+pub struct ModelEngine {
+    model: Model,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl ModelEngine {
+    pub fn new(model: Model) -> Self {
+        let (in_dim, out_dim) = model.io_dims();
+        ModelEngine {
+            model,
+            in_dim,
+            out_dim,
+        }
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Engine for ModelEngine {
+    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+        Ok(self.model.forward(x))
+    }
+    fn input_dim(&self) -> usize {
+        self.in_dim
+    }
+    fn output_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn bitwise_eq(a: &Mat, b: &Mat) -> bool {
+        a.shape() == b.shape()
+            && a.data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn roundtrip(m: &Model) -> Model {
+        Model::decode(&m.encode()).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn all_kinds_roundtrip_bitwise() {
+        let mut rng = Rng::seed_from_u64(400);
+        let mut layer = ButterflyLayer::identity(16, 2);
+        for g in layer.weights_mut() {
+            for v in g.iter_mut() {
+                *v = rng.gaussian();
+            }
+        }
+        let models = vec![
+            Model::Layer(layer),
+            Model::Network(Butterfly::gaussian(32, 0.8, &mut rng)),
+            Model::Truncated(TruncatedButterfly::fjlt(64, 9, &mut rng)),
+            Model::Head(Head::dense(32, 8, &mut rng)),
+            Model::Head(Head::butterfly(32, 16, &mut rng)),
+            Model::DenseAe(DenseAe::new(12, 3, 7, &mut rng)),
+            Model::ButterflyAe(ButterflyAe::new(16, 6, 3, 8, &mut rng)),
+        ];
+        for m in &models {
+            let m2 = roundtrip(m);
+            assert_eq!(m.kind(), m2.kind());
+            assert_eq!(m.io_dims(), m2.io_dims());
+            let (din, _) = m.io_dims();
+            let x = Mat::gaussian(5, din, 1.0, &mut rng);
+            assert!(
+                bitwise_eq(&m.forward(&x), &m2.forward(&x)),
+                "{} forward not bitwise identical",
+                m.kind().name()
+            );
+        }
+    }
+
+    #[test]
+    fn engine_adapter_has_right_dims() {
+        let mut rng = Rng::seed_from_u64(401);
+        let m = Model::Truncated(TruncatedButterfly::fjlt(32, 5, &mut rng));
+        let mut e = ModelEngine::new(m);
+        assert_eq!(e.input_dim(), 32);
+        assert_eq!(e.output_dim(), 5);
+        let x = Mat::gaussian(3, 32, 1.0, &mut rng);
+        assert_eq!(e.infer_batch(&x).unwrap().shape(), (3, 5));
+    }
+
+    #[test]
+    fn ae_engine_serves_row_convention() {
+        let mut rng = Rng::seed_from_u64(402);
+        let ae = ButterflyAe::new(16, 6, 3, 8, &mut rng);
+        let x_rows = Mat::gaussian(4, 16, 1.0, &mut rng); // 4 samples as rows
+        let want = ae.forward(&x_rows.t()).t(); // paper convention
+        let m = Model::ButterflyAe(ae);
+        assert!(bitwise_eq(&m.forward(&x_rows), &want));
+        assert_eq!(m.io_dims(), (16, 8));
+    }
+
+    #[test]
+    fn kind_tags_are_stable() {
+        // On-disk compatibility: these tags are part of the format.
+        assert_eq!(ModelKind::ButterflyLayer.tag(), 1);
+        assert_eq!(ModelKind::ButterflyNetwork.tag(), 2);
+        assert_eq!(ModelKind::TruncatedButterfly.tag(), 3);
+        assert_eq!(ModelKind::DenseHead.tag(), 4);
+        assert_eq!(ModelKind::ButterflyHead.tag(), 5);
+        assert_eq!(ModelKind::DenseAe.tag(), 6);
+        assert_eq!(ModelKind::ButterflyAe.tag(), 7);
+        for t in 1..=7u32 {
+            assert_eq!(ModelKind::from_tag(t).unwrap().tag(), t);
+        }
+        assert!(ModelKind::from_tag(0).is_none());
+        assert!(ModelKind::from_tag(8).is_none());
+    }
+
+    #[test]
+    fn mismatched_weight_count_is_clean_error() {
+        let mut rng = Rng::seed_from_u64(403);
+        let b = Butterfly::gaussian(16, 1.0, &mut rng);
+        // hand-encode with one weight missing
+        let mut w = b.flat_weights();
+        w.pop();
+        let bytes = format::encode(
+            ModelKind::ButterflyNetwork.tag(),
+            &[Section::U64(vec![16]), Section::F64(w)],
+        );
+        let err = Model::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("weights"), "{err}");
+    }
+
+    #[test]
+    fn bad_keep_set_is_clean_error() {
+        let mut rng = Rng::seed_from_u64(404);
+        let b = Butterfly::gaussian(8, 1.0, &mut rng);
+        for keep in [vec![], vec![9u64], vec![3, 3], vec![5, 2]] {
+            let bytes = format::encode(
+                ModelKind::TruncatedButterfly.tag(),
+                &[
+                    Section::U64(vec![8]),
+                    Section::U64(keep.clone()),
+                    Section::F64(b.flat_weights()),
+                ],
+            );
+            assert!(Model::decode(&bytes).is_err(), "keep={keep:?} accepted");
+        }
+    }
+}

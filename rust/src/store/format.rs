@@ -1,0 +1,307 @@
+//! The on-disk checkpoint container: a self-describing, versioned
+//! binary format (DESIGN.md §8).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"BFLYSTOR"
+//! 8       4     u32    format version (currently 1)
+//! 12      4     u32    model kind tag (see store::checkpoint::ModelKind)
+//! 16      4     u32    section count S
+//! 20      …     S sections, each:
+//!                 1    u8   section type: 0 = u64 array, 1 = f64 array
+//!                 8    u64  element count k
+//!                 8*k  payload (u64 LE, or f64 as IEEE-754 bit patterns LE)
+//! end-8   8     u64    FNV-1a 64 checksum of every preceding byte
+//! ```
+//!
+//! `f64` values travel as raw bit patterns (`to_bits`/`from_bits`), so
+//! a `save → load` round-trip is bitwise exact — the acceptance
+//! criterion for serving a restored model. Decoding never panics on
+//! hostile input: every read is bounds-checked and every structural
+//! violation is a clean `Err`. Section lengths are implicitly bounded
+//! by the file size (the cursor refuses to read past the end), so a
+//! corrupt header cannot trigger an outsized allocation.
+
+use anyhow::{bail, Result};
+
+/// First eight bytes of every checkpoint.
+pub const MAGIC: [u8; 8] = *b"BFLYSTOR";
+
+/// Current format version. Bump on any layout change; `decode` rejects
+/// versions it does not understand.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One typed payload block inside a checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Section {
+    U64(Vec<u64>),
+    F64(Vec<f64>),
+}
+
+impl Section {
+    /// The u64 payload, or an error naming `what` for the mismatch.
+    pub fn as_u64(&self, what: &str) -> Result<&[u64]> {
+        match self {
+            Section::U64(v) => Ok(v),
+            Section::F64(_) => bail!("checkpoint section `{what}`: expected u64 data, found f64"),
+        }
+    }
+
+    /// The f64 payload, or an error naming `what` for the mismatch.
+    pub fn as_f64(&self, what: &str) -> Result<&[f64]> {
+        match self {
+            Section::F64(v) => Ok(v),
+            Section::U64(_) => bail!("checkpoint section `{what}`: expected f64 data, found u64"),
+        }
+    }
+}
+
+/// FNV-1a 64-bit over `bytes` — cheap, dependency-free corruption
+/// detection (not cryptographic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialise `kind` + `sections` into a checkpoint byte buffer.
+pub fn encode(kind: u32, sections: &[Section]) -> Vec<u8> {
+    let payload: usize = sections
+        .iter()
+        .map(|s| {
+            9 + 8 * match s {
+                Section::U64(v) => v.len(),
+                Section::F64(v) => v.len(),
+            }
+        })
+        .sum();
+    let mut buf = Vec::with_capacity(20 + payload + 8);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&kind.to_le_bytes());
+    buf.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for s in sections {
+        match s {
+            Section::U64(v) => {
+                buf.push(0u8);
+                buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Section::F64(v) => {
+                buf.push(1u8);
+                buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+                for x in v {
+                    buf.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    let sum = fnv1a64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Bounds-checked reader over a byte slice.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!(
+                "truncated checkpoint: wanted {n} bytes at offset {}, only {} available",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+/// Validate magic + version and return `(format_version, kind_tag)`
+/// without touching the payload — used by the registry scan so listing
+/// a directory stays O(#files), not O(total bytes).
+pub fn peek(bytes: &[u8]) -> Result<(u32, u32)> {
+    let mut c = Cursor { bytes, pos: 0 };
+    let magic = c.take(8)?;
+    if magic != MAGIC {
+        bail!("bad magic: not a butterfly-net checkpoint");
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        bail!("unsupported checkpoint format version {version} (this build reads {FORMAT_VERSION})");
+    }
+    let kind = c.u32()?;
+    Ok((version, kind))
+}
+
+/// Parse a checkpoint buffer into `(kind_tag, sections)`, validating
+/// magic, version, structure and checksum. Never panics.
+pub fn decode(bytes: &[u8]) -> Result<(u32, Vec<Section>)> {
+    let (_, kind) = peek(bytes)?;
+    if bytes.len() < 20 + 8 {
+        bail!("truncated checkpoint: {} bytes is below the minimum", bytes.len());
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let computed = fnv1a64(body);
+    if stored != computed {
+        bail!("checksum mismatch: stored {stored:#018x}, computed {computed:#018x} — corrupt checkpoint");
+    }
+    let mut c = Cursor {
+        bytes: body,
+        pos: 16,
+    };
+    let n_sections = c.u32()? as usize;
+    let mut sections = Vec::with_capacity(n_sections.min(64));
+    for i in 0..n_sections {
+        let tag = c.u8()?;
+        let len64 = c.u64()?;
+        let len: usize = usize::try_from(len64)
+            .map_err(|_| anyhow::anyhow!("section {i}: length {len64} does not fit in usize"))?;
+        match tag {
+            0 => {
+                let mut v = Vec::with_capacity(len.min(1 << 20));
+                for _ in 0..len {
+                    v.push(c.u64()?);
+                }
+                sections.push(Section::U64(v));
+            }
+            1 => {
+                let mut v = Vec::with_capacity(len.min(1 << 20));
+                for _ in 0..len {
+                    v.push(f64::from_bits(c.u64()?));
+                }
+                sections.push(Section::F64(v));
+            }
+            other => bail!("section {i}: unknown section type {other}"),
+        }
+    }
+    if c.pos != body.len() {
+        bail!(
+            "trailing garbage: {} unparsed bytes before the checksum",
+            body.len() - c.pos
+        );
+    }
+    Ok((kind, sections))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        encode(
+            3,
+            &[
+                Section::U64(vec![16, 2, 9]),
+                Section::F64(vec![1.5, -0.0, f64::MIN_POSITIVE, 3.25e300]),
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_bits() {
+        let buf = sample();
+        let (kind, sections) = decode(&buf).unwrap();
+        assert_eq!(kind, 3);
+        assert_eq!(sections[0], Section::U64(vec![16, 2, 9]));
+        match &sections[1] {
+            Section::F64(v) => {
+                assert_eq!(v[0].to_bits(), 1.5f64.to_bits());
+                assert_eq!(v[1].to_bits(), (-0.0f64).to_bits(), "signed zero preserved");
+                assert_eq!(v[3].to_bits(), 3.25e300f64.to_bits());
+            }
+            _ => panic!("wrong section type"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_error() {
+        let buf = sample();
+        for cut in 0..buf.len() {
+            let res = decode(&buf[..cut]);
+            assert!(res.is_err(), "prefix of {cut} bytes decoded successfully");
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = sample();
+        buf[0] ^= 0xFF;
+        let err = decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut buf = sample();
+        buf[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn payload_corruption_detected() {
+        let mut buf = sample();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x01;
+        let err = decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("magic") || err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        // splice extra bytes between payload and checksum, re-sign
+        let buf = encode(1, &[Section::U64(vec![4])]);
+        let mut body = buf[..buf.len() - 8].to_vec();
+        body.extend_from_slice(&[0u8; 3]);
+        let sum = fnv1a64(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        let err = decode(&body).unwrap_err().to_string();
+        assert!(err.contains("trailing") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn peek_reads_header_only() {
+        let buf = sample();
+        assert_eq!(peek(&buf).unwrap(), (FORMAT_VERSION, 3));
+        // peek works on just the 16-byte header too
+        assert_eq!(peek(&buf[..16]).unwrap(), (FORMAT_VERSION, 3));
+        assert!(peek(&buf[..10]).is_err());
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // well-known FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

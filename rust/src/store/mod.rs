@@ -1,0 +1,33 @@
+//! Model store (DESIGN.md §8): versioned checkpoints + a directory
+//! registry + zero-downtime hot-swap into the serving coordinator.
+//!
+//! Three pieces:
+//!
+//! * [`format`] — the self-describing binary container (magic, format
+//!   version, model-kind tag, typed sections, FNV-1a checksum). Bitwise
+//!   exact for f64 weights; bounds-checked decoding with clean errors.
+//! * [`Model`] / [`ModelKind`] — save/load for every persistable model
+//!   in the crate (`ButterflyLayer`, `Butterfly`, `TruncatedButterfly`,
+//!   the dense/butterfly classification heads, and both §4
+//!   autoencoders), plus [`Model::into_engine`] to serve any of them
+//!   behind the coordinator's dynamic batcher.
+//! * [`ModelRegistry`] — scans a store directory into named, versioned
+//!   entries (`name@v3`), publishes new versions atomically
+//!   (temp-file + rename, immutable versions), and constructs the
+//!   right engine for each entry.
+//!
+//! The serving side lives in `crate::coordinator`:
+//! `Coordinator::swap_variant` drains and replaces a running variant's
+//! engine inside the batcher thread — zero dropped requests — and the
+//! `SWAP` protocol verb triggers it remotely from a checkpoint in the
+//! store. Structured butterfly factors make the whole flow cheap: a
+//! 1024×1024 butterfly checkpoint is `2n log₂ n` f64s (~160 KB), not
+//! `n²` (~8 MB).
+
+pub mod format;
+
+mod checkpoint;
+mod registry;
+
+pub use checkpoint::{Model, ModelEngine, ModelKind};
+pub use registry::{ModelRegistry, RegistryEntry};

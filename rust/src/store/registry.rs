@@ -1,0 +1,362 @@
+//! Directory-of-checkpoints registry: named, versioned model entries
+//! (`name@v3`) with atomic publication and Engine construction.
+//!
+//! On-disk convention: every checkpoint in the store directory is a
+//! file `{name}@v{version}.ckpt`. Versions are immutable — `save`
+//! writes to a temp file and `rename`s it into place (atomic on POSIX
+//! within one filesystem), and refuses to clobber an existing version.
+//! Files that are not valid checkpoints are skipped with a warning, so
+//! one corrupt upload cannot take the registry down.
+
+use super::checkpoint::{Model, ModelKind};
+use super::format;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// One scanned checkpoint.
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    pub name: String,
+    pub version: u32,
+    pub kind: ModelKind,
+    pub path: PathBuf,
+    /// File size in bytes (structured checkpoints are tiny — the point
+    /// of O(n log n) butterfly weights).
+    pub size_bytes: u64,
+}
+
+impl RegistryEntry {
+    /// Canonical `name@vN` identifier.
+    pub fn id(&self) -> String {
+        format!("{}@v{}", self.name, self.version)
+    }
+}
+
+/// A scanned store directory.
+pub struct ModelRegistry {
+    dir: PathBuf,
+    entries: Vec<RegistryEntry>,
+}
+
+/// Parse `{name}@v{version}.ckpt` out of a file name.
+fn parse_file_name(file: &str) -> Option<(String, u32)> {
+    let stem = file.strip_suffix(".ckpt")?;
+    let (name, ver) = stem.rsplit_once("@v")?;
+    if name.is_empty() {
+        return None;
+    }
+    let version: u32 = ver.parse().ok()?;
+    Some((name.to_string(), version))
+}
+
+/// Reject names that would break the file convention or the wire
+/// protocol (whitespace-delimited).
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("model name must be nonempty");
+    }
+    if name
+        .chars()
+        .any(|c| !(c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.'))
+    {
+        bail!("model name `{name}` may only contain [A-Za-z0-9._-]");
+    }
+    Ok(())
+}
+
+impl ModelRegistry {
+    /// Open (creating if needed) and scan a store directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store directory {}", dir.display()))?;
+        let mut entries = Vec::new();
+        for item in std::fs::read_dir(&dir)
+            .with_context(|| format!("scanning store directory {}", dir.display()))?
+        {
+            let item = match item {
+                Ok(i) => i,
+                Err(_) => continue,
+            };
+            let path = item.path();
+            let file = match path.file_name().and_then(|f| f.to_str()) {
+                Some(f) => f.to_string(),
+                None => continue,
+            };
+            let (name, version) = match parse_file_name(&file) {
+                Some(nv) => nv,
+                None => continue, // not a checkpoint file
+            };
+            // A hand-copied file like `m@v1@v2.ckpt` parses to name
+            // `m@v1`, which `resolve` could never look up again; hold
+            // scanned names to the same rules `save` enforces.
+            if let Err(e) = validate_name(&name) {
+                eprintln!("store: skipping {file}: {e:#}");
+                continue;
+            }
+            match Self::peek_kind(&path) {
+                Ok(kind) => {
+                    let size_bytes = item.metadata().map(|m| m.len()).unwrap_or(0);
+                    entries.push(RegistryEntry {
+                        name,
+                        version,
+                        kind,
+                        path,
+                        size_bytes,
+                    });
+                }
+                Err(e) => {
+                    eprintln!("store: skipping {file}: {e:#}");
+                }
+            }
+        }
+        entries.sort_by(|a, b| (&a.name, a.version).cmp(&(&b.name, b.version)));
+        Ok(ModelRegistry { dir, entries })
+    }
+
+    /// Read just the 16-byte header to classify a file.
+    fn peek_kind(path: &Path) -> Result<ModelKind> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut head = [0u8; 16];
+        f.read_exact(&mut head)
+            .map_err(|_| anyhow!("file shorter than the checkpoint header"))?;
+        let (_, tag) = format::peek(&head)?;
+        ModelKind::from_tag(tag).ok_or_else(|| anyhow!("unknown model kind tag {tag}"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All entries, sorted by (name, version).
+    pub fn entries(&self) -> &[RegistryEntry] {
+        &self.entries
+    }
+
+    /// Distinct model names.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.entries.iter().map(|e| e.name.clone()).collect();
+        out.dedup();
+        out
+    }
+
+    /// Specific version of a name.
+    pub fn get(&self, name: &str, version: u32) -> Option<&RegistryEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.version == version)
+    }
+
+    /// Highest version of a name.
+    pub fn latest(&self, name: &str) -> Option<&RegistryEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name)
+            .max_by_key(|e| e.version)
+    }
+
+    /// Resolve `name@vN` (exact) or `name` (latest version).
+    pub fn resolve(&self, spec: &str) -> Result<&RegistryEntry> {
+        if let Some((name, ver)) = spec.rsplit_once("@v") {
+            let version: u32 = ver
+                .parse()
+                .map_err(|_| anyhow!("bad version in `{spec}` (want name@vN)"))?;
+            return self
+                .get(name, version)
+                .ok_or_else(|| anyhow!("no checkpoint `{spec}` in {}", self.dir.display()));
+        }
+        self.latest(spec)
+            .ok_or_else(|| anyhow!("no checkpoint named `{spec}` in {}", self.dir.display()))
+    }
+
+    /// Load the model behind `spec` (`name` or `name@vN`).
+    pub fn load(&self, spec: &str) -> Result<Model> {
+        Model::load(&self.resolve(spec)?.path)
+    }
+
+    /// Load and wrap in the right coordinator engine for its kind.
+    pub fn engine(&self, spec: &str) -> Result<Box<dyn crate::coordinator::Engine>> {
+        Ok(self.load(spec)?.into_engine())
+    }
+
+    /// Next unused version for `name` (1 for a fresh name).
+    pub fn next_version(&self, name: &str) -> u32 {
+        self.latest(name).map(|e| e.version + 1).unwrap_or(1)
+    }
+
+    /// Atomically publish `model` as `name@v{version}`. Versions are
+    /// immutable: publishing an existing version is an error.
+    pub fn save(&mut self, name: &str, version: u32, model: &Model) -> Result<PathBuf> {
+        validate_name(name)?;
+        if version == 0 {
+            bail!("versions start at 1");
+        }
+        let final_path = self.dir.join(format!("{name}@v{version}.ckpt"));
+        if final_path.exists() {
+            bail!(
+                "checkpoint {} already exists — versions are immutable, bump to v{}",
+                final_path.display(),
+                self.next_version(name)
+            );
+        }
+        let tmp_path = self
+            .dir
+            .join(format!(".tmp-{name}@v{version}.{}.ckpt", std::process::id()));
+        std::fs::write(&tmp_path, model.encode())
+            .with_context(|| format!("writing {}", tmp_path.display()))?;
+        std::fs::rename(&tmp_path, &final_path).with_context(|| {
+            let _ = std::fs::remove_file(&tmp_path);
+            format!("publishing {}", final_path.display())
+        })?;
+        let size_bytes = std::fs::metadata(&final_path).map(|m| m.len()).unwrap_or(0);
+        self.entries.push(RegistryEntry {
+            name: name.to_string(),
+            version,
+            kind: model.kind(),
+            path: final_path.clone(),
+            size_bytes,
+        });
+        self.entries
+            .sort_by(|a, b| (&a.name, a.version).cmp(&(&b.name, b.version)));
+        Ok(final_path)
+    }
+
+    /// Human listing (one line per entry) for the CLI. Loads each
+    /// checkpoint to report serving dims — O(total bytes), fine for a
+    /// listing command — and surfaces unreadable entries explicitly
+    /// instead of printing bogus dims.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            let dims = match Model::load(&e.path) {
+                Ok(m) => {
+                    let (din, dout) = m.io_dims();
+                    format!("{din:>5}→{dout:<5}")
+                }
+                Err(err) => format!("unreadable: {err:#}"),
+            };
+            out.push_str(&format!(
+                "{:<24} {:<20} {} {:>8} bytes\n",
+                e.id(),
+                e.kind.name(),
+                dims,
+                e.size_bytes
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::{Butterfly, TruncatedButterfly};
+    use crate::rng::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn temp_store() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "bfly-registry-test-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn file_name_parsing() {
+        assert_eq!(parse_file_name("m@v3.ckpt"), Some(("m".into(), 3)));
+        assert_eq!(
+            parse_file_name("a-b.c@v12.ckpt"),
+            Some(("a-b.c".into(), 12))
+        );
+        assert_eq!(parse_file_name("m@v3"), None);
+        assert_eq!(parse_file_name("m.ckpt"), None);
+        assert_eq!(parse_file_name("@v3.ckpt"), None);
+        assert_eq!(parse_file_name("m@vx.ckpt"), None);
+    }
+
+    #[test]
+    fn save_scan_resolve_load() {
+        let dir = temp_store();
+        let mut rng = Rng::seed_from_u64(500);
+        let m1 = Model::Network(Butterfly::gaussian(16, 1.0, &mut rng));
+        let m2 = Model::Network(Butterfly::gaussian(16, 1.0, &mut rng));
+        let m3 = Model::Truncated(TruncatedButterfly::fjlt(32, 5, &mut rng));
+        {
+            let mut reg = ModelRegistry::open(&dir).unwrap();
+            assert_eq!(reg.next_version("net"), 1);
+            reg.save("net", 1, &m1).unwrap();
+            assert_eq!(reg.next_version("net"), 2);
+            reg.save("net", 2, &m2).unwrap();
+            reg.save("proj", 1, &m3).unwrap();
+            // immutability
+            assert!(reg.save("net", 2, &m1).is_err());
+        }
+        // fresh open ("restart"): scan finds everything
+        let reg = ModelRegistry::open(&dir).unwrap();
+        assert_eq!(reg.entries().len(), 3);
+        assert_eq!(reg.names(), vec!["net".to_string(), "proj".to_string()]);
+        assert_eq!(reg.latest("net").unwrap().version, 2);
+        assert_eq!(reg.resolve("net@v1").unwrap().version, 1);
+        assert_eq!(reg.resolve("net").unwrap().version, 2);
+        assert!(reg.resolve("net@v9").is_err());
+        assert!(reg.resolve("ghost").is_err());
+        // loaded latest == saved m2, bitwise through forward
+        let loaded = reg.load("net").unwrap();
+        let x = crate::linalg::Mat::gaussian(3, 16, 1.0, &mut rng);
+        let (a, b) = (m2.forward(&x), loaded.forward(&x));
+        assert!(a
+            .data()
+            .iter()
+            .zip(b.data().iter())
+            .all(|(p, q)| p.to_bits() == q.to_bits()));
+        // engine construction picks up the right dims
+        let e = reg.engine("proj").unwrap();
+        assert_eq!(e.input_dim(), 32);
+        assert_eq!(e.output_dim(), 5);
+        assert!(!reg.describe().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_are_skipped_not_fatal() {
+        let dir = temp_store();
+        let mut rng = Rng::seed_from_u64(501);
+        {
+            let mut reg = ModelRegistry::open(&dir).unwrap();
+            reg.save("ok", 1, &Model::Network(Butterfly::gaussian(8, 1.0, &mut rng)))
+                .unwrap();
+        }
+        std::fs::write(dir.join("junk@v1.ckpt"), b"definitely not a checkpoint").unwrap();
+        std::fs::write(dir.join("README.txt"), b"ignored").unwrap();
+        // a *valid* checkpoint under a name resolve() could never look
+        // up again (its name part contains `@v`) must also be skipped
+        let valid = Model::Network(Butterfly::gaussian(4, 1.0, &mut rng)).encode();
+        std::fs::write(dir.join("evil@v1@v2.ckpt"), valid).unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        assert_eq!(reg.entries().len(), 1);
+        assert_eq!(reg.entries()[0].name, "ok");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn name_validation() {
+        let dir = temp_store();
+        let mut rng = Rng::seed_from_u64(502);
+        let m = Model::Network(Butterfly::gaussian(4, 1.0, &mut rng));
+        let mut reg = ModelRegistry::open(&dir).unwrap();
+        assert!(reg.save("", 1, &m).is_err());
+        assert!(reg.save("has space", 1, &m).is_err());
+        assert!(reg.save("slash/y", 1, &m).is_err());
+        assert!(reg.save("at@v", 1, &m).is_err());
+        assert!(reg.save("fine-Name_1.2", 1, &m).is_ok());
+        assert!(reg.save("zerover", 0, &m).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -197,6 +197,144 @@ fn router_conservation_across_variants() {
     );
 }
 
+/// Engine multiplying by a constant — lets a response be attributed to
+/// the engine generation that produced it.
+struct Mul {
+    factor: f64,
+    latency: Duration,
+}
+
+impl Engine for Mul {
+    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let f = self.factor;
+        Ok(x.map(|v| v * f))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+#[test]
+fn hot_swap_conserves_requests_and_switches_cleanly() {
+    // The tentpole invariant of the model store: swapping a variant's
+    // engine mid-traffic drops nothing. Every accepted request is
+    // answered exactly once, by exactly one engine generation, and
+    // requests accepted after the swap acks are answered by the new
+    // generation only.
+    let cfg = PropConfig {
+        cases: 10,
+        ..Default::default()
+    };
+    forall(
+        "hot-swap-conservation",
+        &cfg,
+        |rng| {
+            (
+                gen::range(rng, 1, 4),  // client threads
+                gen::range(rng, 5, 30), // requests per thread
+                gen::range(rng, 1, 8),  // max_batch
+                gen::range(rng, 0, 200) as u64, // engine latency µs
+            )
+        },
+        |&(n_threads, per_thread, max_batch, latency_us)| {
+            let mut c = Coordinator::new();
+            c.register(
+                "m",
+                Box::new(Mul {
+                    factor: 2.0,
+                    latency: Duration::from_micros(latency_us),
+                }),
+                BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_micros(150),
+                    queue_cap: 4096, // large: this property isolates swap, not backpressure
+                },
+            );
+            let c = Arc::new(c);
+            let old_hits = Arc::new(AtomicUsize::new(0));
+            let new_hits = Arc::new(AtomicUsize::new(0));
+            let bad = Arc::new(AtomicUsize::new(0));
+            let answered = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|scope| {
+                for t in 0..n_threads {
+                    let c = Arc::clone(&c);
+                    let old_hits = Arc::clone(&old_hits);
+                    let new_hits = Arc::clone(&new_hits);
+                    let bad = Arc::clone(&bad);
+                    let answered = Arc::clone(&answered);
+                    scope.spawn(move || {
+                        for i in 0..per_thread {
+                            let v = (t * 1000 + i) as f64 + 1.0;
+                            match c.infer("m", vec![v, v]) {
+                                Ok(out) => {
+                                    answered.fetch_add(1, Ordering::SeqCst);
+                                    if out[0] == 2.0 * v {
+                                        old_hits.fetch_add(1, Ordering::SeqCst);
+                                    } else if out[0] == 3.0 * v {
+                                        new_hits.fetch_add(1, Ordering::SeqCst);
+                                    } else {
+                                        bad.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                }
+                                Err(_) => {
+                                    bad.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                    });
+                }
+                // swap mid-traffic
+                c.swap_variant(
+                    "m",
+                    Box::new(Mul {
+                        factor: 3.0,
+                        latency: Duration::from_micros(latency_us),
+                    }),
+                )
+                .map_err(|e| format!("swap failed: {e:#}"))
+                .unwrap();
+            });
+            let total = n_threads * per_thread;
+            let (old, new, bad, ans) = (
+                old_hits.load(Ordering::SeqCst),
+                new_hits.load(Ordering::SeqCst),
+                bad.load(Ordering::SeqCst),
+                answered.load(Ordering::SeqCst),
+            );
+            if bad != 0 {
+                return Err(format!("{bad} lost/rejected/garbled requests across the swap"));
+            }
+            if ans != total || old + new != total {
+                return Err(format!(
+                    "conservation: answered {ans}, old {old} + new {new} != total {total}"
+                ));
+            }
+            // after the swap acked, only the new engine answers
+            let probe = c.infer("m", vec![1.0, 1.0]).map_err(|e| e.to_string())?;
+            if probe[0] != 3.0 {
+                return Err(format!("post-swap probe answered by old engine: {probe:?}"));
+            }
+            if c.metrics.responses.get() as usize != total + 1 {
+                return Err(format!(
+                    "metrics responses {} != {}",
+                    c.metrics.responses.get(),
+                    total + 1
+                ));
+            }
+            if c.metrics.swaps.get() != 1 {
+                return Err(format!("swap count {} != 1", c.metrics.swaps.get()));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn deadline_bounds_queue_wait() {
     // With max_batch never reached, every request must still be
