@@ -289,7 +289,7 @@ fn main() -> Result<()> {
             total as f64 / elapsed.as_secs_f64()
         );
     }
-    println!("\nmetrics:\n{}", coordinator.metrics.snapshot());
+    println!("\nmetrics:\n{}", coordinator.obs.snapshot());
     server.stop();
     rt.shutdown();
     println!("e2e OK");

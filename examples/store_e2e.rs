@@ -185,7 +185,7 @@ fn main() -> Result<()> {
     if l != 0 || a + b != n_clients * per_client {
         bail!("conservation violated across the hot swap");
     }
-    println!("\nmetrics:\n{}", coordinator.metrics.snapshot());
+    println!("\nmetrics:\n{}", coordinator.obs.snapshot());
     server.stop();
     let _ = std::fs::remove_dir_all(&dir);
     println!("store e2e OK");

@@ -67,5 +67,5 @@ fn main() {
     }
     suite.report();
     suite.write_csv("coordinator.csv");
-    println!("\n{}", c.metrics.snapshot());
+    println!("\n{}", c.obs.snapshot());
 }

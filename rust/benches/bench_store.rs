@@ -127,7 +127,7 @@ fn main() {
         println!(
             "served {} inferences during the swap benchmark\n{}",
             served.load(Ordering::Relaxed),
-            c.metrics.snapshot()
+            c.obs.snapshot()
         );
     }
 

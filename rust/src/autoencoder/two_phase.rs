@@ -9,7 +9,8 @@
 
 use super::butterfly_ae::ButterflyAe;
 use crate::linalg::Mat;
-use crate::train::{Adam, Optimizer};
+use crate::obs::event;
+use crate::train::{log_phase, Adam, Optimizer};
 
 /// Options for the two-phase trainer.
 #[derive(Clone, Debug)]
@@ -59,10 +60,16 @@ pub fn train_two_phase(ae: &mut ButterflyAe, x: &Mat, y: &Mat, opts: &TwoPhaseOp
         ae.set_params_de(&params);
         if it % opts.log_every.max(1) == 0 {
             log.curve.push((it, g.loss));
+            log_phase("train.two_phase", "fixed_b", it, g.loss);
         }
     }
     log.phase1_final = ae.loss(x, y);
     log.phase_boundary = log.curve.len();
+    event::info("train.two_phase")
+        .field("phase", "fixed_b")
+        .field("iters", opts.phase1_iters)
+        .field("final_loss", format!("{:.6}", log.phase1_final))
+        .emit();
     // ---- phase 2: all parameters ----
     let mut opt2 = Adam::new(opts.lr2);
     let mut params_all = ae.params();
@@ -73,9 +80,15 @@ pub fn train_two_phase(ae: &mut ButterflyAe, x: &Mat, y: &Mat, opts: &TwoPhaseOp
         ae.set_params(&params_all);
         if it % opts.log_every.max(1) == 0 {
             log.curve.push((opts.phase1_iters + it, g.loss));
+            log_phase("train.two_phase", "joint", opts.phase1_iters + it, g.loss);
         }
     }
     log.phase2_final = ae.loss(x, y);
+    event::info("train.two_phase")
+        .field("phase", "joint")
+        .field("iters", opts.phase2_iters)
+        .field("final_loss", format!("{:.6}", log.phase2_final))
+        .emit();
     log
 }
 

@@ -170,7 +170,7 @@ impl Suite {
         let path = dir.join(file);
         let header = "suite,case,iters,mean_ns,p50_ns,p95_ns,p99_ns,min_ns,items_per_s\n";
         let _ = std::fs::write(&path, format!("{header}{}", self.csv()));
-        eprintln!("wrote {}", path.display());
+        println!("wrote {}", path.display());
     }
 
     pub fn results(&self) -> &[Stats] {

@@ -8,6 +8,10 @@
 //! Commands are dispatched in `main.rs`; the serving/store surface is
 //! `serve [--store DIR]`, `save`, `swap <variant> <name[@vN]>` and
 //! `store-ls` (see DESIGN.md §8 for the checkpoint/registry design).
+//! The observability flags of `serve` — `--metrics-interval SECS`
+//! (periodic per-variant stderr report), `--slow-ms MS` (slow-request
+//! log threshold, 0 disables) and `--log-level debug|info|warn|error`
+//! (structured event-log verbosity) — are described in DESIGN.md §9.
 
 use std::collections::BTreeMap;
 

@@ -1,8 +1,16 @@
 //! Dynamic batcher: size + deadline policy over a bounded queue.
+//!
+//! Observability: every job carries a trace ID assigned at submit; the
+//! batcher records queue depth, queue wait, batch occupancy and engine
+//! time into its variant's [`VariantMetrics`], publishes a completed
+//! trace per request into the [`TraceRing`], and emits structured
+//! events on swap, backpressure rejection and engine error.
 
 use super::engine::Engine;
 use crate::linalg::Mat;
-use crate::metrics::Metrics;
+use crate::obs::event;
+use crate::obs::trace::{next_trace_id, TraceEvent, TraceRing};
+use crate::obs::VariantMetrics;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -29,10 +37,25 @@ impl Default for BatcherConfig {
     }
 }
 
+/// One answered request: the engine output (or error) plus the stage
+/// timings observed by the batcher.
+pub struct JobResult {
+    pub result: Result<Vec<f64>, String>,
+    pub trace_id: u64,
+    /// Submit → batch dispatch.
+    pub queue_wait_us: u64,
+    /// Time inside `Engine::infer_batch` for the carrying batch.
+    pub engine_us: u64,
+    /// Size of the batch this request rode in.
+    pub batch_size: u32,
+}
+
 /// One queued request.
 pub struct Job {
+    /// Trace ID assigned at submit, carried through to the response.
+    pub id: u64,
     pub input: Vec<f64>,
-    pub resp: SyncSender<Result<Vec<f64>, String>>,
+    pub resp: SyncSender<JobResult>,
     pub enqueued: Instant,
 }
 
@@ -47,6 +70,7 @@ enum Msg {
 /// A batcher thread + its submit side.
 pub struct Batcher {
     tx: SyncSender<Msg>,
+    vm: Arc<VariantMetrics>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -56,21 +80,31 @@ impl Batcher {
         name: &str,
         mut engine: Box<dyn Engine>,
         cfg: BatcherConfig,
-        metrics: Arc<Metrics>,
+        vm: Arc<VariantMetrics>,
+        traces: Arc<TraceRing>,
     ) -> Self {
         let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_cap);
         let name = name.to_string();
+        let vm2 = Arc::clone(&vm);
         let handle = std::thread::Builder::new()
             .name(format!("batcher-{name}"))
             .spawn(move || {
+                let vm = vm2;
                 loop {
                     // Block for the first job of the next batch.
                     let first = match rx.recv() {
-                        Ok(Msg::Job(j)) => j,
+                        Ok(Msg::Job(j)) => {
+                            vm.queue_depth.dec();
+                            j
+                        }
                         Ok(Msg::Swap(e, ack)) => {
                             // Queue empty ahead of the swap: install now.
                             engine = e;
-                            metrics.swaps.inc();
+                            vm.swaps.inc();
+                            event::info("coordinator.swap")
+                                .field("variant", &vm.name)
+                                .msg("engine swapped (idle)")
+                                .emit();
                             let _ = ack.try_send(());
                             continue;
                         }
@@ -87,7 +121,10 @@ impl Batcher {
                             break;
                         }
                         match rx.recv_timeout(deadline - now) {
-                            Ok(Msg::Job(j)) => jobs.push(j),
+                            Ok(Msg::Job(j)) => {
+                                vm.queue_depth.dec();
+                                jobs.push(j);
+                            }
                             Ok(Msg::Swap(e, ack)) => {
                                 // Close the batch: jobs submitted before
                                 // the swap run on the old engine.
@@ -101,14 +138,18 @@ impl Batcher {
                             Err(_) => break, // deadline or disconnect
                         }
                     }
-                    Self::dispatch(&mut *engine, &jobs, &metrics);
+                    Self::dispatch(&mut *engine, &jobs, &vm, &traces);
                     // Drain-and-replace: the in-flight batch has been
                     // answered on the old engine; everything queued after
                     // the swap message sees the new one. No request is
                     // ever dropped.
                     if let Some((e, ack)) = pending_swap {
                         engine = e;
-                        metrics.swaps.inc();
+                        vm.swaps.inc();
+                        event::info("coordinator.swap")
+                            .field("variant", &vm.name)
+                            .msg("engine swapped (drain-and-replace)")
+                            .emit();
                         let _ = ack.try_send(());
                     }
                     if stop {
@@ -118,7 +159,10 @@ impl Batcher {
                 // Drain anything left after shutdown signal.
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
-                        Msg::Job(j) => Self::dispatch(&mut *engine, &[j], &metrics),
+                        Msg::Job(j) => {
+                            vm.queue_depth.dec();
+                            Self::dispatch(&mut *engine, &[j], &vm, &traces);
+                        }
                         // Unblock any swapper; the engine no longer matters.
                         Msg::Swap(_, ack) => {
                             let _ = ack.try_send(());
@@ -130,46 +174,119 @@ impl Batcher {
             .expect("spawn batcher thread");
         Batcher {
             tx,
+            vm,
             handle: Some(handle),
         }
     }
 
-    fn dispatch(engine: &mut dyn Engine, jobs: &[Job], metrics: &Metrics) {
-        metrics.batches.record(jobs.len());
-        for j in jobs {
-            metrics.queue_wait.record(j.enqueued.elapsed());
-        }
+    /// This batcher's variant metrics (shared with the coordinator).
+    pub fn metrics(&self) -> &Arc<VariantMetrics> {
+        &self.vm
+    }
+
+    fn dispatch(
+        engine: &mut dyn Engine,
+        jobs: &[Job],
+        vm: &VariantMetrics,
+        traces: &TraceRing,
+    ) {
+        let batch_size = jobs.len() as u32;
+        vm.batches.record(jobs.len());
+        let dispatched = Instant::now();
+        let waits_us: Vec<u64> = jobs
+            .iter()
+            .map(|j| {
+                let w = dispatched.saturating_duration_since(j.enqueued);
+                vm.queue_wait.record(w);
+                w.as_micros() as u64
+            })
+            .collect();
         let dim = engine.input_dim();
         // Validate per-row input sizes before forming the batch.
-        let mut valid: Vec<&Job> = Vec::with_capacity(jobs.len());
-        for j in jobs {
+        let mut valid: Vec<(usize, &Job)> = Vec::with_capacity(jobs.len());
+        for (i, j) in jobs.iter().enumerate() {
             if j.input.len() == dim {
-                valid.push(j);
+                valid.push((i, j));
             } else {
-                metrics.errors.inc();
-                let _ = j.resp.try_send(Err(format!(
-                    "input dim {} != expected {dim}",
-                    j.input.len()
-                )));
+                vm.errors.inc();
+                traces.push(TraceEvent {
+                    id: j.id,
+                    tag: vm.trace_tag,
+                    queue_wait_us: waits_us[i],
+                    engine_us: 0,
+                    total_us: j.enqueued.elapsed().as_micros() as u64,
+                    batch: batch_size,
+                    ok: false,
+                });
+                let _ = j.resp.try_send(JobResult {
+                    result: Err(format!("input dim {} != expected {dim}", j.input.len())),
+                    trace_id: j.id,
+                    queue_wait_us: waits_us[i],
+                    engine_us: 0,
+                    batch_size,
+                });
             }
         }
         if valid.is_empty() {
             return;
         }
         let mut x = Mat::zeros(valid.len(), dim);
-        for (r, j) in valid.iter().enumerate() {
+        for (r, (_, j)) in valid.iter().enumerate() {
             x.row_mut(r).copy_from_slice(&j.input);
         }
-        match engine.infer_batch(&x) {
+        let t_engine = Instant::now();
+        let outcome = engine.infer_batch(&x);
+        let engine_elapsed = t_engine.elapsed();
+        vm.engine_time.record(engine_elapsed);
+        let engine_us = engine_elapsed.as_micros() as u64;
+        match outcome {
             Ok(y) => {
-                for (r, j) in valid.iter().enumerate() {
-                    let _ = j.resp.try_send(Ok(y.row(r).to_vec()));
+                for (r, (i, j)) in valid.iter().enumerate() {
+                    traces.push(TraceEvent {
+                        id: j.id,
+                        tag: vm.trace_tag,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        total_us: j.enqueued.elapsed().as_micros() as u64,
+                        batch: batch_size,
+                        ok: true,
+                    });
+                    let _ = j.resp.try_send(JobResult {
+                        result: Ok(y.row(r).to_vec()),
+                        trace_id: j.id,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        batch_size,
+                    });
                 }
             }
             Err(e) => {
-                metrics.errors.inc();
-                for j in valid {
-                    let _ = j.resp.try_send(Err(format!("{e:#}")));
+                // Count one error per failed request so the per-variant
+                // invariant `requests == responses + rejected + errors`
+                // reconciles even for multi-request batches.
+                vm.errors.add(valid.len() as u64);
+                event::error("coordinator.engine")
+                    .field("variant", &vm.name)
+                    .field("batch", valid.len())
+                    .msg(format!("{e:#}"))
+                    .emit();
+                for (i, j) in &valid {
+                    traces.push(TraceEvent {
+                        id: j.id,
+                        tag: vm.trace_tag,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        total_us: j.enqueued.elapsed().as_micros() as u64,
+                        batch: batch_size,
+                        ok: false,
+                    });
+                    let _ = j.resp.try_send(JobResult {
+                        result: Err(format!("{e:#}")),
+                        trace_id: j.id,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        batch_size,
+                    });
                 }
             }
         }
@@ -177,17 +294,34 @@ impl Batcher {
 
     /// Submit one request; returns the response receiver, or an error
     /// if the queue is full (backpressure) or the batcher is gone.
-    pub fn submit(&self, input: Vec<f64>) -> Result<Receiver<Result<Vec<f64>, String>>> {
+    /// Rejections are counted against the variant and emit a
+    /// `coordinator.backpressure` warn event.
+    pub fn submit(&self, input: Vec<f64>) -> Result<Receiver<JobResult>> {
         let (rtx, rrx) = sync_channel(1);
         let job = Job {
+            id: next_trace_id(),
             input,
             resp: rtx,
             enqueued: Instant::now(),
         };
         match self.tx.try_send(Msg::Job(job)) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher stopped")),
+            Ok(()) => {
+                self.vm.queue_depth.inc();
+                Ok(rrx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.vm.rejected.inc();
+                event::warn("coordinator.backpressure")
+                    .field("variant", &self.vm.name)
+                    .field("queue_depth", self.vm.queue_depth.get())
+                    .msg("queue full, request rejected")
+                    .emit();
+                Err(anyhow!("queue full (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.vm.rejected.inc();
+                Err(anyhow!("batcher stopped"))
+            }
         }
     }
 
@@ -228,6 +362,7 @@ impl Drop for Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::Obs;
 
     struct Echo {
         dim: usize,
@@ -246,11 +381,21 @@ mod tests {
         }
     }
 
+    fn spawn_with_obs(
+        obs: &Obs,
+        name: &str,
+        engine: Box<dyn Engine>,
+        cfg: BatcherConfig,
+    ) -> Batcher {
+        Batcher::spawn(name, engine, cfg, obs.variant(name), Arc::clone(&obs.traces))
+    }
+
     #[test]
     fn batches_coalesce() {
         let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
             "t",
             Box::new(Echo {
                 dim: 2,
@@ -261,37 +406,48 @@ mod tests {
                 max_wait: Duration::from_millis(30),
                 queue_cap: 64,
             },
-            Arc::clone(&m),
         );
         // Submit 8 quickly: they should ride in very few engine calls.
         let rxs: Vec<_> = (0..8)
             .map(|i| b.submit(vec![i as f64, 0.0]).unwrap())
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap().result.unwrap();
             assert_eq!(out[0], i as f64);
         }
         let n = calls.load(std::sync::atomic::Ordering::SeqCst);
         assert!(n <= 4, "expected coalescing, got {n} engine calls");
+        // engine time recorded once per engine call
+        let vm = obs.variant("t");
+        assert_eq!(vm.engine_time.count() as usize, n);
+        // all 8 answered: queue fully drained
+        assert_eq!(vm.queue_depth.get(), 0);
+        // a trace exists for each request
+        assert_eq!(obs.traces.completed(), 8);
         b.shutdown();
     }
 
     #[test]
     fn wrong_dim_is_an_error_response() {
-        let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
             "t",
             Box::new(Echo {
                 dim: 3,
                 calls: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
             }),
             BatcherConfig::default(),
-            Arc::clone(&m),
         );
         let rx = b.submit(vec![1.0]).unwrap();
         let res = rx.recv().unwrap();
-        assert!(res.is_err());
-        assert_eq!(m.errors.get(), 1);
+        assert!(res.result.is_err());
+        assert_eq!(obs.variant("t").errors.get(), 1);
+        // the failed request still produced a (failed) trace
+        let traces = obs.traces.recent(1);
+        assert_eq!(traces.len(), 1);
+        assert!(!traces[0].ok);
+        assert_eq!(traces[0].id, res.trace_id);
         b.shutdown();
     }
 
@@ -312,8 +468,9 @@ mod tests {
                 1
             }
         }
-        let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
             "slow",
             Box::new(Slow),
             BatcherConfig {
@@ -321,7 +478,6 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 queue_cap: 2,
             },
-            m,
         );
         let mut rejected = 0;
         let mut receivers = Vec::new();
@@ -332,10 +488,12 @@ mod tests {
             }
         }
         assert!(rejected > 0, "tiny queue + slow engine must reject");
+        assert_eq!(obs.variant("slow").rejected.get(), rejected as u64);
         // accepted ones still complete
         for rx in receivers {
-            assert!(rx.recv().unwrap().is_ok());
+            assert!(rx.recv().unwrap().result.is_ok());
         }
+        assert_eq!(obs.variant("slow").queue_depth.get(), 0);
         b.shutdown();
     }
 
@@ -354,8 +512,9 @@ mod tests {
                 1
             }
         }
-        let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
             "t",
             Box::new(Mul(2.0)),
             BatcherConfig {
@@ -363,34 +522,35 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_cap: 64,
             },
-            Arc::clone(&m),
         );
+        let vm = obs.variant("t");
         // Jobs queued ahead of the swap run on the old engine...
         let pre: Vec<_> = (1..=5).map(|i| b.submit(vec![i as f64]).unwrap()).collect();
         b.swap(Box::new(Mul(3.0))).unwrap();
         // ...jobs submitted after the swap ack run on the new one.
         let post: Vec<_> = (1..=5).map(|i| b.submit(vec![i as f64]).unwrap()).collect();
         for (i, rx) in pre.into_iter().enumerate() {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap().result.unwrap();
             assert_eq!(out[0], 2.0 * (i + 1) as f64, "pre-swap job {i}");
         }
         for (i, rx) in post.into_iter().enumerate() {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap().result.unwrap();
             assert_eq!(out[0], 3.0 * (i + 1) as f64, "post-swap job {i}");
         }
-        assert_eq!(m.swaps.get(), 1);
+        assert_eq!(vm.swaps.get(), 1);
         // swap on an idle batcher also works
         b.swap(Box::new(Mul(5.0))).unwrap();
         let rx = b.submit(vec![2.0]).unwrap();
-        assert_eq!(rx.recv().unwrap().unwrap()[0], 10.0);
-        assert_eq!(m.swaps.get(), 2);
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], 10.0);
+        assert_eq!(vm.swaps.get(), 2);
         b.shutdown();
     }
 
     #[test]
     fn deadline_bounds_wait() {
-        let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
             "t",
             Box::new(Echo {
                 dim: 1,
@@ -401,16 +561,43 @@ mod tests {
                 max_wait: Duration::from_millis(5),
                 queue_cap: 8,
             },
-            m,
         );
         let t0 = Instant::now();
         let rx = b.submit(vec![1.0]).unwrap();
-        rx.recv().unwrap().unwrap();
+        rx.recv().unwrap().result.unwrap();
         let waited = t0.elapsed();
         assert!(
             waited < Duration::from_millis(200),
             "deadline ignored: {waited:?}"
         );
+        b.shutdown();
+    }
+
+    #[test]
+    fn job_result_carries_stage_timings() {
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "t",
+            Box::new(Echo {
+                dim: 1,
+                calls: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            }),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 8,
+            },
+        );
+        let rx = b.submit(vec![7.0]).unwrap();
+        let res = rx.recv().unwrap();
+        assert!(res.result.is_ok());
+        assert!(res.trace_id > 0);
+        assert!(res.batch_size >= 1);
+        // queue wait + engine time recorded in the histograms too
+        let vm = obs.variant("t");
+        assert_eq!(vm.queue_wait.count(), 1);
+        assert_eq!(vm.engine_time.count(), 1);
         b.shutdown();
     }
 }

@@ -18,8 +18,18 @@
 //!                        per-request responses + metrics
 //! ```
 //!
+//! Observability: the coordinator owns an [`Obs`] bundle. Every request
+//! gets a trace ID at submit; the batcher records queue wait / engine
+//! time / batch occupancy into that variant's [`VariantMetrics`] and
+//! publishes completed traces into the shared ring (`TRACE <n>` verb).
+//! `METRICS` renders the human snapshot, `METRICS PROM` the Prometheus
+//! text format.
+//!
 //! Invariants (checked by `rust/tests/prop_coordinator.rs`):
 //! * conservation — every accepted request is answered exactly once;
+//! * accounting — per variant, `requests == responses + rejected +
+//!   errors` once traffic drains (unknown variants count against the
+//!   reserved [`UNROUTED`] pseudo-variant);
 //! * batch bound — no formed batch exceeds `max_batch`;
 //! * deadline — a request waits at most `max_wait` before its batch is
 //!   formed (modulo engine latency);
@@ -31,12 +41,12 @@ mod engine;
 mod protocol;
 mod server;
 
-pub use batcher::{Batcher, BatcherConfig, Job};
+pub use batcher::{Batcher, BatcherConfig, Job, JobResult};
 pub use engine::{Engine, NativeHeadEngine, PjrtEngine};
 pub use protocol::{parse_request, Request, Response};
 pub use server::{serve, ServerHandle};
 
-use crate::metrics::Metrics;
+use crate::obs::{event, Obs, UNROUTED};
 use crate::store::ModelRegistry;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -48,7 +58,7 @@ pub struct Coordinator {
     variants: HashMap<String, Batcher>,
     /// Checkpoint directory backing the `SWAP` verb (optional).
     store_dir: Mutex<Option<PathBuf>>,
-    pub metrics: Arc<Metrics>,
+    pub obs: Arc<Obs>,
 }
 
 impl Coordinator {
@@ -56,7 +66,7 @@ impl Coordinator {
         Coordinator {
             variants: HashMap::new(),
             store_dir: Mutex::new(None),
-            metrics: Arc::new(Metrics::new()),
+            obs: Arc::new(Obs::new()),
         }
     }
 
@@ -90,19 +100,28 @@ impl Coordinator {
             .collect();
         for id in ids {
             if self.has_variant(&id) {
-                eprintln!("store: variant `{id}` already registered — skipping (rename the checkpoint or swap explicitly)");
+                event::warn("coordinator.register")
+                    .field("variant", &id)
+                    .msg("store variant already registered — skipping (rename the checkpoint or swap explicitly)")
+                    .emit();
                 continue;
             }
             self.register(&id, registry.engine(&id)?, cfg.clone());
             n += 1;
         }
         self.set_store_dir(registry.dir());
+        event::info("coordinator.register")
+            .field("dir", registry.dir().display())
+            .field("registered", n)
+            .msg("store variants registered")
+            .emit();
         Ok(n)
     }
 
     /// Register a model variant behind a dynamic batcher.
     pub fn register(&mut self, name: &str, engine: Box<dyn Engine>, cfg: BatcherConfig) {
-        let b = Batcher::spawn(name, engine, cfg, Arc::clone(&self.metrics));
+        let vm = self.obs.variant(name);
+        let b = Batcher::spawn(name, engine, cfg, vm, Arc::clone(&self.obs.traces));
         self.variants.insert(name.to_string(), b);
     }
 
@@ -115,29 +134,48 @@ impl Coordinator {
     /// Submit one request row; blocks until the response arrives.
     /// Returns `Err` on unknown variant or queue-full backpressure.
     pub fn infer(&self, variant: &str, input: Vec<f64>) -> Result<Vec<f64>> {
-        self.metrics.requests.inc();
-        // Unknown variants count as rejections so `requests` always
-        // reconciles against `responses + rejected + errors` — before
-        // this, unknown-variant lookups inflated `requests` with no
-        // matching accounting on the rejection side.
+        // Unknown variants are accounted to the reserved `_unrouted`
+        // pseudo-variant so every real variant's invariant
+        // `requests == responses + rejected + errors` reconciles and
+        // unroutable traffic is still visible in the metrics.
         let b = match self.variants.get(variant) {
             Some(b) => b,
             None => {
-                self.metrics.rejected.inc();
+                let vm = self.obs.variant(UNROUTED);
+                vm.requests.inc();
+                vm.rejected.inc();
+                event::warn("coordinator.route")
+                    .field("variant", variant)
+                    .msg("unknown variant")
+                    .emit();
                 return Err(anyhow!("unknown variant `{variant}`"));
             }
         };
-        let rx = b.submit(input).map_err(|e| {
-            self.metrics.rejected.inc();
-            e
-        })?;
+        let vm = b.metrics();
+        vm.requests.inc();
         let started = std::time::Instant::now();
-        let out = rx
-            .recv()
-            .map_err(|_| anyhow!("variant `{variant}` worker gone"))?
-            .map_err(|e| anyhow!("inference failed: {e}"))?;
-        self.metrics.latency.record(started.elapsed());
-        self.metrics.responses.inc();
+        // Queue-full rejections are counted inside `Batcher::submit`.
+        let rx = b.submit(input)?;
+        let res = rx.recv().map_err(|_| {
+            vm.errors.inc();
+            anyhow!("variant `{variant}` worker gone")
+        })?;
+        let total = started.elapsed();
+        let total_us = total.as_micros() as u64;
+        if total_us >= self.obs.slow_threshold_us() {
+            event::warn("coordinator.slow")
+                .field("variant", variant)
+                .field("trace_id", res.trace_id)
+                .field("total_us", total_us)
+                .field("queue_us", res.queue_wait_us)
+                .field("engine_us", res.engine_us)
+                .field("batch", res.batch_size)
+                .msg("slow request")
+                .emit();
+        }
+        let out = res.result.map_err(|e| anyhow!("inference failed: {e}"))?;
+        vm.latency.record(total);
+        vm.responses.inc();
         Ok(out)
     }
 
@@ -217,7 +255,13 @@ mod tests {
         c.register("d", Box::new(Doubler), cfg());
         let out = c.infer("d", vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
-        assert_eq!(c.metrics.responses.get(), 1);
+        let vm = c.obs.variant("d");
+        assert_eq!(vm.responses.get(), 1);
+        assert_eq!(vm.latency.count(), 1);
+        assert!(vm.accounted());
+        // the request left a trace behind
+        assert_eq!(c.obs.traces.completed(), 1);
+        assert_eq!(c.obs.traces.recent(1)[0].variant, "d");
         c.shutdown();
     }
 
@@ -225,10 +269,14 @@ mod tests {
     fn unknown_variant_rejected() {
         let c = Coordinator::new();
         assert!(c.infer("nope", vec![0.0]).is_err());
-        // accounting reconciles: the request shows up as a rejection
-        assert_eq!(c.metrics.requests.get(), 1);
-        assert_eq!(c.metrics.rejected.get(), 1);
-        assert_eq!(c.metrics.responses.get(), 0);
+        // accounting reconciles: the request shows up against the
+        // reserved `_unrouted` pseudo-variant
+        let vm = c.obs.variant(crate::obs::UNROUTED);
+        assert_eq!(vm.requests.get(), 1);
+        assert_eq!(vm.rejected.get(), 1);
+        assert_eq!(vm.responses.get(), 0);
+        assert!(vm.accounted());
+        assert_eq!(c.obs.totals().requests, 1);
     }
 
     #[test]
@@ -251,7 +299,7 @@ mod tests {
         c.swap_variant("d", Box::new(Triple)).unwrap();
         assert_eq!(c.infer("d", vec![1.0; 4]).unwrap(), vec![3.0; 4]);
         assert!(c.swap_variant("ghost", Box::new(Triple)).is_err());
-        assert_eq!(c.metrics.swaps.get(), 1);
+        assert_eq!(c.obs.variant("d").swaps.get(), 1);
         c.shutdown();
     }
 
@@ -307,9 +355,27 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(c.metrics.responses.get(), 16);
+        let vm = c.obs.variant("d");
+        assert_eq!(vm.responses.get(), 16);
+        assert!(vm.accounted());
         // batching actually happened (mean batch ≥ 1, total batches ≤ 16)
-        let (nb, _, _) = c.metrics.batches.summary();
+        let (nb, _, _) = vm.batches.summary();
         assert!(nb >= 1 && nb <= 16);
+        // queue wait and engine time were recorded per batch / request
+        assert_eq!(vm.queue_wait.count(), 16);
+        assert_eq!(vm.engine_time.count(), nb);
+    }
+
+    #[test]
+    fn slow_request_threshold_toggles() {
+        let mut c = Coordinator::new();
+        c.register("d", Box::new(Doubler), cfg());
+        // Threshold of zero-ish marks everything slow; this exercises
+        // the slow path without asserting on stderr.
+        c.obs.set_slow_threshold(Some(std::time::Duration::from_micros(1)));
+        assert!(c.infer("d", vec![1.0; 4]).is_ok());
+        c.obs.set_slow_threshold(None);
+        assert!(c.infer("d", vec![1.0; 4]).is_ok());
+        c.shutdown();
     }
 }

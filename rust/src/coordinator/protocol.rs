@@ -4,7 +4,9 @@
 //! client → server:
 //!   INFER <variant> <v0> <v1> ... <vd>\n
 //!   SWAP <variant> <name[@vN]>\n   (hot-swap variant to a store checkpoint)
-//!   METRICS\n
+//!   METRICS\n                      (human-readable per-variant snapshot)
+//!   METRICS PROM\n                 (Prometheus text exposition format)
+//!   TRACE [n]\n                    (last n completed request traces, default 16)
 //!   VARIANTS\n
 //!   PING\n
 //! server → client:
@@ -12,7 +14,7 @@
 //!   OK\n                          (SWAP)
 //!   ERR <message>\n
 //!   PONG\n
-//!   <multi-line text>\nEND\n      (METRICS / VARIANTS)
+//!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / TRACE / VARIANTS)
 //! ```
 
 /// A parsed client request.
@@ -23,9 +25,16 @@ pub enum Request {
     /// server's model store (zero-downtime drain-and-replace).
     Swap { variant: String, checkpoint: String },
     Metrics,
+    /// Prometheus text-format exposition (`METRICS PROM`).
+    MetricsProm,
+    /// Last `n` completed request traces, newest first.
+    Trace { n: usize },
     Variants,
     Ping,
 }
+
+/// Default trace count for a bare `TRACE`.
+const DEFAULT_TRACE_N: usize = 16;
 
 /// A server response, ready to serialise.
 #[derive(Clone, Debug, PartialEq)]
@@ -71,7 +80,34 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 checkpoint,
             })
         }
-        Some("METRICS") => Ok(Request::Metrics),
+        Some("METRICS") => match it.next() {
+            None => Ok(Request::Metrics),
+            Some("PROM") => {
+                if it.next().is_some() {
+                    return Err("METRICS PROM takes no arguments".to_string());
+                }
+                Ok(Request::MetricsProm)
+            }
+            Some(other) => Err(format!("unknown METRICS mode `{other}` (try PROM)")),
+        },
+        Some("TRACE") => {
+            let n = match it.next() {
+                None => DEFAULT_TRACE_N,
+                Some(t) => {
+                    let n: usize = t
+                        .parse()
+                        .map_err(|_| format!("TRACE needs a count, got `{t}`"))?;
+                    if n == 0 {
+                        return Err("TRACE count must be ≥ 1".to_string());
+                    }
+                    n
+                }
+            };
+            if it.next().is_some() {
+                return Err("TRACE takes at most one argument".to_string());
+            }
+            Ok(Request::Trace { n })
+        }
         Some("VARIANTS") => Ok(Request::Variants),
         Some("PING") => Ok(Request::Ping),
         Some(other) => Err(format!("unknown command `{other}`")),
@@ -151,6 +187,22 @@ mod tests {
         assert_eq!(parse_request("PING").unwrap(), Request::Ping);
         assert_eq!(parse_request(" METRICS ").unwrap(), Request::Metrics);
         assert_eq!(parse_request("VARIANTS").unwrap(), Request::Variants);
+    }
+
+    #[test]
+    fn parse_metrics_prom() {
+        assert_eq!(parse_request("METRICS PROM").unwrap(), Request::MetricsProm);
+        assert!(parse_request("METRICS JUNK").is_err());
+        assert!(parse_request("METRICS PROM extra").is_err());
+    }
+
+    #[test]
+    fn parse_trace() {
+        assert_eq!(parse_request("TRACE").unwrap(), Request::Trace { n: 16 });
+        assert_eq!(parse_request("TRACE 5").unwrap(), Request::Trace { n: 5 });
+        assert!(parse_request("TRACE x").is_err());
+        assert!(parse_request("TRACE 0").is_err());
+        assert!(parse_request("TRACE 5 9").is_err());
     }
 
     #[test]

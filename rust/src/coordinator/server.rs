@@ -76,7 +76,9 @@ fn handle_conn(stream: TcpStream, c: &Coordinator) -> Result<()> {
         let resp = match parse_request(&line) {
             Err(e) => Response::Err(e),
             Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => Response::Text(c.metrics.snapshot()),
+            Ok(Request::Metrics) => Response::Text(c.obs.snapshot()),
+            Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
+            Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
             Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
             Ok(Request::Infer { variant, input }) => match c.infer(&variant, input) {
                 Ok(out) => Response::Ok(out),
@@ -142,6 +144,24 @@ mod tests {
         out
     }
 
+    /// Read a multi-line `Text` response until the `END` terminator.
+    fn roundtrip_text(addr: std::net::SocketAddr, line: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let r = BufReader::new(s);
+        let mut out = String::new();
+        for l in r.lines() {
+            let l = l.unwrap();
+            if l == "END" {
+                break;
+            }
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out
+    }
+
     #[test]
     fn ping_and_infer_over_tcp() {
         let (_c, h) = start();
@@ -161,6 +181,23 @@ mod tests {
         assert!(m.contains("requests="), "{m}");
         let v = roundtrip(h.addr, "VARIANTS");
         assert!(v.contains("neg"));
+        h.stop();
+    }
+
+    #[test]
+    fn prom_and_trace_endpoints() {
+        let (_c, h) = start();
+        let _ = roundtrip(h.addr, "INFER neg 1 2");
+        let prom = roundtrip_text(h.addr, "METRICS PROM");
+        assert!(prom.contains("# TYPE bfly_requests_total counter"), "{prom}");
+        assert!(prom.contains("bfly_requests_total{variant=\"neg\"} 1"), "{prom}");
+        assert!(prom.contains("bfly_latency_us_count{variant=\"neg\"} 1"), "{prom}");
+        let traces = roundtrip_text(h.addr, "TRACE 5");
+        assert!(traces.contains("variant=neg"), "{traces}");
+        assert!(traces.contains("total_us="), "{traces}");
+        // malformed observability verbs get ERR, not disconnect
+        assert!(roundtrip(h.addr, "METRICS JUNK").starts_with("ERR"));
+        assert!(roundtrip(h.addr, "TRACE x").starts_with("ERR"));
         h.stop();
     }
 

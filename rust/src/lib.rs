@@ -9,6 +9,10 @@
 //! * **Substrates** — [`rng`], [`linalg`], [`config`], [`cli`],
 //!   [`bench`], [`testing`], [`metrics`]: everything a real deployment
 //!   needs that the offline environment does not provide as crates.
+//! * **Observability** — [`obs`]: the per-variant labeled metrics
+//!   registry, Prometheus text exposition, request tracing (trace IDs +
+//!   recent-trace ring), and the structured event log every layer emits
+//!   through.
 //! * **Core library** — [`butterfly`] (the paper's operator), [`model`]
 //!   (the §3.2 dense-layer replacement and proxy networks),
 //!   [`autoencoder`] (§4 encoder–decoder butterfly network), [`train`]
@@ -25,6 +29,10 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// All diagnostics go through `obs::event` (the one sanctioned stderr
+// writer); ad-hoc eprintln! is a lint error everywhere else.
+#![deny(clippy::print_stderr)]
+
 pub mod autoencoder;
 pub mod bench;
 pub mod butterfly;
@@ -36,6 +44,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;

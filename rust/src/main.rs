@@ -3,7 +3,8 @@
 //! ```text
 //! butterfly-net experiment <id>|all [--quick] [--seed N] [--out results]
 //! butterfly-net serve [--addr 127.0.0.1:7070] [--config cfg.toml] [--set k=v]
-//!                     [--store DIR]
+//!                     [--store DIR] [--metrics-interval SECS] [--slow-ms MS]
+//!                     [--log-level debug|info|warn|error]
 //! butterfly-net save [--store DIR] [--name m] [--kind butterfly-head]
 //!                    [--n1 64] [--n2 32] [--train-steps 200] [--seed N]
 //! butterfly-net swap <variant> <name[@vN]> [--addr 127.0.0.1:7070]
@@ -14,6 +15,10 @@
 //! butterfly-net params
 //! ```
 
+// Same policy as the library crate: stderr output goes through the
+// structured event log, never ad-hoc eprintln!.
+#![deny(clippy::print_stderr)]
+
 use anyhow::{anyhow, bail, Result};
 use butterfly_net::butterfly::{Butterfly, TruncatedButterfly};
 use butterfly_net::cli::Args;
@@ -22,6 +27,7 @@ use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator, NativeHeadEn
 use butterfly_net::experiments::{self, ExpContext};
 use butterfly_net::linalg::Mat;
 use butterfly_net::model::{fit_head_to_teacher, Head};
+use butterfly_net::obs::{event, Level};
 use butterfly_net::rng::Rng;
 use butterfly_net::runtime::{Runtime, RuntimeHandle, Tensor};
 use butterfly_net::store::{Model, ModelRegistry};
@@ -29,7 +35,7 @@ use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        event::error("cli").msg(format!("{e:#}")).emit();
         std::process::exit(1);
     }
 }
@@ -95,13 +101,34 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_known(&["addr", "config", "set", "artifacts", "no-pjrt", "once", "store"])?;
+    args.expect_known(&[
+        "addr",
+        "config",
+        "set",
+        "artifacts",
+        "no-pjrt",
+        "once",
+        "store",
+        "metrics-interval",
+        "slow-ms",
+        "log-level",
+    ])?;
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_file(p)?,
         None => Config::new(),
     };
     for kv in args.get_all("set") {
         cfg.set_override(kv)?;
+    }
+    // Event-log verbosity: flag > config > BFLY_LOG env > info.
+    if let Some(lv) = args
+        .get("log-level")
+        .map(String::from)
+        .or_else(|| cfg.get_str_opt("server.log_level"))
+    {
+        let level = Level::parse(&lv)
+            .ok_or_else(|| anyhow!("bad --log-level `{lv}` (debug|info|warn|error)"))?;
+        event::global().set_level(level);
     }
     let addr = args
         .get("addr")
@@ -148,19 +175,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         coordinator.register(&name, eng, bcfg.clone());
                     }
                 }
-                Err(e) => eprintln!("pjrt variants unavailable: {e:#}"),
+                Err(e) => event::warn("coordinator.pjrt")
+                    .msg(format!("pjrt variants unavailable: {e:#}"))
+                    .emit(),
             },
-            Err(e) => eprintln!("artifacts not loaded ({e:#}); native variants only"),
+            Err(e) => event::warn("coordinator.pjrt")
+                .msg(format!("artifacts not loaded ({e:#}); native variants only"))
+                .emit(),
         }
     }
+    // Slow-request log: requests slower than this end-to-end emit a
+    // `coordinator.slow` warn event with per-stage timings. 0 disables.
+    let slow_ms = args.get_usize("slow-ms", cfg.get_usize("server.slow_request_ms", 250))?;
+    if slow_ms > 0 {
+        coordinator
+            .obs
+            .set_slow_threshold(Some(std::time::Duration::from_millis(slow_ms as u64)));
+    }
     let coordinator = Arc::new(coordinator);
+    // Periodic per-variant metrics report to stderr (off by default).
+    let interval_s = args.get_usize(
+        "metrics-interval",
+        cfg.get_usize("server.metrics_interval_s", 0),
+    )?;
+    if interval_s > 0 {
+        let obs = Arc::clone(&coordinator.obs);
+        std::thread::Builder::new()
+            .name("metrics-report".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(interval_s as u64));
+                obs.emit_report();
+            })?;
+    }
     let handle = serve(Arc::clone(&coordinator), &addr)?;
     println!(
         "serving on {} — variants: {}",
         handle.addr,
         coordinator.variant_names().join(", ")
     );
-    println!("protocol: INFER <variant> <v0> ... | SWAP <variant> <name[@vN]> | METRICS | VARIANTS | PING");
+    println!("protocol: INFER <variant> <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | VARIANTS | PING");
     if args.flag("once") {
         // test hook: serve briefly then exit cleanly
         std::thread::sleep(std::time::Duration::from_millis(200));

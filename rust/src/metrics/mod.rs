@@ -1,11 +1,14 @@
-//! Serving metrics: counters, gauges and latency histograms.
+//! Metric primitives: counters, gauges, batch stats and latency
+//! histograms.
 //!
-//! The coordinator records per-request latency and batch occupancy into
-//! lock-cheap structures; `/metrics`-style text snapshots are exposed
-//! through the coordinator protocol and printed by the benches.
+//! Everything here is genuinely lock-cheap: counters and gauges are
+//! single atomics, [`BatchStats`] is three atomics, and
+//! [`LatencyHistogram`] is a fixed array of atomic buckets — nothing on
+//! the serving hot path takes a lock. The per-variant aggregation of
+//! these primitives (and their Prometheus exposition) lives in
+//! [`crate::obs`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Monotonic counter.
@@ -22,6 +25,36 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+}
+
+/// Instantaneous signed gauge (queue depths, in-flight counts).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log buckets in a [`LatencyHistogram`].
+pub const NUM_BUCKETS: usize = 40;
+
+/// Upper edge (exclusive) of bucket `i`, in microseconds.
+pub fn bucket_upper_us(i: usize) -> u64 {
+    1u64 << (i + 1)
 }
 
 /// Log-bucketed latency histogram: buckets are `[2^i .. 2^{i+1})` µs,
@@ -43,7 +76,7 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     pub fn new() -> Self {
         LatencyHistogram {
-            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
             max_us: AtomicU64::new(0),
@@ -52,7 +85,7 @@ impl LatencyHistogram {
 
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(39);
+        let bucket = (63 - us.leading_zeros() as usize).min(NUM_BUCKETS - 1);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
@@ -61,6 +94,24 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value, in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw (non-cumulative) bucket counts.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn mean(&self) -> Duration {
@@ -75,7 +126,12 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log buckets.
+    ///
+    /// Returns the upper edge of the bucket holding the `q`-quantile,
+    /// clamped to the recorded maximum — the raw upper edge `2^{i+1}`
+    /// can over-report by up to 2× and even exceed `max()` (e.g. a
+    /// single 100µs sample would report p50 = 128µs).
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -86,7 +142,8 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                let upper = bucket_upper_us(i);
+                return Duration::from_micros(upper.min(self.max_us()));
             }
         }
         self.max()
@@ -105,66 +162,44 @@ impl LatencyHistogram {
     }
 }
 
-/// Windowed gauge of batch sizes (mean occupancy of the dynamic batcher).
+/// Windowed gauge of batch sizes (mean occupancy of the dynamic
+/// batcher). Three atomics — batch formation on the hot path never
+/// takes a lock.
 #[derive(Default)]
 pub struct BatchStats {
-    inner: Mutex<(u64, u64, u64)>, // (batches, total_items, max_batch)
+    batches: AtomicU64,
+    items: AtomicU64,
+    max_batch: AtomicU64,
 }
 
 impl BatchStats {
     pub fn record(&self, batch_size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.0 += 1;
-        g.1 += batch_size as u64;
-        g.2 = g.2.max(batch_size as u64);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.items.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(batch_size as u64, Ordering::Relaxed);
+    }
+
+    /// Total batches formed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Total items across all batches.
+    pub fn items(&self) -> u64 {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    /// Largest batch formed.
+    pub fn max_batch(&self) -> u64 {
+        self.max_batch.load(Ordering::Relaxed)
     }
 
     /// (num_batches, mean_batch_size, max_batch_size)
     pub fn summary(&self) -> (u64, f64, u64) {
-        let g = self.inner.lock().unwrap();
-        let mean = if g.0 == 0 {
-            0.0
-        } else {
-            g.1 as f64 / g.0 as f64
-        };
-        (g.0, mean, g.2)
-    }
-}
-
-/// All coordinator metrics in one place.
-#[derive(Default)]
-pub struct Metrics {
-    pub requests: Counter,
-    pub responses: Counter,
-    pub errors: Counter,
-    pub rejected: Counter,
-    /// Engine hot-swaps completed by batchers (store subsystem).
-    pub swaps: Counter,
-    pub latency: LatencyHistogram,
-    pub queue_wait: LatencyHistogram,
-    pub batches: BatchStats,
-}
-
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn snapshot(&self) -> String {
-        let (nb, mean_b, max_b) = self.batches.summary();
-        format!(
-            "requests={} responses={} errors={} rejected={} swaps={}\n{}\n{}\nbatches={} mean_batch={:.2} max_batch={}",
-            self.requests.get(),
-            self.responses.get(),
-            self.errors.get(),
-            self.rejected.get(),
-            self.swaps.get(),
-            self.latency.snapshot("latency"),
-            self.queue_wait.snapshot("queue_wait"),
-            nb,
-            mean_b,
-            max_b
-        )
+        let n = self.batches();
+        let items = self.items();
+        let mean = if n == 0 { 0.0 } else { items as f64 / n as f64 };
+        (n, mean, self.max_batch())
     }
 }
 
@@ -187,6 +222,48 @@ mod tests {
     }
 
     #[test]
+    fn quantile_never_exceeds_max() {
+        // Regression: with a single 100µs sample the old implementation
+        // returned the raw upper bucket edge (128µs) for every
+        // quantile — above the recorded max.
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(100));
+        assert_eq!(h.quantile(0.99), Duration::from_micros(100));
+        // And in general: quantiles are clamped by the max.
+        let h2 = LatencyHistogram::new();
+        for us in [3u64, 5, 900, 1100] {
+            h2.record(Duration::from_micros(us));
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(
+                h2.quantile(q) <= h2.max(),
+                "q={q}: {:?} > max {:?}",
+                h2.quantile(q),
+                h2.max()
+            );
+        }
+        // Low quantiles still resolve to the low bucket's edge, not the
+        // global max.
+        assert!(h2.quantile(0.25) <= Duration::from_micros(8));
+    }
+
+    #[test]
+    fn histogram_bucket_accessors() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(3)); // bucket [2,4) → i=1
+        h.record(Duration::from_micros(100)); // bucket [64,128) → i=6
+        let b = h.bucket_counts();
+        assert_eq!(b.len(), NUM_BUCKETS);
+        assert_eq!(b[1], 1);
+        assert_eq!(b[6], 1);
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 103);
+        assert_eq!(bucket_upper_us(0), 2);
+        assert_eq!(bucket_upper_us(6), 128);
+    }
+
+    #[test]
     fn batch_stats() {
         let b = BatchStats::default();
         b.record(4);
@@ -195,16 +272,42 @@ mod tests {
         assert_eq!(n, 2);
         assert!((mean - 6.0).abs() < 1e-12);
         assert_eq!(max, 8);
+        assert_eq!(b.items(), 12);
     }
 
     #[test]
-    fn counters_and_snapshot() {
-        let m = Metrics::new();
-        m.requests.inc();
-        m.requests.add(2);
-        m.latency.record(Duration::from_micros(100));
-        let s = m.snapshot();
-        assert!(s.contains("requests=3"));
-        assert!(s.contains("latency"));
+    fn batch_stats_concurrent() {
+        let b = std::sync::Arc::new(BatchStats::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = std::sync::Arc::clone(&b);
+                s.spawn(move || {
+                    for i in 1..=100usize {
+                        b.record(i % 7 + 1);
+                    }
+                });
+            }
+        });
+        let (n, mean, max) = b.summary();
+        assert_eq!(n, 400);
+        assert!(mean > 0.0);
+        assert!(max <= 7);
+    }
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.add(-5);
+        assert_eq!(g.get(), -4);
+        g.set(7);
+        assert_eq!(g.get(), 7);
     }
 }

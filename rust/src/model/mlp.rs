@@ -163,14 +163,17 @@ impl Mlp {
         let mut sgd = Sgd::with_momentum(lr, 0.9);
         let mut adam = Adam::new(lr);
         let t0 = std::time::Instant::now();
-        for _ in 0..epochs {
+        for epoch in 0..epochs {
+            let t_epoch = std::time::Instant::now();
             let perm = rng.permutation(n);
             let mut epoch_loss = 0.0;
             let mut batches = 0.0;
+            let mut grad_sq_sum = 0.0;
             for chunk in perm.chunks(batch) {
                 let xb = train.x.select_rows(chunk);
                 let yb: Vec<usize> = chunk.iter().map(|&i| train.y[i]).collect();
                 let (loss, g) = self.loss_grad(&xb, &yb);
+                grad_sq_sum += g.iter().map(|v| v * v).sum::<f64>();
                 if use_adam {
                     adam.step(&mut params, &g);
                 } else {
@@ -182,6 +185,16 @@ impl Mlp {
             }
             report.train_loss.push(epoch_loss / batches);
             report.test_acc.push(self.accuracy(test));
+            // RMS gradient norm over the epoch's minibatches — one event
+            // per epoch through the shared structured log.
+            crate::train::log_epoch(
+                "train.mlp",
+                epoch,
+                epoch_loss / batches,
+                (grad_sq_sum / batches).sqrt(),
+                if use_adam { adam.lr() } else { sgd.lr() },
+                t_epoch.elapsed(),
+            );
         }
         report.train_time_s = t0.elapsed().as_secs_f64();
         report

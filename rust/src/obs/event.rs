@@ -1,0 +1,286 @@
+//! Structured event log: leveled, targeted, timestamped.
+//!
+//! Replaces the ad-hoc `eprintln!` calls that used to be scattered
+//! through the coordinator, the store and the experiment binaries.
+//! Events are single `key=value` lines written to stderr (so stdout
+//! stays clean for experiment CSVs and protocol traffic), e.g.:
+//!
+//! ```text
+//! ts=1754608000.123 level=info target=coordinator.swap variant=net msg="engine swapped"
+//! ```
+//!
+//! This module is the *only* place in `rust/src/` allowed to print to
+//! stderr (`clippy::print_stderr` is denied crate-wide and allowed
+//! here) — everything else goes through [`EventLog`].
+//!
+//! The process-wide log is [`global()`]; unit tests construct their own
+//! [`EventLog`] with a capture sink so parallel tests never fight over
+//! shared state.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity. Events below the log's level are dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse `debug|info|warn|error` (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Debug,
+            1 => Level::Info,
+            2 => Level::Warn,
+            _ => Level::Error,
+        }
+    }
+}
+
+enum Sink {
+    Stderr,
+    /// Test sink: lines are buffered and drained by the test.
+    Capture(Vec<String>),
+}
+
+/// A leveled, targeted event sink.
+pub struct EventLog {
+    level: AtomicU8,
+    sink: Mutex<Sink>,
+    emitted: AtomicU64,
+}
+
+impl EventLog {
+    pub fn new(level: Level) -> Self {
+        EventLog {
+            level: AtomicU8::new(level as u8),
+            sink: Mutex::new(Sink::Stderr),
+            emitted: AtomicU64::new(0),
+        }
+    }
+
+    /// A log that buffers lines instead of writing stderr (tests).
+    pub fn captured(level: Level) -> Self {
+        let log = Self::new(level);
+        *log.sink.lock().unwrap() = Sink::Capture(Vec::new());
+        log
+    }
+
+    pub fn set_level(&self, level: Level) {
+        self.level.store(level as u8, Ordering::Relaxed);
+    }
+
+    pub fn level(&self) -> Level {
+        Level::from_u8(self.level.load(Ordering::Relaxed))
+    }
+
+    pub fn enabled(&self, level: Level) -> bool {
+        level >= self.level()
+    }
+
+    /// Total events written (post level filter).
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Start building an event against this log.
+    pub fn event(&self, level: Level, target: &str) -> Event<'_> {
+        Event {
+            log: self,
+            level,
+            target: target.to_string(),
+            fields: Vec::new(),
+            msg: None,
+        }
+    }
+
+    /// Drain buffered lines from a capture sink (empty for stderr sinks).
+    pub fn drain_captured(&self) -> Vec<String> {
+        match &mut *self.sink.lock().unwrap() {
+            Sink::Capture(buf) => std::mem::take(buf),
+            Sink::Stderr => Vec::new(),
+        }
+    }
+
+    // The one sanctioned stderr print in the crate.
+    #[allow(clippy::print_stderr)]
+    fn write_line(&self, line: String) {
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+        match &mut *self.sink.lock().unwrap() {
+            Sink::Stderr => eprintln!("{line}"),
+            Sink::Capture(buf) => buf.push(line),
+        }
+    }
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new(Level::Info)
+    }
+}
+
+/// The process-wide event log. Level defaults to `info`, overridable
+/// at first use via the `BFLY_LOG` environment variable and at any
+/// time via [`EventLog::set_level`].
+pub fn global() -> &'static EventLog {
+    static GLOBAL: OnceLock<EventLog> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let level = std::env::var("BFLY_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        EventLog::new(level)
+    })
+}
+
+/// Builder for one event. Fields keep insertion order; `msg` (if any)
+/// is rendered last so lines stay machine-parseable left-to-right.
+pub struct Event<'a> {
+    log: &'a EventLog,
+    level: Level,
+    target: String,
+    fields: Vec<(String, String)>,
+    msg: Option<String>,
+}
+
+impl Event<'_> {
+    pub fn field(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn msg(mut self, m: impl Into<String>) -> Self {
+        self.msg = Some(m.into());
+        self
+    }
+
+    /// Render and write the event (no-op below the log's level).
+    pub fn emit(self) {
+        if !self.log.enabled(self.level) {
+            return;
+        }
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let mut line = format!(
+            "ts={ts:.3} level={} target={}",
+            self.level.as_str(),
+            self.target
+        );
+        for (k, v) in &self.fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(&quote_value(v));
+        }
+        if let Some(m) = &self.msg {
+            line.push_str(" msg=");
+            line.push_str(&quote_always(m));
+        }
+        self.log.write_line(line);
+    }
+}
+
+/// Quote a value only when it would break `key=value` tokenisation.
+fn quote_value(v: &str) -> String {
+    if v.is_empty() || v.contains(' ') || v.contains('"') || v.contains('=') || v.contains('\n') {
+        quote_always(v)
+    } else {
+        v.to_string()
+    }
+}
+
+fn quote_always(v: &str) -> String {
+    format!("\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n"))
+}
+
+// ---- conveniences against the global log ----
+
+pub fn debug(target: &str) -> Event<'static> {
+    global().event(Level::Debug, target)
+}
+
+pub fn info(target: &str) -> Event<'static> {
+    global().event(Level::Info, target)
+}
+
+pub fn warn(target: &str) -> Event<'static> {
+    global().event(Level::Warn, target)
+}
+
+pub fn error(target: &str) -> Event<'static> {
+    global().event(Level::Error, target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering_and_format() {
+        let log = EventLog::captured(Level::Info);
+        log.event(Level::Debug, "t").msg("dropped").emit();
+        log.event(Level::Info, "train.epoch")
+            .field("epoch", 3)
+            .field("loss", format!("{:.4}", 0.25))
+            .emit();
+        log.event(Level::Warn, "coordinator.slow")
+            .field("variant", "dense")
+            .msg("slow request")
+            .emit();
+        let lines = log.drain_captured();
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        assert!(lines[0].contains("level=info target=train.epoch epoch=3 loss=0.2500"));
+        assert!(lines[0].starts_with("ts="));
+        assert!(lines[1].contains("level=warn"));
+        assert!(lines[1].ends_with("msg=\"slow request\""));
+        assert_eq!(log.emitted(), 2);
+    }
+
+    #[test]
+    fn quoting_rules() {
+        assert_eq!(quote_value("plain"), "plain");
+        assert_eq!(quote_value("has space"), "\"has space\"");
+        assert_eq!(quote_value("a=b"), "\"a=b\"");
+        assert_eq!(quote_value("say \"hi\""), "\"say \\\"hi\\\"\"");
+        assert_eq!(quote_value("two\nlines"), "\"two\\nlines\"");
+        assert_eq!(quote_value(""), "\"\"");
+    }
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Error);
+        let log = EventLog::captured(Level::Error);
+        assert!(!log.enabled(Level::Warn));
+        log.set_level(Level::Debug);
+        assert!(log.enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,160 @@
+//! Observability: per-variant metrics, request tracing, structured
+//! events, and Prometheus exposition for the serving and training
+//! stack.
+//!
+//! The paper's deployment claim (§5.1, Figures 12–13) is *faster
+//! prediction at matched accuracy* — proving that in a running server
+//! requires per-variant, per-stage instrumentation, not one global
+//! counter bundle. This module provides:
+//!
+//! * [`registry::MetricsRegistry`] — labeled counters / gauges /
+//!   log-bucketed histograms per serving variant (queue depth, queue
+//!   wait, engine time, end-to-end latency, batch occupancy, swaps);
+//! * [`prom`] — Prometheus text-format exposition (`METRICS PROM`);
+//! * [`trace`] — request trace IDs carried router → batcher → engine,
+//!   with a lock-free ring of recent completed traces (`TRACE <n>`)
+//!   and a slow-request log;
+//! * [`event`] — the structured, leveled event log every other module
+//!   (coordinator, store, training loops) emits through.
+//!
+//! [`Obs`] bundles the per-process pieces; the coordinator owns one
+//! and the protocol verbs read from it.
+
+pub mod event;
+pub mod prom;
+pub mod registry;
+pub mod trace;
+
+pub use event::{EventLog, Level};
+pub use registry::{MetricsRegistry, Totals, VariantMetrics, UNROUTED};
+pub use trace::{next_trace_id, CompletedTrace, TraceEvent, TraceRing};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Slow-request threshold disabling sentinel.
+const SLOW_DISABLED_US: u64 = u64::MAX;
+
+/// One process's observability state: the metrics registry, the trace
+/// ring, and the slow-request threshold. Cheap to share (`Arc`), safe
+/// to record into from any thread.
+pub struct Obs {
+    pub metrics: MetricsRegistry,
+    pub traces: Arc<TraceRing>,
+    slow_us: AtomicU64,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        let traces = Arc::new(TraceRing::default());
+        Obs {
+            metrics: MetricsRegistry::new(Arc::clone(&traces)),
+            traces,
+            slow_us: AtomicU64::new(SLOW_DISABLED_US),
+        }
+    }
+
+    /// Get or create the metrics bundle for a variant.
+    pub fn variant(&self, name: &str) -> Arc<VariantMetrics> {
+        self.metrics.variant(name)
+    }
+
+    /// Counters summed across every variant.
+    pub fn totals(&self) -> Totals {
+        self.metrics.totals()
+    }
+
+    /// Human-readable multi-line snapshot (the `METRICS` verb).
+    pub fn snapshot(&self) -> String {
+        self.metrics.snapshot()
+    }
+
+    /// Prometheus text exposition (the `METRICS PROM` verb).
+    pub fn prometheus(&self) -> String {
+        prom::render(&self.metrics)
+    }
+
+    /// Requests slower than this end-to-end get a `coordinator.slow`
+    /// warn event. Pass `None` to disable (the default).
+    pub fn set_slow_threshold(&self, threshold: Option<Duration>) {
+        let us = threshold
+            .map(|d| (d.as_micros() as u64).max(1))
+            .unwrap_or(SLOW_DISABLED_US);
+        self.slow_us.store(us, Ordering::Relaxed);
+    }
+
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+
+    /// Emit one `metrics.report` info event per variant — the
+    /// `--metrics-interval` periodic stderr reporter.
+    pub fn emit_report(&self) {
+        for vm in self.metrics.all() {
+            let (nb, mean_b, _) = vm.batches.summary();
+            event::info("metrics.report")
+                .field("variant", &vm.name)
+                .field("requests", vm.requests.get())
+                .field("responses", vm.responses.get())
+                .field("errors", vm.errors.get())
+                .field("rejected", vm.rejected.get())
+                .field("swaps", vm.swaps.get())
+                .field("queue_depth", vm.queue_depth.get())
+                .field("p50_us", vm.latency.quantile(0.5).as_micros())
+                .field("p99_us", vm.latency.quantile(0.99).as_micros())
+                .field("batches", nb)
+                .field("mean_batch", format!("{mean_b:.2}"))
+                .emit();
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_wires_registry_to_trace_ring() {
+        let obs = Obs::new();
+        let vm = obs.variant("dense");
+        // the registry interned the name into the same ring
+        obs.traces.push(TraceEvent {
+            id: 1,
+            tag: vm.trace_tag,
+            queue_wait_us: 5,
+            engine_us: 10,
+            total_us: 20,
+            batch: 2,
+            ok: true,
+        });
+        let recent = obs.traces.recent(1);
+        assert_eq!(recent[0].variant, "dense");
+    }
+
+    #[test]
+    fn slow_threshold_defaults_off() {
+        let obs = Obs::new();
+        assert_eq!(obs.slow_threshold_us(), u64::MAX);
+        obs.set_slow_threshold(Some(Duration::from_millis(250)));
+        assert_eq!(obs.slow_threshold_us(), 250_000);
+        obs.set_slow_threshold(None);
+        assert_eq!(obs.slow_threshold_us(), u64::MAX);
+    }
+
+    #[test]
+    fn snapshot_and_prometheus_cover_variants() {
+        let obs = Obs::new();
+        obs.variant("a").requests.inc();
+        obs.variant("b").requests.add(2);
+        assert_eq!(obs.totals().requests, 3);
+        assert!(obs.snapshot().contains("variant=a requests=1"));
+        assert!(obs.prometheus().contains("bfly_requests_total{variant=\"b\"} 2"));
+    }
+}

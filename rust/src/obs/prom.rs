@@ -1,0 +1,263 @@
+//! Prometheus text-format exposition (the `METRICS PROM` verb).
+//!
+//! Renders every variant's counters, gauges and log-bucketed
+//! histograms in the Prometheus 0.0.4 text format: `# HELP` / `# TYPE`
+//! headers, one `name{variant="..."} value` sample per variant, and
+//! histograms as cumulative `_bucket{le="..."}` series plus `_sum` and
+//! `_count`.
+//!
+//! Durations are exposed in microseconds (suffix `_us`) rather than
+//! the Prometheus-canonical seconds: the serving path is measured in
+//! single-digit µs and the integer buckets `2^i` µs are exact, where a
+//! float seconds conversion would not be. Buckets are rendered up to
+//! the highest non-empty one (then `+Inf`) so idle histograms don't
+//! emit 40 zero lines each.
+//!
+//! Internal consistency: `_count` and the `+Inf` bucket are both
+//! computed from one snapshot of the bucket array, so a scrape taken
+//! mid-traffic is still a valid (if slightly stale) histogram.
+
+use super::registry::{MetricsRegistry, VariantMetrics};
+use crate::metrics::{bucket_upper_us, LatencyHistogram};
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Render the whole registry in Prometheus text format.
+pub fn render(reg: &MetricsRegistry) -> String {
+    let all = reg.all();
+    let mut out = String::new();
+    counter_family(
+        &mut out,
+        "bfly_requests_total",
+        "Inference requests accepted for routing.",
+        &all,
+        |v| v.requests.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_responses_total",
+        "Requests answered successfully.",
+        &all,
+        |v| v.responses.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_errors_total",
+        "Requests failed in validation or the engine.",
+        &all,
+        |v| v.errors.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_rejected_total",
+        "Requests rejected by backpressure or routing.",
+        &all,
+        |v| v.rejected.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_swaps_total",
+        "Engine hot-swaps completed.",
+        &all,
+        |v| v.swaps.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_batches_total",
+        "Batches dispatched to the engine.",
+        &all,
+        |v| v.batches.batches(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_batch_items_total",
+        "Requests carried across all dispatched batches.",
+        &all,
+        |v| v.batches.items(),
+    );
+    gauge_family(
+        &mut out,
+        "bfly_queue_depth",
+        "Requests queued awaiting batch dispatch.",
+        &all,
+        |v| v.queue_depth.get(),
+    );
+    gauge_family(
+        &mut out,
+        "bfly_batch_max",
+        "Largest batch dispatched so far.",
+        &all,
+        |v| v.batches.max_batch() as i64,
+    );
+    histogram_family(
+        &mut out,
+        "bfly_latency_us",
+        "End-to-end request latency in microseconds.",
+        &all,
+        |v| &v.latency,
+    );
+    histogram_family(
+        &mut out,
+        "bfly_queue_wait_us",
+        "Queue wait before batch dispatch in microseconds.",
+        &all,
+        |v| &v.queue_wait,
+    );
+    histogram_family(
+        &mut out,
+        "bfly_engine_us",
+        "Engine batch-inference time in microseconds.",
+        &all,
+        |v| &v.engine_time,
+    );
+    out.pop(); // drop trailing newline: protocol Text responses add it
+    out
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    all: &[Arc<VariantMetrics>],
+    get: impl Fn(&VariantMetrics) -> u64,
+) {
+    header(out, name, help, "counter");
+    for vm in all {
+        let _ = writeln!(out, "{name}{{variant=\"{}\"}} {}", vm.name, get(vm));
+    }
+}
+
+fn gauge_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    all: &[Arc<VariantMetrics>],
+    get: impl Fn(&VariantMetrics) -> i64,
+) {
+    header(out, name, help, "gauge");
+    for vm in all {
+        let _ = writeln!(out, "{name}{{variant=\"{}\"}} {}", vm.name, get(vm));
+    }
+}
+
+fn histogram_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    all: &[Arc<VariantMetrics>],
+    get: impl Fn(&VariantMetrics) -> &LatencyHistogram,
+) {
+    header(out, name, help, "histogram");
+    for vm in all {
+        let h = get(vm);
+        let buckets = h.bucket_counts();
+        let total: u64 = buckets.iter().sum();
+        let last_used = buckets.iter().rposition(|&c| c > 0);
+        // Always render at least one finite bucket so the series shape
+        // is stable even before traffic arrives.
+        let upto = last_used.unwrap_or(0);
+        let mut acc = 0u64;
+        for (i, &c) in buckets.iter().enumerate().take(upto + 1) {
+            acc += c;
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{variant=\"{}\",le=\"{}\"}} {acc}",
+                vm.name,
+                bucket_upper_us(i)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{variant=\"{}\",le=\"+Inf\"}} {total}",
+            vm.name
+        );
+        let _ = writeln!(out, "{name}_sum{{variant=\"{}\"}} {}", vm.name, h.sum_us());
+        let _ = writeln!(out, "{name}_count{{variant=\"{}\"}} {total}", vm.name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRing;
+    use std::time::Duration;
+
+    fn sample_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new(Arc::new(TraceRing::new(16)));
+        let d = reg.variant("dense");
+        d.requests.add(4);
+        d.responses.add(3);
+        d.rejected.inc();
+        d.queue_depth.set(2);
+        d.batches.record(3);
+        d.latency.record(Duration::from_micros(3));
+        d.latency.record(Duration::from_micros(100));
+        d.queue_wait.record(Duration::from_micros(7));
+        d.engine_time.record(Duration::from_micros(50));
+        reg.variant("butterfly"); // idle variant still renders
+        reg
+    }
+
+    #[test]
+    fn families_and_labels() {
+        let reg = sample_registry();
+        let text = render(&reg);
+        assert!(text.contains("# TYPE bfly_requests_total counter"));
+        assert!(text.contains("# TYPE bfly_queue_depth gauge"));
+        assert!(text.contains("# TYPE bfly_latency_us histogram"));
+        assert!(text.contains("bfly_requests_total{variant=\"dense\"} 4"));
+        assert!(text.contains("bfly_rejected_total{variant=\"dense\"} 1"));
+        assert!(text.contains("bfly_queue_depth{variant=\"dense\"} 2"));
+        // idle variant renders zeros, including a histogram skeleton
+        assert!(text.contains("bfly_requests_total{variant=\"butterfly\"} 0"));
+        assert!(text.contains("bfly_latency_us_bucket{variant=\"butterfly\",le=\"+Inf\"} 0"));
+        assert!(text.contains("bfly_latency_us_count{variant=\"butterfly\"} 0"));
+    }
+
+    #[test]
+    fn histogram_series_are_cumulative_and_consistent() {
+        let reg = sample_registry();
+        let text = render(&reg);
+        // dense latency: samples at 3µs (bucket le=4) and 100µs (le=128)
+        assert!(text.contains("bfly_latency_us_bucket{variant=\"dense\",le=\"4\"} 1"));
+        assert!(text.contains("bfly_latency_us_bucket{variant=\"dense\",le=\"128\"} 2"));
+        assert!(text.contains("bfly_latency_us_bucket{variant=\"dense\",le=\"+Inf\"} 2"));
+        assert!(text.contains("bfly_latency_us_sum{variant=\"dense\"} 103"));
+        assert!(text.contains("bfly_latency_us_count{variant=\"dense\"} 2"));
+        // cumulative: every bucket count ≤ the +Inf count, non-decreasing
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| {
+            l.starts_with("bfly_latency_us_bucket{variant=\"dense\"") && !l.contains("+Inf")
+        }) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-cumulative: {line}");
+            prev = v;
+        }
+        assert_eq!(prev, 2);
+    }
+
+    #[test]
+    fn every_line_is_comment_or_sample() {
+        let text = render(&sample_registry());
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "{line}"
+                );
+            } else {
+                let (name_part, value) = line.rsplit_once(' ').expect(line);
+                assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+                assert!(
+                    name_part.starts_with("bfly_") && name_part.contains("variant=\""),
+                    "{line}"
+                );
+            }
+        }
+    }
+}

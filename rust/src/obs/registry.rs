@@ -1,0 +1,247 @@
+//! Labeled metrics registry: one [`VariantMetrics`] bundle per serving
+//! variant, replacing the old single global `Metrics` struct so
+//! dense-vs-butterfly latency (the paper's §5.1 deployment claim) can
+//! be measured side by side in a running server.
+//!
+//! Requests that never reach a variant (unknown-variant lookups) are
+//! accounted to the reserved [`UNROUTED`] variant so the per-variant
+//! invariant `requests == responses + rejected + errors` always
+//! reconciles.
+
+use super::trace::TraceRing;
+use crate::metrics::{BatchStats, Counter, Gauge, LatencyHistogram};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Reserved variant name for requests that could not be routed.
+pub const UNROUTED: &str = "_unrouted";
+
+/// All metrics of one serving variant. Counters/gauges/histograms only
+/// — recording never takes a lock.
+pub struct VariantMetrics {
+    pub name: String,
+    /// Interned tag for the trace ring (`u32` on the hot path instead
+    /// of a `String`).
+    pub trace_tag: u32,
+    pub requests: Counter,
+    pub responses: Counter,
+    pub errors: Counter,
+    pub rejected: Counter,
+    /// Engine hot-swaps completed by this variant's batcher.
+    pub swaps: Counter,
+    /// Jobs currently queued (submitted, not yet dispatched).
+    pub queue_depth: Gauge,
+    /// End-to-end latency (submit → response received).
+    pub latency: LatencyHistogram,
+    /// Time from submit to batch dispatch.
+    pub queue_wait: LatencyHistogram,
+    /// Time inside `Engine::infer_batch`, recorded once per batch.
+    pub engine_time: LatencyHistogram,
+    pub batches: BatchStats,
+}
+
+impl VariantMetrics {
+    fn new(name: &str, trace_tag: u32) -> Self {
+        VariantMetrics {
+            name: name.to_string(),
+            trace_tag,
+            requests: Counter::default(),
+            responses: Counter::default(),
+            errors: Counter::default(),
+            rejected: Counter::default(),
+            swaps: Counter::default(),
+            queue_depth: Gauge::default(),
+            latency: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
+            engine_time: LatencyHistogram::new(),
+            batches: BatchStats::default(),
+        }
+    }
+
+    /// Does `requests == responses + rejected + errors` hold right now?
+    /// (Meaningful only when no request is in flight.)
+    pub fn accounted(&self) -> bool {
+        self.requests.get() == self.responses.get() + self.rejected.get() + self.errors.get()
+    }
+
+    /// Multi-line human snapshot of this variant.
+    pub fn snapshot(&self) -> String {
+        let (nb, mean_b, max_b) = self.batches.summary();
+        format!(
+            "variant={} requests={} responses={} errors={} rejected={} swaps={} queue_depth={}\n\
+             variant={} {}\n\
+             variant={} {}\n\
+             variant={} {}\n\
+             variant={} batches={} mean_batch={:.2} max_batch={}",
+            self.name,
+            self.requests.get(),
+            self.responses.get(),
+            self.errors.get(),
+            self.rejected.get(),
+            self.swaps.get(),
+            self.queue_depth.get(),
+            self.name,
+            self.latency.snapshot("latency"),
+            self.name,
+            self.queue_wait.snapshot("queue_wait"),
+            self.name,
+            self.engine_time.snapshot("engine_time"),
+            self.name,
+            nb,
+            mean_b,
+            max_b
+        )
+    }
+}
+
+/// Counters summed across every variant (convenient for tests and the
+/// benches; per-variant data is the primary surface).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Totals {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub swaps: u64,
+    pub batches: u64,
+    pub batch_items: u64,
+    pub max_batch: u64,
+}
+
+/// Name → [`VariantMetrics`] map. Get-or-create takes a write lock;
+/// steady-state lookups take a read lock (and the coordinator caches
+/// the `Arc` per batcher, so the serving hot path does no map lookup at
+/// all).
+pub struct MetricsRegistry {
+    traces: Arc<TraceRing>,
+    variants: RwLock<BTreeMap<String, Arc<VariantMetrics>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new(traces: Arc<TraceRing>) -> Self {
+        MetricsRegistry {
+            traces,
+            variants: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Get or create the metrics bundle for `name`.
+    pub fn variant(&self, name: &str) -> Arc<VariantMetrics> {
+        if let Some(v) = self.variants.read().unwrap().get(name) {
+            return Arc::clone(v);
+        }
+        let mut map = self.variants.write().unwrap();
+        if let Some(v) = map.get(name) {
+            return Arc::clone(v);
+        }
+        let tag = self.traces.intern(name);
+        let vm = Arc::new(VariantMetrics::new(name, tag));
+        map.insert(name.to_string(), Arc::clone(&vm));
+        vm
+    }
+
+    /// Lookup without creating.
+    pub fn get(&self, name: &str) -> Option<Arc<VariantMetrics>> {
+        self.variants.read().unwrap().get(name).cloned()
+    }
+
+    /// Registered variant names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.variants.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot of all bundles, sorted by name.
+    pub fn all(&self) -> Vec<Arc<VariantMetrics>> {
+        self.variants.read().unwrap().values().cloned().collect()
+    }
+
+    /// Counters summed across all variants.
+    pub fn totals(&self) -> Totals {
+        let mut t = Totals::default();
+        for vm in self.all() {
+            t.requests += vm.requests.get();
+            t.responses += vm.responses.get();
+            t.errors += vm.errors.get();
+            t.rejected += vm.rejected.get();
+            t.swaps += vm.swaps.get();
+            let (nb, _, max_b) = vm.batches.summary();
+            t.batches += nb;
+            t.batch_items += vm.batches.items();
+            t.max_batch = t.max_batch.max(max_b);
+        }
+        t
+    }
+
+    /// Multi-line human snapshot: every variant's counters and
+    /// histograms (the `METRICS` verb).
+    pub fn snapshot(&self) -> String {
+        let all = self.all();
+        if all.is_empty() {
+            return "no variants registered".to_string();
+        }
+        all.iter()
+            .map(|vm| vm.snapshot())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn registry() -> MetricsRegistry {
+        MetricsRegistry::new(Arc::new(TraceRing::new(16)))
+    }
+
+    #[test]
+    fn get_or_create_is_stable() {
+        let r = registry();
+        let a = r.variant("dense");
+        let b = r.variant("dense");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.trace_tag, b.trace_tag);
+        let c = r.variant("butterfly");
+        assert_ne!(a.trace_tag, c.trace_tag);
+        assert_eq!(r.names(), vec!["butterfly".to_string(), "dense".to_string()]);
+        assert!(r.get("ghost").is_none());
+    }
+
+    #[test]
+    fn totals_sum_across_variants() {
+        let r = registry();
+        let a = r.variant("a");
+        let b = r.variant("b");
+        a.requests.add(3);
+        a.responses.add(2);
+        a.rejected.inc();
+        b.requests.add(5);
+        b.responses.add(5);
+        a.batches.record(4);
+        b.batches.record(7);
+        let t = r.totals();
+        assert_eq!(t.requests, 8);
+        assert_eq!(t.responses, 7);
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.batches, 2);
+        assert_eq!(t.batch_items, 11);
+        assert_eq!(t.max_batch, 7);
+        assert!(a.accounted());
+        assert!(b.accounted());
+    }
+
+    #[test]
+    fn snapshot_contains_per_variant_lines() {
+        let r = registry();
+        let vm = r.variant("only");
+        vm.requests.inc();
+        vm.responses.inc();
+        vm.latency.record(Duration::from_micros(100));
+        let s = r.snapshot();
+        assert!(s.contains("variant=only requests=1 responses=1"), "{s}");
+        assert!(s.contains("latency"));
+        assert!(s.contains("engine_time"));
+        assert_eq!(registry().snapshot(), "no variants registered");
+    }
+}

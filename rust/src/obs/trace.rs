@@ -1,0 +1,316 @@
+//! Request tracing: per-request IDs, per-stage timings, and a
+//! lock-free ring buffer of recently completed traces (the `TRACE <n>`
+//! protocol verb).
+//!
+//! Every accepted request is assigned a process-unique trace ID at
+//! submit time; the ID rides the job through router → batcher → engine,
+//! and when the engine answers, the batcher publishes a completed
+//! trace: queue wait, engine time, end-to-end time and the batch the
+//! request rode in.
+//!
+//! The ring is wait-free for writers (one `fetch_add` to claim a slot,
+//! then plain atomic stores) and never blocks the serving path. Readers
+//! use a per-slot sequence number (even = stable, odd = being written)
+//! to discard slots caught mid-overwrite; under extreme wrap-around a
+//! reader may skip a handful of slots, which is fine for a diagnostic
+//! buffer. Variant names are interned once at variant registration so
+//! the hot path stores a `u32` tag, not a `String`.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::RwLock;
+
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a process-unique trace ID.
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Default ring capacity (recent traces kept for `TRACE <n>`).
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// A completed trace as pushed by the batcher (variant as interned tag).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub id: u64,
+    /// Interned variant tag from [`TraceRing::intern`].
+    pub tag: u32,
+    pub queue_wait_us: u64,
+    pub engine_us: u64,
+    /// Submit → engine answer, in microseconds.
+    pub total_us: u64,
+    /// Size of the batch this request rode in.
+    pub batch: u32,
+    pub ok: bool,
+}
+
+/// A completed trace as read back out (tag resolved to the name).
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    pub id: u64,
+    pub variant: String,
+    pub queue_wait_us: u64,
+    pub engine_us: u64,
+    pub total_us: u64,
+    pub batch: u32,
+    pub ok: bool,
+}
+
+struct Slot {
+    /// `ticket * 2 + 1` while being written, `ticket * 2 + 2` once
+    /// stable, 0 when never used.
+    seq: AtomicU64,
+    id: AtomicU64,
+    tag: AtomicU32,
+    queue_wait_us: AtomicU64,
+    engine_us: AtomicU64,
+    total_us: AtomicU64,
+    batch: AtomicU32,
+    ok: AtomicU32,
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            id: AtomicU64::new(0),
+            tag: AtomicU32::new(0),
+            queue_wait_us: AtomicU64::new(0),
+            engine_us: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+            batch: AtomicU32::new(0),
+            ok: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity ring of recently completed traces.
+pub struct TraceRing {
+    slots: Vec<Slot>,
+    /// Tickets issued == traces pushed since startup.
+    head: AtomicU64,
+    /// Interned variant names; `tag` indexes this. Written only at
+    /// variant registration, read only when rendering.
+    names: RwLock<Vec<String>>,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TraceRing {
+            slots: (0..capacity).map(|_| Slot::empty()).collect(),
+            head: AtomicU64::new(0),
+            names: RwLock::new(Vec::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Traces pushed since startup (may exceed capacity).
+    pub fn completed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Intern `name`, returning its stable tag (idempotent).
+    pub fn intern(&self, name: &str) -> u32 {
+        {
+            let names = self.names.read().unwrap();
+            if let Some(i) = names.iter().position(|n| n == name) {
+                return i as u32;
+            }
+        }
+        let mut names = self.names.write().unwrap();
+        if let Some(i) = names.iter().position(|n| n == name) {
+            return i as u32;
+        }
+        names.push(name.to_string());
+        (names.len() - 1) as u32
+    }
+
+    fn name_of(&self, tag: u32) -> String {
+        self.names
+            .read()
+            .unwrap()
+            .get(tag as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("?{tag}"))
+    }
+
+    /// Publish a completed trace (wait-free; overwrites the oldest).
+    pub fn push(&self, t: TraceEvent) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket as usize) % self.slots.len()];
+        slot.seq.store(ticket * 2 + 1, Ordering::Release);
+        slot.id.store(t.id, Ordering::Relaxed);
+        slot.tag.store(t.tag, Ordering::Relaxed);
+        slot.queue_wait_us.store(t.queue_wait_us, Ordering::Relaxed);
+        slot.engine_us.store(t.engine_us, Ordering::Relaxed);
+        slot.total_us.store(t.total_us, Ordering::Relaxed);
+        slot.batch.store(t.batch, Ordering::Relaxed);
+        slot.ok.store(t.ok as u32, Ordering::Relaxed);
+        slot.seq.store(ticket * 2 + 2, Ordering::Release);
+    }
+
+    /// The most recent `n` completed traces, newest first. Slots caught
+    /// mid-overwrite are skipped.
+    pub fn recent(&self, n: usize) -> Vec<CompletedTrace> {
+        let head = self.head.load(Ordering::Acquire);
+        let available = (head as usize).min(self.slots.len()).min(n);
+        let mut out = Vec::with_capacity(available);
+        for back in 0..(head as usize).min(self.slots.len()) {
+            if out.len() >= n {
+                break;
+            }
+            let ticket = head - 1 - back as u64;
+            let slot = &self.slots[(ticket as usize) % self.slots.len()];
+            let want = ticket * 2 + 2;
+            if slot.seq.load(Ordering::Acquire) != want {
+                continue; // being overwritten right now
+            }
+            let t = CompletedTrace {
+                id: slot.id.load(Ordering::Relaxed),
+                variant: self.name_of(slot.tag.load(Ordering::Relaxed)),
+                queue_wait_us: slot.queue_wait_us.load(Ordering::Relaxed),
+                engine_us: slot.engine_us.load(Ordering::Relaxed),
+                total_us: slot.total_us.load(Ordering::Relaxed),
+                batch: slot.batch.load(Ordering::Relaxed),
+                ok: slot.ok.load(Ordering::Relaxed) != 0,
+            };
+            // Re-check: if a writer claimed the slot while we copied,
+            // the copy may be torn — drop it.
+            if slot.seq.load(Ordering::Acquire) == want {
+                out.push(t);
+            }
+        }
+        out
+    }
+
+    /// Text rendering for the `TRACE <n>` verb, newest first.
+    pub fn render(&self, n: usize) -> String {
+        let traces = self.recent(n);
+        if traces.is_empty() {
+            return "no completed traces".to_string();
+        }
+        let mut out = String::new();
+        for t in traces {
+            out.push_str(&format!(
+                "#{} variant={} ok={} total_us={} queue_us={} engine_us={} batch={}\n",
+                t.id,
+                t.variant,
+                t.ok as u8,
+                t.total_us,
+                t.queue_wait_us,
+                t.engine_us,
+                t.batch
+            ));
+        }
+        out.pop(); // protocol Text responses add the trailing newline
+        out
+    }
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ring: &TraceRing, id: u64, tag: u32, total: u64) -> TraceEvent {
+        let _ = ring;
+        TraceEvent {
+            id,
+            tag,
+            queue_wait_us: 10,
+            engine_us: 20,
+            total_us: total,
+            batch: 4,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn push_and_recent_order() {
+        let r = TraceRing::new(8);
+        let tag = r.intern("dense");
+        assert_eq!(r.intern("dense"), tag, "interning is idempotent");
+        for i in 1..=5u64 {
+            r.push(ev(&r, i, tag, i * 100));
+        }
+        assert_eq!(r.completed(), 5);
+        let got = r.recent(3);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].id, 5, "newest first");
+        assert_eq!(got[2].id, 3);
+        assert_eq!(got[0].variant, "dense");
+        assert_eq!(got[0].total_us, 500);
+        // asking for more than available returns what exists
+        assert_eq!(r.recent(100).len(), 5);
+    }
+
+    #[test]
+    fn wrap_around_keeps_newest() {
+        let r = TraceRing::new(4);
+        let tag = r.intern("v");
+        for i in 1..=10u64 {
+            r.push(ev(&r, i, tag, i));
+        }
+        let got = r.recent(10);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].id, 10);
+        assert_eq!(got[3].id, 7);
+    }
+
+    #[test]
+    fn concurrent_pushers_never_panic_and_ids_are_plausible() {
+        let r = std::sync::Arc::new(TraceRing::new(64));
+        let tag = r.intern("c");
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let r = std::sync::Arc::clone(&r);
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        r.push(TraceEvent {
+                            id: t * 1000 + i,
+                            tag,
+                            queue_wait_us: i,
+                            engine_us: i,
+                            total_us: 2 * i,
+                            batch: 1,
+                            ok: true,
+                        });
+                    }
+                });
+            }
+            // reader racing the writers: must never panic or hang
+            for _ in 0..50 {
+                let _ = r.recent(32);
+            }
+        });
+        assert_eq!(r.completed(), 800);
+        let got = r.recent(64);
+        assert!(!got.is_empty() && got.len() <= 64);
+    }
+
+    #[test]
+    fn render_formats_lines() {
+        let r = TraceRing::new(4);
+        assert_eq!(r.render(5), "no completed traces");
+        let tag = r.intern("net");
+        r.push(ev(&r, 42, tag, 812));
+        let s = r.render(5);
+        assert!(s.starts_with("#42 variant=net ok=1 total_us=812"), "{s}");
+    }
+
+    #[test]
+    fn trace_ids_unique() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+    }
+}

@@ -92,7 +92,10 @@ impl ModelRegistry {
             // `m@v1`, which `resolve` could never look up again; hold
             // scanned names to the same rules `save` enforces.
             if let Err(e) = validate_name(&name) {
-                eprintln!("store: skipping {file}: {e:#}");
+                crate::obs::event::warn("store.scan")
+                    .field("file", &file)
+                    .msg(format!("skipping: {e:#}"))
+                    .emit();
                 continue;
             }
             match Self::peek_kind(&path) {
@@ -107,11 +110,19 @@ impl ModelRegistry {
                     });
                 }
                 Err(e) => {
-                    eprintln!("store: skipping {file}: {e:#}");
+                    crate::obs::event::warn("store.scan")
+                        .field("file", &file)
+                        .msg(format!("skipping: {e:#}"))
+                        .emit();
                 }
             }
         }
         entries.sort_by(|a, b| (&a.name, a.version).cmp(&(&b.name, b.version)));
+        crate::obs::event::debug("store.scan")
+            .field("dir", dir.display())
+            .field("entries", entries.len())
+            .msg("store scanned")
+            .emit();
         Ok(ModelRegistry { dir, entries })
     }
 

@@ -5,6 +5,10 @@
 //! optimizer instance can drive a heterogeneous parameter set (dense
 //! matrices + butterfly gadget weights), exactly like the PyTorch
 //! parameter groups the paper used.
+//!
+//! Training loops emit per-epoch progress through the shared structured
+//! event log ([`crate::obs::event`]) via [`log_epoch`] / [`log_phase`],
+//! so serving and training diagnostics share one stream and format.
 
 mod adam;
 mod schedule;
@@ -13,6 +17,38 @@ mod sgd;
 pub use adam::Adam;
 pub use schedule::{ConstantLr, CosineLr, LrSchedule, StepDecayLr};
 pub use sgd::Sgd;
+
+use std::time::Duration;
+
+/// Emit one per-epoch training event (`level=info`) with loss,
+/// gradient norm, learning rate and wall-clock step time. `target`
+/// names the loop, e.g. `train.mlp` or `train.two_phase`.
+pub fn log_epoch(
+    target: &str,
+    epoch: usize,
+    loss: f64,
+    grad_norm: f64,
+    lr: f64,
+    step_time: Duration,
+) {
+    crate::obs::event::info(target)
+        .field("epoch", epoch)
+        .field("loss", format!("{loss:.6}"))
+        .field("grad_norm", format!("{grad_norm:.4}"))
+        .field("lr", format!("{lr:.6}"))
+        .field("step_ms", format!("{:.1}", step_time.as_secs_f64() * 1e3))
+        .emit();
+}
+
+/// Emit one intra-phase progress event (`level=debug`) for loops that
+/// report every `log_every` iterations rather than per epoch.
+pub fn log_phase(target: &str, phase: &str, iter: usize, loss: f64) {
+    crate::obs::event::debug(target)
+        .field("phase", phase)
+        .field("iter", iter)
+        .field("loss", format!("{loss:.6}"))
+        .emit();
+}
 
 /// A first-order optimizer over a flat parameter vector.
 pub trait Optimizer {

@@ -70,13 +70,22 @@ fn native_variants_serve_concurrent_clients() {
     for j in joins {
         j.join().unwrap();
     }
-    // conservation: 80 requests, 80 responses, 0 errors
-    assert_eq!(c.metrics.requests.get(), 80);
-    assert_eq!(c.metrics.responses.get(), 80);
-    assert_eq!(c.metrics.errors.get(), 0);
+    // conservation: 80 requests, 80 responses, 0 errors — and it holds
+    // per variant, not just in aggregate
+    let totals = c.obs.totals();
+    assert_eq!(totals.requests, 80);
+    assert_eq!(totals.responses, 80);
+    assert_eq!(totals.errors, 0);
+    for name in ["dense", "butterfly"] {
+        let vm = c.obs.variant(name);
+        assert_eq!(vm.requests.get(), 40, "{name}");
+        assert_eq!(vm.responses.get(), 40, "{name}");
+        assert!(vm.accounted(), "{name} accounting broken");
+        assert_eq!(vm.latency.count(), 40, "{name}");
+    }
     // batching actually coalesced under concurrency
-    let (nb, mean_batch, max_batch) = c.metrics.batches.summary();
-    assert!(nb <= 80);
+    let (nb, mean_batch, max_batch) = c.obs.variant("dense").batches.summary();
+    assert!(nb <= 40);
     assert!(max_batch <= 16, "batch bound violated: {max_batch}");
     assert!(mean_batch >= 1.0);
     h.stop();

@@ -1,0 +1,222 @@
+//! Integration: the observability surface over the wire — `METRICS`,
+//! `METRICS PROM`, `VARIANTS` and `TRACE` round-trips against a live
+//! TCP server, including Prometheus text-format validation of the
+//! per-variant histogram series.
+
+use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator, Engine};
+use butterfly_net::linalg::Mat;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Echo(usize);
+impl Engine for Echo {
+    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+        Ok(x.clone())
+    }
+    fn input_dim(&self) -> usize {
+        self.0
+    }
+    fn output_dim(&self) -> usize {
+        self.0
+    }
+}
+
+fn start() -> (Arc<Coordinator>, butterfly_net::coordinator::ServerHandle) {
+    let mut c = Coordinator::new();
+    let cfg = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 64,
+    };
+    c.register("dense", Box::new(Echo(2)), cfg.clone());
+    c.register("butterfly", Box::new(Echo(2)), cfg);
+    let c = Arc::new(c);
+    let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    (c, h)
+}
+
+/// One-line request → one-line response.
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("{line}\n").as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    out
+}
+
+/// One-line request → multi-line `Text` response, read until `END`.
+fn roundtrip_text(addr: std::net::SocketAddr, line: &str) -> Vec<String> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("{line}\n").as_bytes()).unwrap();
+    let r = BufReader::new(s);
+    let mut out = Vec::new();
+    for l in r.lines() {
+        let l = l.unwrap();
+        if l == "END" {
+            break;
+        }
+        out.push(l);
+    }
+    out
+}
+
+fn drive_traffic(addr: std::net::SocketAddr, variant: &str, n: usize) {
+    for i in 0..n {
+        let resp = roundtrip(addr, &format!("INFER {variant} {} {}", i, i + 1));
+        assert!(resp.starts_with("OK "), "{resp}");
+    }
+}
+
+#[test]
+fn metrics_text_roundtrip() {
+    let (_c, h) = start();
+    drive_traffic(h.addr, "dense", 3);
+    let lines = roundtrip_text(h.addr, "METRICS");
+    // per-variant first lines carry the counter summary
+    let dense = lines
+        .iter()
+        .find(|l| l.starts_with("variant=dense requests="))
+        .expect("dense summary line");
+    assert!(dense.contains("requests=3"), "{dense}");
+    assert!(dense.contains("responses=3"), "{dense}");
+    assert!(lines.iter().any(|l| l.starts_with("variant=butterfly")));
+    h.stop();
+}
+
+#[test]
+fn variants_roundtrip() {
+    let (_c, h) = start();
+    let lines = roundtrip_text(h.addr, "VARIANTS");
+    assert!(lines.contains(&"dense".to_string()), "{lines:?}");
+    assert!(lines.contains(&"butterfly".to_string()), "{lines:?}");
+    h.stop();
+}
+
+#[test]
+fn trace_roundtrip() {
+    let (_c, h) = start();
+    drive_traffic(h.addr, "dense", 5);
+    let lines = roundtrip_text(h.addr, "TRACE 3");
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    for l in &lines {
+        assert!(l.starts_with('#'), "{l}");
+        assert!(l.contains("variant=dense"), "{l}");
+        assert!(l.contains("ok=1"), "{l}");
+        assert!(l.contains("total_us="), "{l}");
+        assert!(l.contains("queue_us="), "{l}");
+        assert!(l.contains("engine_us="), "{l}");
+        assert!(l.contains("batch="), "{l}");
+    }
+    // bare TRACE defaults; malformed arguments are ERR not disconnect
+    assert!(!roundtrip_text(h.addr, "TRACE").is_empty());
+    assert!(roundtrip(h.addr, "TRACE x").starts_with("ERR"));
+    assert!(roundtrip(h.addr, "TRACE 0").starts_with("ERR"));
+    h.stop();
+}
+
+/// Parse a Prometheus sample line `name{labels} value` into
+/// `(series_name, labels, value)`.
+fn parse_sample(line: &str) -> (String, String, f64) {
+    let (name_labels, value) = line.rsplit_once(' ').expect(line);
+    let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+    match name_labels.split_once('{') {
+        Some((name, rest)) => {
+            let labels = rest.strip_suffix('}').expect(line);
+            (name.to_string(), labels.to_string(), value)
+        }
+        None => (name_labels.to_string(), String::new(), value),
+    }
+}
+
+#[test]
+fn prometheus_exposition_is_valid_and_consistent() {
+    let (_c, h) = start();
+    drive_traffic(h.addr, "dense", 4);
+    drive_traffic(h.addr, "butterfly", 2);
+    // an unroutable request shows up in the exposition too
+    assert!(roundtrip(h.addr, "INFER ghost 1 2").starts_with("ERR"));
+    let lines = roundtrip_text(h.addr, "METRICS PROM");
+    assert!(!lines.is_empty());
+
+    // 1) every line is a comment or a `name{labels} value` sample
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut samples: Vec<(String, String, f64)> = Vec::new();
+    for line in &lines {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            types.insert(it.next().unwrap().to_string(), it.next().unwrap().to_string());
+        } else if line.starts_with("# HELP ") {
+            continue;
+        } else {
+            assert!(!line.starts_with('#'), "unknown comment: {line}");
+            samples.push(parse_sample(line));
+        }
+    }
+
+    // 2) the core families are declared with the right types
+    for (family, kind) in [
+        ("bfly_requests_total", "counter"),
+        ("bfly_responses_total", "counter"),
+        ("bfly_rejected_total", "counter"),
+        ("bfly_queue_depth", "gauge"),
+        ("bfly_latency_us", "histogram"),
+        ("bfly_queue_wait_us", "histogram"),
+        ("bfly_engine_us", "histogram"),
+    ] {
+        assert_eq!(types.get(family).map(String::as_str), Some(kind), "{family}");
+    }
+
+    // 3) counters carry the observed per-variant traffic
+    let get = |name: &str, label_frag: &str| -> f64 {
+        samples
+            .iter()
+            .find(|(n, l, _)| n == name && l.contains(label_frag))
+            .unwrap_or_else(|| panic!("missing {name}{{{label_frag}}}"))
+            .2
+    };
+    assert_eq!(get("bfly_requests_total", "variant=\"dense\""), 4.0);
+    assert_eq!(get("bfly_responses_total", "variant=\"dense\""), 4.0);
+    assert_eq!(get("bfly_requests_total", "variant=\"butterfly\""), 2.0);
+    assert_eq!(get("bfly_requests_total", "variant=\"_unrouted\""), 1.0);
+    assert_eq!(get("bfly_rejected_total", "variant=\"_unrouted\""), 1.0);
+
+    // 4) each latency-ish histogram has per-variant _bucket/_sum/_count,
+    //    cumulative buckets, and +Inf == _count
+    for family in ["bfly_latency_us", "bfly_queue_wait_us", "bfly_engine_us"] {
+        for variant in ["dense", "butterfly"] {
+            let frag = format!("variant=\"{variant}\"");
+            let buckets: Vec<&(String, String, f64)> = samples
+                .iter()
+                .filter(|(n, l, _)| n == &format!("{family}_bucket") && l.contains(&frag))
+                .collect();
+            assert!(!buckets.is_empty(), "{family} {variant}: no buckets");
+            let mut prev = 0.0;
+            for (_, labels, v) in &buckets {
+                assert!(labels.contains("le=\""), "{labels}");
+                assert!(*v >= prev, "{family} {variant}: non-cumulative");
+                prev = *v;
+            }
+            let inf = buckets
+                .iter()
+                .find(|(_, l, _)| l.contains("le=\"+Inf\""))
+                .unwrap_or_else(|| panic!("{family} {variant}: no +Inf bucket"))
+                .2;
+            let count = get(&format!("{family}_count"), &frag);
+            let sum = get(&format!("{family}_sum"), &frag);
+            assert_eq!(inf, count, "{family} {variant}: +Inf != _count");
+            assert!(sum >= 0.0);
+            if family == "bfly_latency_us" {
+                let want = if variant == "dense" { 4.0 } else { 2.0 };
+                assert_eq!(count, want, "{family} {variant}");
+            }
+        }
+    }
+
+    // malformed exposition requests are ERR, not disconnect
+    assert!(roundtrip(h.addr, "METRICS JUNK").starts_with("ERR"));
+    h.stop();
+}

@@ -1,11 +1,12 @@
 //! Property tests for the coordinator invariants (DESIGN.md §7):
-//! conservation, batch bound, deadline, backpressure — over randomised
-//! request patterns, engine latencies and batcher configurations.
+//! conservation, batch bound, deadline, backpressure, and per-variant
+//! accounting — over randomised request patterns, engine latencies and
+//! batcher configurations.
 
 use butterfly_net::coordinator::{Batcher, BatcherConfig, Coordinator, Engine, NativeHeadEngine};
 use butterfly_net::linalg::Mat;
-use butterfly_net::metrics::Metrics;
 use butterfly_net::model::Head;
+use butterfly_net::obs::{Obs, UNROUTED};
 use butterfly_net::rng::Rng;
 use butterfly_net::testing::{forall, gen, PropConfig};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -35,6 +36,11 @@ impl Engine for Recorder {
     fn output_dim(&self) -> usize {
         self.dim
     }
+}
+
+/// Spawn a standalone batcher against a fresh Obs bundle.
+fn spawn(obs: &Obs, name: &str, engine: Box<dyn Engine>, cfg: BatcherConfig) -> Batcher {
+    Batcher::spawn(name, engine, cfg, obs.variant(name), Arc::clone(&obs.traces))
 }
 
 #[derive(Debug)]
@@ -71,8 +77,9 @@ fn conservation_and_batch_bound() {
             batch_sizes: Arc::clone(&sizes),
             calls: Arc::clone(&calls),
         };
-        let metrics = Arc::new(Metrics::new());
-        let b = Batcher::spawn(
+        let obs = Obs::new();
+        let b = spawn(
+            &obs,
             "prop",
             Box::new(engine),
             BatcherConfig {
@@ -80,7 +87,6 @@ fn conservation_and_batch_bound() {
                 max_wait: Duration::from_micros(200),
                 queue_cap: s.queue_cap,
             },
-            Arc::clone(&metrics),
         );
         let b = Arc::new(b);
         let accepted = Arc::new(AtomicUsize::new(0));
@@ -97,7 +103,7 @@ fn conservation_and_batch_bound() {
                         match b.submit(vec![t as f64, i as f64, 0.0]) {
                             Ok(rx) => {
                                 accepted.fetch_add(1, Ordering::SeqCst);
-                                let out = rx.recv().unwrap().unwrap();
+                                let out = rx.recv().unwrap().result.unwrap();
                                 // response corresponds to this request
                                 if out[0] == t as f64 && out[1] == i as f64 {
                                     answered.fetch_add(1, Ordering::SeqCst);
@@ -135,6 +141,29 @@ fn conservation_and_batch_bound() {
         let batched: usize = sizes.iter().sum();
         if batched != acc {
             return Err(format!("rows batched {batched} != accepted {acc}"));
+        }
+        // observability invariants: metrics agree with the ground truth
+        let vm = obs.variant("prop");
+        if vm.rejected.get() as usize != rej {
+            return Err(format!(
+                "rejected counter {} != observed {rej}",
+                vm.rejected.get()
+            ));
+        }
+        if vm.queue_depth.get() != 0 {
+            return Err(format!("queue depth {} after drain", vm.queue_depth.get()));
+        }
+        if obs.traces.completed() as usize != acc {
+            return Err(format!(
+                "trace count {} != accepted {acc}",
+                obs.traces.completed()
+            ));
+        }
+        if vm.queue_wait.count() as usize != acc {
+            return Err(format!(
+                "queue_wait samples {} != accepted {acc}",
+                vm.queue_wait.count()
+            ));
         }
         Ok(())
     });
@@ -184,13 +213,130 @@ fn router_conservation_across_variants() {
                     });
                 }
             });
-            let responses = c.metrics.responses.get() as usize;
+            let responses = c.obs.totals().responses as usize;
             let got = ok.load(Ordering::SeqCst);
             if got != n_reqs {
                 return Err(format!("{got}/{n_reqs} succeeded"));
             }
             if responses != n_reqs {
                 return Err(format!("metrics responses {responses} != {n_reqs}"));
+            }
+            // per-variant accounting reconciles for every variant
+            for v in 0..n_variants {
+                let vm = c.obs.variant(&format!("v{v}"));
+                if !vm.accounted() {
+                    return Err(format!(
+                        "v{v}: requests {} != responses {} + rejected {} + errors {}",
+                        vm.requests.get(),
+                        vm.responses.get(),
+                        vm.rejected.get(),
+                        vm.errors.get()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn per_variant_accounting_under_mixed_load() {
+    // The observability invariant: for every variant (including the
+    // reserved `_unrouted` pseudo-variant), once traffic drains,
+    // `requests == responses + rejected + errors` — under concurrent
+    // clients mixing good requests, unknown variants, wrong input
+    // dimensions, and a queue small enough to force backpressure.
+    let cfg = PropConfig {
+        cases: 10,
+        ..Default::default()
+    };
+    forall(
+        "per-variant-accounting",
+        &cfg,
+        |rng| {
+            (
+                gen::range(rng, 2, 5),   // client threads
+                gen::range(rng, 8, 40),  // requests per thread
+                gen::range(rng, 2, 16),  // queue_cap (small: force rejects)
+                gen::range(rng, 0, 150) as u64, // engine latency µs
+            )
+        },
+        |&(n_threads, per_thread, queue_cap, latency_us)| {
+            let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+            let calls = Arc::new(AtomicUsize::new(0));
+            let mut c = Coordinator::new();
+            c.register(
+                "good",
+                Box::new(Recorder {
+                    dim: 2,
+                    latency: Duration::from_micros(latency_us),
+                    batch_sizes: Arc::clone(&sizes),
+                    calls: Arc::clone(&calls),
+                }),
+                BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(100),
+                    queue_cap,
+                },
+            );
+            let c = Arc::new(c);
+            std::thread::scope(|scope| {
+                for t in 0..n_threads {
+                    let c = Arc::clone(&c);
+                    scope.spawn(move || {
+                        for i in 0..per_thread {
+                            match (t + i) % 4 {
+                                // well-formed request (may hit backpressure)
+                                0 | 1 => {
+                                    let _ = c.infer("good", vec![1.0, 2.0]);
+                                }
+                                // unknown variant → _unrouted rejection
+                                2 => {
+                                    let _ = c.infer("ghost", vec![1.0, 2.0]);
+                                }
+                                // wrong input dim → engine-side error
+                                _ => {
+                                    let _ = c.infer("good", vec![1.0, 2.0, 3.0]);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            let total = n_threads * per_thread;
+            let totals = c.obs.totals();
+            if totals.requests as usize != total {
+                return Err(format!(
+                    "requests {} != submitted {total}",
+                    totals.requests
+                ));
+            }
+            for name in ["good", UNROUTED] {
+                let vm = c.obs.variant(name);
+                if !vm.accounted() {
+                    return Err(format!(
+                        "{name}: requests {} != responses {} + rejected {} + errors {}",
+                        vm.requests.get(),
+                        vm.responses.get(),
+                        vm.rejected.get(),
+                        vm.errors.get()
+                    ));
+                }
+            }
+            // the unknown-variant traffic landed where it should
+            let unrouted = c.obs.variant(UNROUTED);
+            if unrouted.requests.get() != unrouted.rejected.get() {
+                return Err("unrouted traffic must be all-rejected".to_string());
+            }
+            if unrouted.requests.get() == 0 {
+                return Err("scenario generated no unknown-variant traffic".to_string());
+            }
+            // queue fully drained
+            if c.obs.variant("good").queue_depth.get() != 0 {
+                return Err(format!(
+                    "queue depth {} after drain",
+                    c.obs.variant("good").queue_depth.get()
+                ));
             }
             Ok(())
         },
@@ -320,15 +466,16 @@ fn hot_swap_conserves_requests_and_switches_cleanly() {
             if probe[0] != 3.0 {
                 return Err(format!("post-swap probe answered by old engine: {probe:?}"));
             }
-            if c.metrics.responses.get() as usize != total + 1 {
+            let vm = c.obs.variant("m");
+            if vm.responses.get() as usize != total + 1 {
                 return Err(format!(
                     "metrics responses {} != {}",
-                    c.metrics.responses.get(),
+                    vm.responses.get(),
                     total + 1
                 ));
             }
-            if c.metrics.swaps.get() != 1 {
-                return Err(format!("swap count {} != 1", c.metrics.swaps.get()));
+            if vm.swaps.get() != 1 {
+                return Err(format!("swap count {} != 1", vm.swaps.get()));
             }
             Ok(())
         },
@@ -348,8 +495,9 @@ fn deadline_bounds_queue_wait() {
         &cfg,
         |rng| gen::range(rng, 1, 8) as u64, // max_wait ms
         |&wait_ms| {
-            let metrics = Arc::new(Metrics::new());
-            let b = Batcher::spawn(
+            let obs = Obs::new();
+            let b = spawn(
+                &obs,
                 "deadline",
                 Box::new(Recorder {
                     dim: 1,
@@ -362,11 +510,10 @@ fn deadline_bounds_queue_wait() {
                     max_wait: Duration::from_millis(wait_ms),
                     queue_cap: 16,
                 },
-                Arc::clone(&metrics),
             );
             let t0 = std::time::Instant::now();
             let rx = b.submit(vec![1.0]).map_err(|e| e.to_string())?;
-            rx.recv().unwrap().map_err(|e| e)?;
+            rx.recv().unwrap().result?;
             let waited = t0.elapsed();
             let bound = Duration::from_millis(wait_ms) + Duration::from_millis(250);
             if waited > bound {
