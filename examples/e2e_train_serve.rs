@@ -213,6 +213,7 @@ fn main() -> Result<()> {
         max_batch: 32,
         max_wait: std::time::Duration::from_millis(1),
         queue_cap: 4096,
+        workers: 2,
     };
     for v in [dense, bfly] {
         let engine = PjrtEngine::new(rt.clone(), v.artifact_fwd, v.bound.clone(), 0)?;

@@ -77,6 +77,7 @@ fn main() -> Result<()> {
             max_batch: 16,
             max_wait: std::time::Duration::from_micros(500),
             queue_cap: 4096,
+            workers: 2,
         },
     )?;
     let coordinator = Arc::new(coordinator);

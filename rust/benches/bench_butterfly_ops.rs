@@ -1,10 +1,14 @@
 //! Micro-benchmarks of the core operator: butterfly forward/transpose/
 //! VJP vs the dense matmul it replaces, across the paper's layer sizes.
-//! Backs the complexity claim of §3.1 (O(n log n) vs O(n²)).
+//! Backs the complexity claim of §3.1 (O(n log n) vs O(n²)), plus a
+//! thread-scaling sweep of the cache-blocked panel kernel (the same
+//! code path `BUTTERFLY_NET_THREADS` controls in production, driven
+//! here through the explicit-worker entry point so one process can
+//! sweep thread counts).
 
 use butterfly_net::bench::{black_box, Suite};
-use butterfly_net::butterfly::TruncatedButterfly;
-use butterfly_net::linalg::Mat;
+use butterfly_net::butterfly::{apply_stages_blocked, panel_rows, Butterfly, TruncatedButterfly};
+use butterfly_net::linalg::{num_threads, Mat};
 use butterfly_net::model::Head;
 use butterfly_net::rng::Rng;
 
@@ -30,4 +34,26 @@ fn main() {
     }
     suite.report();
     suite.write_csv("butterfly_ops.csv");
+
+    // Thread-scaling sweep of the blocked kernel: full log n stage
+    // stack over a 64-row panel-parallel batch.
+    let rows = 64;
+    let mut threads: Vec<usize> = vec![1, 2, 4, num_threads()];
+    threads.sort_unstable();
+    threads.dedup();
+    let mut sweep = Suite::new(&format!("blocked kernel scaling (batch {rows})"));
+    for &n in &[1024usize, 4096] {
+        let net = Butterfly::gaussian(n, 1.0, &mut rng);
+        let x = Mat::gaussian(rows, n, 1.0, &mut rng);
+        let mut y = x.clone();
+        for &t in &threads {
+            sweep.case(&format!("apply_stages n={n} threads={t}"), rows, || {
+                y.data_mut().copy_from_slice(x.data());
+                apply_stages_blocked(net.layers(), &mut y, false, panel_rows(n), t);
+                black_box(&y);
+            });
+        }
+    }
+    sweep.report();
+    sweep.write_csv("butterfly_kernel_scaling.csv");
 }

@@ -10,60 +10,74 @@ use butterfly_net::rng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+
 fn main() {
     let mut rng = Rng::seed_from_u64(0);
     let (n1, n2) = (1024, 512);
+    // Each (kind, workers) pair is its own variant — e.g. `dense-w2`
+    // runs a 2-thread engine pool — so the worker sweep runs in one
+    // process against one coordinator.
     let mut c = Coordinator::new();
-    let bcfg = BatcherConfig {
-        max_batch: 32,
-        max_wait: Duration::from_micros(200),
-        queue_cap: 8192,
-    };
-    c.register(
-        "dense",
-        Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng))),
-        bcfg.clone(),
-    );
-    c.register(
-        "butterfly",
-        Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
-        bcfg,
-    );
+    for &workers in &WORKER_SWEEP {
+        let bcfg = BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 8192,
+            workers,
+        };
+        c.register(
+            &format!("dense-w{workers}"),
+            Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng))),
+            bcfg.clone(),
+        );
+        c.register(
+            &format!("butterfly-w{workers}"),
+            Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
+            bcfg,
+        );
+    }
     let c = Arc::new(c);
 
     let mut suite = Suite::new("coordinator serving path (1024→512)");
-    // single-inflight latency
-    for variant in ["dense", "butterfly"] {
+    // single-inflight latency (pool size is irrelevant at depth 1)
+    for kind in ["dense", "butterfly"] {
         let c2 = Arc::clone(&c);
+        let variant = format!("{kind}-w1");
         let x = {
             let mut r = Rng::seed_from_u64(1);
             r.gaussian_vec(n1, 1.0)
         };
-        suite.case(&format!("{variant} latency (1 inflight)"), 1, move || {
-            c2.infer(variant, x.clone()).unwrap();
+        suite.case(&format!("{kind} latency (1 inflight)"), 1, move || {
+            c2.infer(&variant, x.clone()).unwrap();
         });
     }
-    // concurrent throughput: 8 client threads hammering one variant
-    for variant in ["dense", "butterfly"] {
-        let c2 = Arc::clone(&c);
-        suite.case(
-            &format!("{variant} throughput (8 clients x 16)"),
-            128,
-            move || {
-                std::thread::scope(|s| {
-                    for t in 0..8u64 {
-                        let c3 = Arc::clone(&c2);
-                        s.spawn(move || {
-                            let mut r = Rng::seed_from_u64(t);
-                            for _ in 0..16 {
-                                let x = r.gaussian_vec(1024, 1.0);
-                                c3.infer(variant, x).unwrap();
-                            }
-                        });
-                    }
-                });
-            },
-        );
+    // concurrent throughput: 8 client threads hammering one variant,
+    // swept across engine-pool sizes
+    for kind in ["dense", "butterfly"] {
+        for &workers in &WORKER_SWEEP {
+            let c2 = Arc::clone(&c);
+            let variant = format!("{kind}-w{workers}");
+            suite.case(
+                &format!("{kind} throughput (8 clients x 16, workers={workers})"),
+                128,
+                move || {
+                    let variant = variant.as_str();
+                    std::thread::scope(|s| {
+                        for t in 0..8u64 {
+                            let c3 = Arc::clone(&c2);
+                            s.spawn(move || {
+                                let mut r = Rng::seed_from_u64(t);
+                                for _ in 0..16 {
+                                    let x = r.gaussian_vec(1024, 1.0);
+                                    c3.infer(variant, x).unwrap();
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+        }
     }
     suite.report();
     suite.write_csv("coordinator.csv");

@@ -88,6 +88,7 @@ fn main() {
                 max_batch: 32,
                 max_wait: Duration::from_micros(200),
                 queue_cap: 8192,
+                workers: 2,
             },
         );
         let c = Arc::new(c);

@@ -1,0 +1,190 @@
+//! Cache-blocked, batch-parallel application of butterfly stages.
+//!
+//! The naive batched forward streams the whole batch through one stage
+//! at a time (or one row through all stages at a time, touching each
+//! row's `8n` bytes `log₂ n` times from cold cache when the batch is
+//! large). This kernel blocks the batch into *panels* of rows small
+//! enough to stay cache-resident, applies **all** stages to a panel
+//! before moving on, and splits panels across threads with
+//! [`crate::linalg::run_chunks`]. Per panel, the stage loop is
+//! outermost so one stage's `n/2` gadget weights are reused across
+//! every row of the panel while the panel itself stays hot.
+//!
+//! Bitwise identity: row computations are independent and each row is
+//! transformed by the *same* scalar code ([`ButterflyLayer::apply_vec`]
+//! / [`ButterflyLayer::apply_t_vec`]) in the same stage order as the
+//! per-row path — blocking and threading only reorder work *across*
+//! rows, never within one, so outputs are bit-for-bit identical for
+//! every panel size and thread count (`rust/tests/prop_parallel_kernel.rs`).
+
+use super::layer::ButterflyLayer;
+use crate::linalg::{par_chunks_weighted, run_chunks, Mat};
+
+/// Target panel footprint: rows × n × 8 bytes ≤ 32 KiB, comfortably
+/// inside a per-core L1/L2 so all `log n` stages stream over a warm
+/// panel.
+const PANEL_BYTES: usize = 1 << 15;
+
+/// Default rows per panel for feature dimension `n`.
+pub fn panel_rows(n: usize) -> usize {
+    (PANEL_BYTES / (8 * n.max(1))).clamp(1, 64)
+}
+
+/// Apply `layers` (in order) to every row of `x`, in place — the
+/// batched forward pass. Panel size and thread count are chosen
+/// automatically; the sequential cutoff weighs the *total* work
+/// (`elements × 2·stages`), so a small batch of deep networks still
+/// parallelises.
+pub fn apply_stages(layers: &[ButterflyLayer], x: &mut Mat) {
+    if layers.is_empty() || x.rows() == 0 {
+        return;
+    }
+    let n = check_dims(layers, x);
+    let chunk = panel_rows(n) * n;
+    // ~2 mul + 1 add per element per stage.
+    let work = 2 * layers.len();
+    par_chunks_weighted(x.data_mut(), chunk, work, |_, panel| {
+        apply_panel(layers, false, n, panel);
+    });
+}
+
+/// Apply the transposes of `layers` in *reverse* order to every row of
+/// `x`, in place — the batched `Bᵀ` pass.
+pub fn apply_stages_t(layers: &[ButterflyLayer], x: &mut Mat) {
+    if layers.is_empty() || x.rows() == 0 {
+        return;
+    }
+    let n = check_dims(layers, x);
+    let chunk = panel_rows(n) * n;
+    let work = 2 * layers.len();
+    par_chunks_weighted(x.data_mut(), chunk, work, |_, panel| {
+        apply_panel(layers, true, n, panel);
+    });
+}
+
+/// Fully explicit variant: caller picks the panel size (rows) and the
+/// worker-thread count. Used by the property tests (sweep both axes,
+/// assert bitwise identity) and the `bench_butterfly_ops` thread-scaling
+/// sweep; `transpose` selects the `Bᵀ` path.
+pub fn apply_stages_blocked(
+    layers: &[ButterflyLayer],
+    x: &mut Mat,
+    transpose: bool,
+    panel_rows: usize,
+    workers: usize,
+) {
+    if layers.is_empty() || x.rows() == 0 {
+        return;
+    }
+    let n = check_dims(layers, x);
+    let chunk = panel_rows.max(1) * n;
+    run_chunks(x.data_mut(), chunk, workers, |_, panel| {
+        apply_panel(layers, transpose, n, panel);
+    });
+}
+
+fn check_dims(layers: &[ButterflyLayer], x: &Mat) -> usize {
+    let n = x.cols();
+    for l in layers {
+        assert_eq!(l.n(), n, "layer dim {} != batch cols {n}", l.n());
+    }
+    n
+}
+
+/// One panel, all stages. `panel` is a whole number of rows because the
+/// chunk size is a multiple of `n` (the trailing chunk is the row
+/// remainder, still a multiple of `n`).
+fn apply_panel(layers: &[ButterflyLayer], transpose: bool, n: usize, panel: &mut [f64]) {
+    debug_assert_eq!(panel.len() % n, 0);
+    if transpose {
+        for l in layers.iter().rev() {
+            for row in panel.chunks_exact_mut(n) {
+                l.apply_t_vec(row);
+            }
+        }
+    } else {
+        for l in layers {
+            for row in panel.chunks_exact_mut(n) {
+                l.apply_vec(row);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::Butterfly;
+    use crate::rng::Rng;
+
+    fn reference(layers: &[ButterflyLayer], x: &Mat, transpose: bool) -> Mat {
+        let mut y = x.clone();
+        for r in 0..y.rows() {
+            let row = y.row_mut(r);
+            if transpose {
+                for l in layers.iter().rev() {
+                    l.apply_t_vec(row);
+                }
+            } else {
+                for l in layers {
+                    l.apply_vec(row);
+                }
+            }
+        }
+        y
+    }
+
+    fn bitwise_eq(a: &Mat, b: &Mat) -> bool {
+        a.shape() == b.shape()
+            && a.data()
+                .iter()
+                .zip(b.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn blocked_kernel_is_bitwise_identical() {
+        let mut rng = Rng::seed_from_u64(99);
+        for &n in &[2usize, 16, 64] {
+            let b = Butterfly::gaussian(n, 1.0, &mut rng);
+            let x = Mat::gaussian(13, n, 1.0, &mut rng);
+            for transpose in [false, true] {
+                let want = reference(b.layers(), &x, transpose);
+                for panel in [1usize, 3, 64] {
+                    for workers in [1usize, 2, 4] {
+                        let mut got = x.clone();
+                        apply_stages_blocked(b.layers(), &mut got, transpose, panel, workers);
+                        assert!(
+                            bitwise_eq(&got, &want),
+                            "n={n} transpose={transpose} panel={panel} workers={workers}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_path_matches_reference() {
+        let mut rng = Rng::seed_from_u64(100);
+        let b = Butterfly::gaussian(32, 1.0, &mut rng);
+        let x = Mat::gaussian(40, 32, 1.0, &mut rng);
+        let mut fwd = x.clone();
+        apply_stages(b.layers(), &mut fwd);
+        assert!(bitwise_eq(&fwd, &reference(b.layers(), &x, false)));
+        let mut t = x.clone();
+        apply_stages_t(b.layers(), &mut t);
+        assert!(bitwise_eq(&t, &reference(b.layers(), &x, true)));
+    }
+
+    #[test]
+    fn empty_inputs_are_no_ops() {
+        let b = Butterfly::identity(8);
+        let mut empty = Mat::zeros(0, 8);
+        apply_stages(b.layers(), &mut empty);
+        apply_stages_t(b.layers(), &mut empty);
+        let mut x = Mat::zeros(3, 4);
+        apply_stages(&[], &mut x);
+        assert!(x.data().iter().all(|&v| v == 0.0));
+    }
+}

@@ -151,12 +151,18 @@ impl ButterflyLayer {
         }
     }
 
-    /// Apply to every row of a batch matrix in place.
+    /// Apply to every row of a batch matrix in place (panel-blocked and
+    /// thread-parallel across rows; bitwise-identical to calling
+    /// [`Self::apply_vec`] per row).
     pub fn apply_batch(&self, x: &mut Mat) {
         assert_eq!(x.cols(), self.n);
-        for r in 0..x.rows() {
-            self.apply_vec(x.row_mut(r));
-        }
+        super::kernel::apply_stages(std::slice::from_ref(self), x);
+    }
+
+    /// Apply the transpose to every row of a batch matrix in place.
+    pub fn apply_batch_t(&self, x: &mut Mat) {
+        assert_eq!(x.cols(), self.n);
+        super::kernel::apply_stages_t(std::slice::from_ref(self), x);
     }
 
     /// VJP through a *forward* application.

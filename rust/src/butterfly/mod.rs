@@ -21,10 +21,17 @@
 //! format in [`crate::store`] — `2n log₂ n` weights on disk, not
 //! `n²`, which is what makes serving cold-starts cheap (DESIGN.md §8).
 
+//! Batched application goes through the cache-blocked parallel
+//! [`kernel`]: panels of rows are kept cache-resident while all
+//! `log₂ n` stages stream over them, and panels split across threads —
+//! bitwise-identical to the per-row path (see `kernel.rs` docs).
+
+mod kernel;
 mod layer;
 mod network;
 mod truncated;
 
+pub use kernel::{apply_stages, apply_stages_blocked, apply_stages_t, panel_rows};
 pub use layer::{ButterflyLayer, LayerGrad};
 pub use network::{Butterfly, ButterflyGrad, Tape};
 pub use truncated::TruncatedButterfly;

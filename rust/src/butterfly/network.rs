@@ -111,14 +111,14 @@ impl Butterfly {
     }
 
     /// Apply the network to every row of `x` (batch × n), in place.
+    ///
+    /// Goes through the cache-blocked parallel kernel: all `log₂ n`
+    /// stages stream over one cache-resident panel of rows at a time,
+    /// panels split across threads. Bitwise-identical to the per-row
+    /// `apply_vec` loop it replaces.
     pub fn forward_inplace(&self, x: &mut Mat) {
         assert_eq!(x.cols(), self.n);
-        for r in 0..x.rows() {
-            let row = x.row_mut(r);
-            for l in &self.layers {
-                l.apply_vec(row);
-            }
-        }
+        super::kernel::apply_stages(&self.layers, x);
     }
 
     /// Apply to a batch, returning a new matrix.
@@ -128,15 +128,11 @@ impl Butterfly {
         y
     }
 
-    /// Apply the transpose `Bᵀ` to every row of `y`, in place.
+    /// Apply the transpose `Bᵀ` to every row of `y`, in place (blocked
+    /// parallel kernel, reversed stage order).
     pub fn forward_t_inplace(&self, y: &mut Mat) {
         assert_eq!(y.cols(), self.n);
-        for r in 0..y.rows() {
-            let row = y.row_mut(r);
-            for l in self.layers.iter().rev() {
-                l.apply_t_vec(row);
-            }
-        }
+        super::kernel::apply_stages_t(&self.layers, y);
     }
 
     /// `Bᵀ y` for a batch.
@@ -147,6 +143,9 @@ impl Butterfly {
     }
 
     /// Forward pass that records the activation entering each layer.
+    /// Each per-layer application is batch-parallel (`apply_batch`);
+    /// the layer loop stays serial because the tape needs every
+    /// intermediate activation.
     pub fn forward_tape(&self, x: &Mat) -> Tape {
         let mut acts = Vec::with_capacity(self.layers.len() + 1);
         acts.push(x.clone());
@@ -166,9 +165,7 @@ impl Butterfly {
         acts.push(y.clone());
         let mut cur = y.clone();
         for l in self.layers.iter().rev() {
-            for r in 0..cur.rows() {
-                l.apply_t_vec(cur.row_mut(r));
-            }
+            l.apply_batch_t(&mut cur);
             acts.push(cur.clone());
         }
         Tape { acts }

@@ -90,6 +90,8 @@ impl TruncatedButterfly {
     }
 
     /// `J x` for a batch (rows are vectors): batch×n → batch×ℓ.
+    /// Inherits the cache-blocked parallel kernel through
+    /// [`Butterfly::forward`]; truncation is a column select on top.
     pub fn forward(&self, x: &Mat) -> Mat {
         let full = self.net.forward(x);
         full.select_cols(&self.keep)

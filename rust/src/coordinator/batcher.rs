@@ -1,4 +1,21 @@
-//! Dynamic batcher: size + deadline policy over a bounded queue.
+//! Dynamic batcher: size + deadline policy over a bounded queue,
+//! feeding a pool of engine-worker threads.
+//!
+//! One *batcher* thread per variant forms batches (max_batch /
+//! max_wait policy) and hands each closed batch to a small bounded
+//! work channel; `workers` *engine* threads pull from it and run
+//! `Engine::infer_batch` concurrently, so engine time overlaps across
+//! batches instead of serialising the variant behind one slow batch.
+//! The engine is shared as an `Arc<dyn Engine>`; each closed batch
+//! carries the Arc that was current when it closed, which is what
+//! keeps hot-swap drain-and-replace semantics exact under the pool.
+//!
+//! Shutdown is channel closure, not a sentinel: dropping the submit
+//! side ends the queue, the batcher drains every already-queued
+//! message through the normal batching loop, closes the work channel
+//! and joins its workers — so `shutdown`/`Drop` always terminate, even
+//! when the queue is full (a `try_send(Shutdown)` sentinel could be
+//! lost exactly then).
 //!
 //! Observability: every job carries a trace ID assigned at submit; the
 //! batcher records queue depth, queue wait, batch occupancy and engine
@@ -13,7 +30,7 @@ use crate::obs::trace::{next_trace_id, TraceEvent, TraceRing};
 use crate::obs::VariantMetrics;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -25,6 +42,9 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Queue capacity; submits beyond this are rejected (backpressure).
     pub queue_cap: usize,
+    /// Engine-pool size: worker threads running `infer_batch`
+    /// concurrently for this variant (min 1).
+    pub workers: usize,
 }
 
 impl Default for BatcherConfig {
@@ -33,8 +53,18 @@ impl Default for BatcherConfig {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
+            // Enough to overlap engine time across batches without
+            // oversubscribing the data-parallel kernel threads.
+            workers: crate::linalg::num_threads().clamp(1, 4),
         }
     }
+}
+
+/// A closed batch in flight to the engine pool, pinned to the engine
+/// generation that was current when it closed.
+struct WorkItem {
+    jobs: Vec<Job>,
+    engine: Arc<dyn Engine>,
 }
 
 /// One answered request: the engine output (or error) plus the stage
@@ -63,22 +93,24 @@ enum Msg {
     Job(Job),
     /// Hot-swap: install a new engine once every job queued ahead of
     /// this message has been dispatched; ack when installed.
-    Swap(Box<dyn Engine>, SyncSender<()>),
-    Shutdown,
+    Swap(Arc<dyn Engine>, SyncSender<()>),
 }
 
 /// A batcher thread + its submit side.
+///
+/// `tx` is the only sender; `stop_and_join` takes it to close the
+/// queue, which is the shutdown signal (see module docs).
 pub struct Batcher {
-    tx: SyncSender<Msg>,
+    tx: Option<SyncSender<Msg>>,
     vm: Arc<VariantMetrics>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    /// Spawn the batching loop for one engine.
+    /// Spawn the batching loop and engine pool for one engine.
     pub fn spawn(
         name: &str,
-        mut engine: Box<dyn Engine>,
+        engine: Box<dyn Engine>,
         cfg: BatcherConfig,
         vm: Arc<VariantMetrics>,
         traces: Arc<TraceRing>,
@@ -90,8 +122,39 @@ impl Batcher {
             .name(format!("batcher-{name}"))
             .spawn(move || {
                 let vm = vm2;
+                let mut engine: Arc<dyn Engine> = Arc::from(engine);
+                // Engine pool: closed batches flow over a small bounded
+                // channel to `workers` executor threads. Bounding it
+                // keeps total admitted-but-unanswered work limited, so
+                // backpressure still bites at roughly queue_cap.
+                let workers = cfg.workers.max(1);
+                let (wtx, wrx) = sync_channel::<WorkItem>(workers);
+                let wrx = Arc::new(Mutex::new(wrx));
+                let pool: Vec<std::thread::JoinHandle<()>> = (0..workers)
+                    .map(|i| {
+                        let wrx = Arc::clone(&wrx);
+                        let vm = Arc::clone(&vm);
+                        let traces = Arc::clone(&traces);
+                        std::thread::Builder::new()
+                            .name(format!("engine-{name}-{i}"))
+                            .spawn(move || loop {
+                                // Hold the lock only while receiving, so
+                                // idle workers can grab the next batch
+                                // while this one runs the engine.
+                                let item = match wrx.lock().unwrap().recv() {
+                                    Ok(it) => it,
+                                    Err(_) => break, // pool channel closed
+                                };
+                                dispatch(&*item.engine, &item.jobs, &vm, &traces);
+                            })
+                            .expect("spawn engine worker")
+                    })
+                    .collect();
                 loop {
-                    // Block for the first job of the next batch.
+                    // Block for the first job of the next batch. After
+                    // the submit side is dropped, recv keeps yielding
+                    // queued messages until empty, then errors — so the
+                    // queue drains through this same loop on shutdown.
                     let first = match rx.recv() {
                         Ok(Msg::Job(j)) => {
                             vm.queue_depth.dec();
@@ -108,12 +171,11 @@ impl Batcher {
                             let _ = ack.try_send(());
                             continue;
                         }
-                        Ok(Msg::Shutdown) | Err(_) => break,
+                        Err(_) => break, // submit side dropped: shutdown
                     };
                     let deadline = first.enqueued + cfg.max_wait;
                     let mut jobs = vec![first];
-                    let mut stop = false;
-                    let mut pending_swap: Option<(Box<dyn Engine>, SyncSender<()>)> = None;
+                    let mut pending_swap: Option<(Arc<dyn Engine>, SyncSender<()>)> = None;
                     // Fill until max_batch or the first job's deadline.
                     while jobs.len() < cfg.max_batch {
                         let now = Instant::now();
@@ -131,18 +193,22 @@ impl Batcher {
                                 pending_swap = Some((e, ack));
                                 break;
                             }
-                            Ok(Msg::Shutdown) => {
-                                stop = true;
-                                break;
-                            }
                             Err(_) => break, // deadline or disconnect
                         }
                     }
-                    Self::dispatch(&mut *engine, &jobs, &vm, &traces);
-                    // Drain-and-replace: the in-flight batch has been
-                    // answered on the old engine; everything queued after
-                    // the swap message sees the new one. No request is
-                    // ever dropped.
+                    // Hand the closed batch to the pool, pinned to the
+                    // engine generation it was formed under. `send`
+                    // blocks when all workers are busy and the small
+                    // work channel is full — that is the backpressure
+                    // path that lets `submit` start rejecting.
+                    let _ = wtx.send(WorkItem {
+                        jobs,
+                        engine: Arc::clone(&engine),
+                    });
+                    // Drain-and-replace: the in-flight batch was handed
+                    // over with the old engine Arc; everything queued
+                    // after the swap message sees the new one. No
+                    // request is ever dropped.
                     if let Some((e, ack)) = pending_swap {
                         engine = e;
                         vm.swaps.inc();
@@ -152,28 +218,18 @@ impl Batcher {
                             .emit();
                         let _ = ack.try_send(());
                     }
-                    if stop {
-                        break;
-                    }
                 }
-                // Drain anything left after shutdown signal.
-                while let Ok(msg) = rx.try_recv() {
-                    match msg {
-                        Msg::Job(j) => {
-                            vm.queue_depth.dec();
-                            Self::dispatch(&mut *engine, &[j], &vm, &traces);
-                        }
-                        // Unblock any swapper; the engine no longer matters.
-                        Msg::Swap(_, ack) => {
-                            let _ = ack.try_send(());
-                        }
-                        Msg::Shutdown => {}
-                    }
+                // Close the pool channel and wait for in-flight batches,
+                // so joining the batcher thread implies every accepted
+                // request has been answered.
+                drop(wtx);
+                for h in pool {
+                    let _ = h.join();
                 }
             })
             .expect("spawn batcher thread");
         Batcher {
-            tx,
+            tx: Some(tx),
             vm,
             handle: Some(handle),
         }
@@ -183,115 +239,115 @@ impl Batcher {
     pub fn metrics(&self) -> &Arc<VariantMetrics> {
         &self.vm
     }
+}
 
-    fn dispatch(
-        engine: &mut dyn Engine,
-        jobs: &[Job],
-        vm: &VariantMetrics,
-        traces: &TraceRing,
-    ) {
-        let batch_size = jobs.len() as u32;
-        vm.batches.record(jobs.len());
-        let dispatched = Instant::now();
-        let waits_us: Vec<u64> = jobs
-            .iter()
-            .map(|j| {
-                let w = dispatched.saturating_duration_since(j.enqueued);
-                vm.queue_wait.record(w);
-                w.as_micros() as u64
-            })
-            .collect();
-        let dim = engine.input_dim();
-        // Validate per-row input sizes before forming the batch.
-        let mut valid: Vec<(usize, &Job)> = Vec::with_capacity(jobs.len());
-        for (i, j) in jobs.iter().enumerate() {
-            if j.input.len() == dim {
-                valid.push((i, j));
-            } else {
-                vm.errors.inc();
+/// Run one closed batch on `engine` and answer every job. Executes on
+/// the engine-pool worker threads; takes `&dyn Engine` because one
+/// engine generation may serve several batches concurrently.
+fn dispatch(engine: &dyn Engine, jobs: &[Job], vm: &VariantMetrics, traces: &TraceRing) {
+    let batch_size = jobs.len() as u32;
+    vm.batches.record(jobs.len());
+    let dispatched = Instant::now();
+    let waits_us: Vec<u64> = jobs
+        .iter()
+        .map(|j| {
+            let w = dispatched.saturating_duration_since(j.enqueued);
+            vm.queue_wait.record(w);
+            w.as_micros() as u64
+        })
+        .collect();
+    let dim = engine.input_dim();
+    // Validate per-row input sizes before forming the batch.
+    let mut valid: Vec<(usize, &Job)> = Vec::with_capacity(jobs.len());
+    for (i, j) in jobs.iter().enumerate() {
+        if j.input.len() == dim {
+            valid.push((i, j));
+        } else {
+            vm.errors.inc();
+            traces.push(TraceEvent {
+                id: j.id,
+                tag: vm.trace_tag,
+                queue_wait_us: waits_us[i],
+                engine_us: 0,
+                total_us: j.enqueued.elapsed().as_micros() as u64,
+                batch: batch_size,
+                ok: false,
+            });
+            let _ = j.resp.try_send(JobResult {
+                result: Err(format!("input dim {} != expected {dim}", j.input.len())),
+                trace_id: j.id,
+                queue_wait_us: waits_us[i],
+                engine_us: 0,
+                batch_size,
+            });
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let mut x = Mat::zeros(valid.len(), dim);
+    for (r, (_, j)) in valid.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(&j.input);
+    }
+    let t_engine = Instant::now();
+    let outcome = engine.infer_batch(&x);
+    let engine_elapsed = t_engine.elapsed();
+    vm.engine_time.record(engine_elapsed);
+    let engine_us = engine_elapsed.as_micros() as u64;
+    match outcome {
+        Ok(y) => {
+            for (r, (i, j)) in valid.iter().enumerate() {
                 traces.push(TraceEvent {
                     id: j.id,
                     tag: vm.trace_tag,
-                    queue_wait_us: waits_us[i],
-                    engine_us: 0,
+                    queue_wait_us: waits_us[*i],
+                    engine_us,
+                    total_us: j.enqueued.elapsed().as_micros() as u64,
+                    batch: batch_size,
+                    ok: true,
+                });
+                let _ = j.resp.try_send(JobResult {
+                    result: Ok(y.row(r).to_vec()),
+                    trace_id: j.id,
+                    queue_wait_us: waits_us[*i],
+                    engine_us,
+                    batch_size,
+                });
+            }
+        }
+        Err(e) => {
+            // Count one error per failed request so the per-variant
+            // invariant `requests == responses + rejected + errors`
+            // reconciles even for multi-request batches.
+            vm.errors.add(valid.len() as u64);
+            event::error("coordinator.engine")
+                .field("variant", &vm.name)
+                .field("batch", valid.len())
+                .msg(format!("{e:#}"))
+                .emit();
+            for (i, j) in &valid {
+                traces.push(TraceEvent {
+                    id: j.id,
+                    tag: vm.trace_tag,
+                    queue_wait_us: waits_us[*i],
+                    engine_us,
                     total_us: j.enqueued.elapsed().as_micros() as u64,
                     batch: batch_size,
                     ok: false,
                 });
                 let _ = j.resp.try_send(JobResult {
-                    result: Err(format!("input dim {} != expected {dim}", j.input.len())),
+                    result: Err(format!("{e:#}")),
                     trace_id: j.id,
-                    queue_wait_us: waits_us[i],
-                    engine_us: 0,
+                    queue_wait_us: waits_us[*i],
+                    engine_us,
                     batch_size,
                 });
             }
         }
-        if valid.is_empty() {
-            return;
-        }
-        let mut x = Mat::zeros(valid.len(), dim);
-        for (r, (_, j)) in valid.iter().enumerate() {
-            x.row_mut(r).copy_from_slice(&j.input);
-        }
-        let t_engine = Instant::now();
-        let outcome = engine.infer_batch(&x);
-        let engine_elapsed = t_engine.elapsed();
-        vm.engine_time.record(engine_elapsed);
-        let engine_us = engine_elapsed.as_micros() as u64;
-        match outcome {
-            Ok(y) => {
-                for (r, (i, j)) in valid.iter().enumerate() {
-                    traces.push(TraceEvent {
-                        id: j.id,
-                        tag: vm.trace_tag,
-                        queue_wait_us: waits_us[*i],
-                        engine_us,
-                        total_us: j.enqueued.elapsed().as_micros() as u64,
-                        batch: batch_size,
-                        ok: true,
-                    });
-                    let _ = j.resp.try_send(JobResult {
-                        result: Ok(y.row(r).to_vec()),
-                        trace_id: j.id,
-                        queue_wait_us: waits_us[*i],
-                        engine_us,
-                        batch_size,
-                    });
-                }
-            }
-            Err(e) => {
-                // Count one error per failed request so the per-variant
-                // invariant `requests == responses + rejected + errors`
-                // reconciles even for multi-request batches.
-                vm.errors.add(valid.len() as u64);
-                event::error("coordinator.engine")
-                    .field("variant", &vm.name)
-                    .field("batch", valid.len())
-                    .msg(format!("{e:#}"))
-                    .emit();
-                for (i, j) in &valid {
-                    traces.push(TraceEvent {
-                        id: j.id,
-                        tag: vm.trace_tag,
-                        queue_wait_us: waits_us[*i],
-                        engine_us,
-                        total_us: j.enqueued.elapsed().as_micros() as u64,
-                        batch: batch_size,
-                        ok: false,
-                    });
-                    let _ = j.resp.try_send(JobResult {
-                        result: Err(format!("{e:#}")),
-                        trace_id: j.id,
-                        queue_wait_us: waits_us[*i],
-                        engine_us,
-                        batch_size,
-                    });
-                }
-            }
-        }
     }
+}
 
+impl Batcher {
     /// Submit one request; returns the response receiver, or an error
     /// if the queue is full (backpressure) or the batcher is gone.
     /// Rejections are counted against the variant and emit a
@@ -304,12 +360,16 @@ impl Batcher {
             resp: rtx,
             enqueued: Instant::now(),
         };
-        match self.tx.try_send(Msg::Job(job)) {
-            Ok(()) => {
-                self.vm.queue_depth.inc();
-                Ok(rrx)
-            }
+        let tx = self.tx.as_ref().expect("batcher running");
+        // Count the job into the gauge *before* the send: once the
+        // message is in the queue the batcher may `dec()` at any
+        // moment, and inc-after-send could land second, transiently
+        // underflowing the gauge. Roll back on rejection.
+        self.vm.queue_depth.inc();
+        match tx.try_send(Msg::Job(job)) {
+            Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => {
+                self.vm.queue_depth.dec();
                 self.vm.rejected.inc();
                 event::warn("coordinator.backpressure")
                     .field("variant", &self.vm.name)
@@ -319,6 +379,7 @@ impl Batcher {
                 Err(anyhow!("queue full (backpressure)"))
             }
             Err(TrySendError::Disconnected(_)) => {
+                self.vm.queue_depth.dec();
                 self.vm.rejected.inc();
                 Err(anyhow!("batcher stopped"))
             }
@@ -334,16 +395,25 @@ impl Batcher {
     pub fn swap(&self, engine: Box<dyn Engine>) -> Result<()> {
         let (atx, arx) = sync_channel(1);
         self.tx
-            .send(Msg::Swap(engine, atx))
+            .as_ref()
+            .ok_or_else(|| anyhow!("batcher stopped"))?
+            .send(Msg::Swap(Arc::from(engine), atx))
             .map_err(|_| anyhow!("batcher stopped"))?;
         arx.recv()
             .map_err(|_| anyhow!("batcher stopped during swap"))?;
         Ok(())
     }
 
-    /// Stop the batching thread (drains remaining jobs first).
+    /// Stop the batcher and its engine pool: close the queue by
+    /// dropping the submit side (everything already queued is still
+    /// batched and answered), then join. Always terminates — there is
+    /// no sentinel message to lose on a full queue.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.tx.take(); // close the queue: recv drains, then errors
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -352,10 +422,7 @@ impl Batcher {
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        let _ = self.tx.try_send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -369,7 +436,7 @@ mod tests {
         calls: Arc<std::sync::atomic::AtomicUsize>,
     }
     impl Engine for Echo {
-        fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
             self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
             Ok(x.clone())
         }
@@ -378,6 +445,21 @@ mod tests {
         }
         fn output_dim(&self) -> usize {
             self.dim
+        }
+    }
+
+    /// 1-dim echo engine with fixed latency.
+    struct Slow(Duration);
+    impl Engine for Slow {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+            std::thread::sleep(self.0);
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn output_dim(&self) -> usize {
+            1
         }
     }
 
@@ -405,6 +487,7 @@ mod tests {
                 max_batch: 16,
                 max_wait: Duration::from_millis(30),
                 queue_cap: 64,
+                workers: 2,
             },
         );
         // Submit 8 quickly: they should ride in very few engine calls.
@@ -455,28 +538,16 @@ mod tests {
     fn backpressure_rejects_when_full() {
         // An engine that blocks forever would hang shutdown; instead use
         // a tiny queue and a slow engine to observe rejection.
-        struct Slow;
-        impl Engine for Slow {
-            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
-                std::thread::sleep(Duration::from_millis(50));
-                Ok(x.clone())
-            }
-            fn input_dim(&self) -> usize {
-                1
-            }
-            fn output_dim(&self) -> usize {
-                1
-            }
-        }
         let obs = Obs::new();
         let b = spawn_with_obs(
             &obs,
             "slow",
-            Box::new(Slow),
+            Box::new(Slow(Duration::from_millis(50))),
             BatcherConfig {
                 max_batch: 1,
                 max_wait: Duration::from_micros(1),
                 queue_cap: 2,
+                workers: 1,
             },
         );
         let mut rejected = 0;
@@ -501,7 +572,7 @@ mod tests {
     fn swap_preserves_order_and_switches_engine() {
         struct Mul(f64);
         impl Engine for Mul {
-            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+            fn infer_batch(&self, x: &Mat) -> Result<Mat> {
                 let f = self.0;
                 Ok(x.map(|v| v * f))
             }
@@ -521,6 +592,7 @@ mod tests {
                 max_batch: 3,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 64,
+                workers: 2,
             },
         );
         let vm = obs.variant("t");
@@ -560,6 +632,7 @@ mod tests {
                 max_batch: 1000, // never fills
                 max_wait: Duration::from_millis(5),
                 queue_cap: 8,
+                workers: 1,
             },
         );
         let t0 = Instant::now();
@@ -587,6 +660,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 8,
+                workers: 1,
             },
         );
         let rx = b.submit(vec![7.0]).unwrap();
@@ -598,6 +672,76 @@ mod tests {
         let vm = obs.variant("t");
         assert_eq!(vm.queue_wait.count(), 1);
         assert_eq!(vm.engine_time.count(), 1);
+        b.shutdown();
+    }
+
+    /// Regression: dropping a batcher whose queue is full must
+    /// terminate. The old shutdown path `try_send(Msg::Shutdown)`
+    /// silently failed exactly when the queue was full, after which
+    /// `join()` blocked forever on a thread still parked in `recv()`.
+    /// Shutdown-by-channel-closure also guarantees every accepted
+    /// request is still answered during the drain.
+    #[test]
+    fn drop_with_full_queue_terminates_and_drains() {
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "full",
+            Box::new(Slow(Duration::from_millis(5))),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_cap: 2,
+                workers: 1,
+            },
+        );
+        // Fill the queue past capacity so at least one submit rejects
+        // (i.e. the queue is genuinely full when we drop).
+        let mut receivers = Vec::new();
+        let mut rejected = 0;
+        for i in 0..16 {
+            match b.submit(vec![i as f64]) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "queue must be full at drop time");
+        drop(b); // must not hang
+        // every accepted request was answered during the drain
+        for rx in receivers {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        assert_eq!(obs.variant("full").queue_depth.get(), 0);
+    }
+
+    /// With several pool workers, engine time overlaps across batches:
+    /// two 30 ms batches complete in well under 60 ms end-to-end.
+    #[test]
+    fn worker_pool_overlaps_engine_time() {
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "pool",
+            Box::new(Slow(Duration::from_millis(30))),
+            BatcherConfig {
+                max_batch: 1, // every submit is its own batch
+                max_wait: Duration::from_micros(1),
+                queue_cap: 16,
+                workers: 4,
+            },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(vec![i as f64]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let elapsed = t0.elapsed();
+        // serial execution would need ≥ 120 ms; leave generous slack
+        // for scheduling noise while still proving overlap.
+        assert!(
+            elapsed < Duration::from_millis(100),
+            "no overlap: 4 x 30ms batches took {elapsed:?}"
+        );
         b.shutdown();
     }
 }

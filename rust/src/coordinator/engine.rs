@@ -10,8 +10,14 @@ use crate::runtime::{RuntimeHandle, Tensor};
 use anyhow::{bail, Result};
 
 /// Anything that can run a batch.
-pub trait Engine: Send {
-    fn infer_batch(&mut self, x: &Mat) -> Result<Mat>;
+///
+/// `infer_batch` takes `&self` and the trait requires `Sync`: one
+/// engine instance is shared (behind an `Arc`) by every worker thread
+/// of its variant's engine pool, so batches overlap. Implementations
+/// keep any mutable state in interior-mutability primitives (the PJRT
+/// runtime handle already serialises through its actor channel).
+pub trait Engine: Send + Sync {
+    fn infer_batch(&self, x: &Mat) -> Result<Mat>;
     fn input_dim(&self) -> usize;
     fn output_dim(&self) -> usize;
 }
@@ -29,7 +35,7 @@ impl NativeHeadEngine {
 }
 
 impl Engine for NativeHeadEngine {
-    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> Result<Mat> {
         Ok(self.head.forward(x))
     }
     fn input_dim(&self) -> usize {
@@ -102,7 +108,7 @@ impl PjrtEngine {
 }
 
 impl Engine for PjrtEngine {
-    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> Result<Mat> {
         if x.rows() > self.max_batch {
             bail!(
                 "batch {} exceeds artifact max batch {}",
@@ -139,7 +145,7 @@ mod tests {
     #[test]
     fn native_head_engine_runs() {
         let mut rng = Rng::seed_from_u64(230);
-        let mut e = NativeHeadEngine::new(Head::butterfly(32, 16, &mut rng));
+        let e = NativeHeadEngine::new(Head::butterfly(32, 16, &mut rng));
         assert_eq!(e.input_dim(), 32);
         assert_eq!(e.output_dim(), 16);
         let x = Mat::gaussian(4, 32, 1.0, &mut rng);

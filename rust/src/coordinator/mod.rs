@@ -12,11 +12,19 @@
 //!                          dynamic batcher (per variant)
 //!                    max_batch / max_wait_us deadline policy
 //!                                  ▼
-//!                            engine.infer_batch
+//!                 engine pool (`workers` threads per variant)
+//!                      engine.infer_batch, overlapped
 //!            native rust (dense | butterfly)  or  PJRT artifact
 //!                                  ▼
 //!                        per-request responses + metrics
 //! ```
+//!
+//! Each variant's closed batches are executed by a small pool of
+//! worker threads sharing one `Arc<dyn Engine>`, so a slow batch no
+//! longer serialises the variant; hot-swap still drains-and-replaces
+//! exactly (each batch is pinned to the engine generation that was
+//! current when it closed). Shutdown closes the submit channel —
+//! never a sentinel message — so `Drop` cannot hang on a full queue.
 //!
 //! Observability: the coordinator owns an [`Obs`] bundle. Every request
 //! gets a trace ID at submit; the batcher records queue wait / engine
@@ -44,7 +52,7 @@ mod server;
 pub use batcher::{Batcher, BatcherConfig, Job, JobResult};
 pub use engine::{Engine, NativeHeadEngine, PjrtEngine};
 pub use protocol::{parse_request, Request, Response};
-pub use server::{serve, ServerHandle};
+pub use server::{serve, serve_with, ServerConfig, ServerHandle};
 
 use crate::obs::{event, Obs, UNROUTED};
 use crate::store::ModelRegistry;
@@ -230,7 +238,7 @@ mod tests {
     /// Engine that doubles its input (deterministic, latency-free).
     struct Doubler;
     impl Engine for Doubler {
-        fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
             Ok(x.map(|v| v * 2.0))
         }
         fn input_dim(&self) -> usize {
@@ -246,6 +254,7 @@ mod tests {
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(2),
             queue_cap: 64,
+            workers: 2,
         }
     }
 
@@ -283,7 +292,7 @@ mod tests {
     fn swap_variant_switches_engine_in_place() {
         struct Triple;
         impl Engine for Triple {
-            fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+            fn infer_batch(&self, x: &Mat) -> Result<Mat> {
                 Ok(x.map(|v| v * 3.0))
             }
             fn input_dim(&self) -> usize {

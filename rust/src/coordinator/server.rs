@@ -1,14 +1,47 @@
 //! TCP front-end: one OS thread per connection (requests within a
 //! connection pipeline through the shared batcher, so cross-client
 //! batching still happens).
+//!
+//! Connection handlers are *tracked* (the accept loop reaps finished
+//! ones and joins the rest on shutdown), *bounded* (beyond
+//! [`ServerConfig::max_conns`] a new connection gets an `ERR` line and
+//! is closed), and *responsive to shutdown*: reads carry a timeout so
+//! an idle connection re-checks the stop flag every
+//! [`ServerConfig::read_timeout`] instead of parking forever in a
+//! blocking read.
 
 use super::protocol::{parse_request, Request, Response};
 use super::Coordinator;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Front-end limits. Defaults suit tests and small deployments.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum simultaneously-open connections; excess connections are
+    /// answered with one `ERR` line and closed immediately.
+    pub max_conns: usize,
+    /// How long a read blocks before the handler re-checks the stop
+    /// flag — bounds shutdown latency for idle connections.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_conns: 1024,
+            read_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A peer streaming bytes with no newline gets cut off here rather
+/// than growing the line buffer without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Handle to a running server; dropping does not stop it — call
 /// [`ServerHandle::stop`].
@@ -19,7 +52,9 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown and join the accept loop (which in turn joins
+    /// every live connection handler): prompt, because handlers poll
+    /// the stop flag at `read_timeout` granularity.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // poke the accept loop awake
@@ -30,8 +65,18 @@ impl ServerHandle {
     }
 }
 
-/// Serve a coordinator on `addr` (use port 0 for an ephemeral port).
+/// Serve a coordinator on `addr` (use port 0 for an ephemeral port)
+/// with default [`ServerConfig`] limits.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> {
+    serve_with(coordinator, addr, ServerConfig::default())
+}
+
+/// [`serve`] with explicit connection limits.
+pub fn serve_with(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    cfg: ServerConfig,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -39,19 +84,38 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> 
     let accept_thread = std::thread::Builder::new()
         .name("coordinator-accept".into())
         .spawn(move || {
+            let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
             for conn in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
                     break;
                 }
-                match conn {
-                    Ok(stream) => {
-                        let c = Arc::clone(&coordinator);
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &c);
-                        });
-                    }
+                let stream = match conn {
+                    Ok(s) => s,
                     Err(_) => continue,
+                };
+                handlers.retain(|h| !h.is_finished());
+                if handlers.len() >= cfg.max_conns {
+                    let mut s = stream;
+                    let _ = s.write_all(
+                        Response::Err("server at connection capacity".into())
+                            .serialize()
+                            .as_bytes(),
+                    );
+                    continue; // dropping the stream closes it
                 }
+                let c = Arc::clone(&coordinator);
+                let stop3 = Arc::clone(&stop2);
+                let read_timeout = cfg.read_timeout;
+                let h = std::thread::Builder::new()
+                    .name("coordinator-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &c, &stop3, read_timeout);
+                    })
+                    .expect("spawn connection handler");
+                handlers.push(h);
+            }
+            for h in handlers {
+                let _ = h.join();
             }
         })?;
     Ok(ServerHandle {
@@ -61,41 +125,83 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> 
     })
 }
 
-fn handle_conn(stream: TcpStream, c: &Coordinator) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    c: &Coordinator,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    let mut reader = stream;
+    // Manual line accumulation instead of `BufReader::lines()`: a
+    // timed-out read must not lose a partial line, only re-check the
+    // stop flag and keep accumulating.
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    'conn: loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match reader.read(&mut chunk) {
+            Ok(0) => break, // peer closed
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue; // idle: poll the stop flag again
+            }
             Err(_) => break,
         };
-        if line.trim().is_empty() {
-            continue;
+        buf.extend_from_slice(&chunk[..n]);
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line_bytes[..pos]);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let resp = respond(c, line);
+            writer.write_all(resp.serialize().as_bytes())?;
+            writer.flush()?;
+            // between pipelined requests counts as a poll point too
+            if stop.load(Ordering::SeqCst) {
+                break 'conn;
+            }
         }
-        let resp = match parse_request(&line) {
-            Err(e) => Response::Err(e),
-            Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => Response::Text(c.obs.snapshot()),
-            Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
-            Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
-            Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
-            Ok(Request::Infer { variant, input }) => match c.infer(&variant, input) {
-                Ok(out) => Response::Ok(out),
-                Err(e) => Response::Err(format!("{e:#}")),
-            },
-            Ok(Request::Swap {
-                variant,
-                checkpoint,
-            }) => match c.swap_from_store(&variant, &checkpoint) {
-                Ok(()) => Response::Ok(Vec::new()),
-                Err(e) => Response::Err(format!("{e:#}")),
-            },
-        };
-        writer.write_all(resp.serialize().as_bytes())?;
-        writer.flush()?;
+        if buf.len() > MAX_LINE_BYTES {
+            break; // unterminated-garbage guard
+        }
     }
     Ok(())
+}
+
+fn respond(c: &Coordinator, line: &str) -> Response {
+    match parse_request(line) {
+        Err(e) => Response::Err(e),
+        Ok(Request::Ping) => Response::Pong,
+        Ok(Request::Metrics) => Response::Text(c.obs.snapshot()),
+        Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
+        Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
+        Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
+        Ok(Request::Infer { variant, input }) => match c.infer(&variant, input) {
+            Ok(out) => Response::Ok(out),
+            Err(e) => Response::Err(format!("{e:#}")),
+        },
+        Ok(Request::Swap {
+            variant,
+            checkpoint,
+        }) => match c.swap_from_store(&variant, &checkpoint) {
+            Ok(()) => Response::Ok(Vec::new()),
+            Err(e) => Response::Err(format!("{e:#}")),
+        },
+    }
 }
 
 #[cfg(test)]
@@ -103,11 +209,11 @@ mod tests {
     use super::*;
     use crate::coordinator::{BatcherConfig, Engine};
     use crate::linalg::Mat;
-    use std::io::BufRead;
+    use std::io::{BufRead, BufReader};
 
     struct Neg;
     impl Engine for Neg {
-        fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+        fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
             Ok(x.map(|v| -v))
         }
         fn input_dim(&self) -> usize {
@@ -127,6 +233,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 32,
+                workers: 2,
             },
         );
         let c = Arc::new(c);
@@ -224,6 +331,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 32,
+                workers: 2,
             },
         )
         .unwrap();
@@ -253,6 +361,91 @@ mod tests {
         let mut l2 = String::new();
         r.read_line(&mut l2).unwrap();
         assert_eq!(l2, "PONG\n");
+        h.stop();
+    }
+
+    /// Regression: `stop()` used to hang until every connection sent a
+    /// line or disconnected, because handlers sat in an untimed
+    /// blocking read. With `read_timeout` polling it must return
+    /// promptly even while an idle connection is held open.
+    #[test]
+    fn stop_is_prompt_with_idle_connection() {
+        let (_c, h) = start();
+        // open a connection, verify it is live, then leave it idle
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"PING\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut l = String::new();
+        r.read_line(&mut l).unwrap();
+        assert_eq!(l, "PONG\n");
+        let t0 = std::time::Instant::now();
+        h.stop(); // joins the idle handler too
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "stop took {:?} with an idle connection open",
+            t0.elapsed()
+        );
+        drop(s);
+    }
+
+    /// Regression: connection threads used to be spawned untracked and
+    /// unbounded. Over-cap connections now get one ERR line and are
+    /// closed, while existing connections keep serving.
+    #[test]
+    fn connection_cap_rejects_excess_conns() {
+        let mut c = Coordinator::new();
+        c.register(
+            "neg",
+            Box::new(Neg),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 32,
+                workers: 1,
+            },
+        );
+        let c = Arc::new(c);
+        let h = serve_with(
+            Arc::clone(&c),
+            "127.0.0.1:0",
+            ServerConfig {
+                max_conns: 2,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        // two live connections fill the cap
+        let mut live: Vec<(TcpStream, BufReader<TcpStream>)> = (0..2)
+            .map(|_| {
+                let mut s = TcpStream::connect(h.addr).unwrap();
+                s.write_all(b"PING\n").unwrap();
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut l = String::new();
+                r.read_line(&mut l).unwrap();
+                assert_eq!(l, "PONG\n");
+                (s, r)
+            })
+            .collect();
+        // the third gets an ERR line then EOF
+        let s3 = TcpStream::connect(h.addr).unwrap();
+        let mut r3 = BufReader::new(s3);
+        let mut l3 = String::new();
+        r3.read_line(&mut l3).unwrap();
+        assert!(
+            l3.starts_with("ERR") && l3.contains("capacity"),
+            "expected capacity ERR, got {l3:?}"
+        );
+        let mut rest = String::new();
+        r3.read_line(&mut rest).unwrap();
+        assert!(rest.is_empty(), "over-cap conn should be closed, got {rest:?}");
+        // existing connections still serve
+        for (s, r) in &mut live {
+            s.write_all(b"INFER neg 1 2\n").unwrap();
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            assert_eq!(l, "OK -1 -2\n");
+        }
+        drop(live);
         h.stop();
     }
 }

@@ -22,6 +22,6 @@ mod svd;
 pub use backward::{eigh_backward, matmul_backward, qr_backward};
 pub use eigh::{eigh, Eigh};
 pub use mat::{max_abs_diff, Mat};
-pub use parallel::{num_threads, par_chunks};
+pub use parallel::{num_threads, par_chunks, par_chunks_weighted, run_chunks};
 pub use qr::{qr_thin, Qr};
 pub use svd::{best_rank_k, pca_error, svd_thin, truncated_svd, Svd};

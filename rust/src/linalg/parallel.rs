@@ -27,15 +27,61 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Total work (in `elements × work_per_element` units) below which the
+/// parallel machinery costs more than it saves and chunks are processed
+/// inline on the calling thread.
+const SEQ_WORK_THRESHOLD: usize = 4096;
+
 /// Process disjoint chunks of `data` (each of at most `chunk` elements)
 /// in parallel. `f(chunk_index, chunk_slice)` runs on worker threads.
 ///
 /// Falls back to sequential execution for small inputs where thread
-/// spawn overhead would dominate.
+/// spawn overhead would dominate. Assumes unit work per element; loops
+/// that do substantially more per element (e.g. all `log n` butterfly
+/// stages) should use [`par_chunks_weighted`] so the sequential cutoff
+/// reflects actual work, not element count.
 pub fn par_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], chunk: usize, f: F) {
+    par_chunks_weighted(data, chunk, 1, f)
+}
+
+/// [`par_chunks`] with a work-aware sequential threshold: the input is
+/// processed inline when `data.len() × work_per_element` falls below a
+/// fixed cutoff, so a small batch of expensive rows still parallelises
+/// while a large batch of trivial rows still doesn't.
+pub fn par_chunks_weighted<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk: usize,
+    work_per_element: usize,
+    f: F,
+) {
     assert!(chunk > 0);
-    let n_chunks = data.len().div_ceil(chunk.max(1));
-    if n_chunks <= 1 || num_threads() == 1 || data.len() < 4096 {
+    let n_chunks = data.len().div_ceil(chunk);
+    let total_work = data.len().saturating_mul(work_per_element.max(1));
+    let workers = if n_chunks <= 1 || total_work < SEQ_WORK_THRESHOLD {
+        1
+    } else {
+        num_threads()
+    };
+    run_chunks(data, chunk, workers, f);
+}
+
+/// The scheduling core: process disjoint chunks of `data` on exactly
+/// `workers` scoped threads (clamped to the chunk count; `1` runs
+/// inline). No sequential-fallback heuristic — callers that want one
+/// use [`par_chunks`] / [`par_chunks_weighted`]. Public so benchmarks
+/// and property tests can sweep thread counts in-process (the
+/// `BUTTERFLY_NET_THREADS` override in [`num_threads`] is cached per
+/// process and cannot vary within a run).
+pub fn run_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk: usize,
+    workers: usize,
+    f: F,
+) {
+    assert!(chunk > 0);
+    let n_chunks = data.len().div_ceil(chunk);
+    let workers = workers.clamp(1, n_chunks.max(1));
+    if workers == 1 {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
@@ -51,7 +97,6 @@ pub fn par_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], chunk:
         .enumerate()
         .map(|(i, c)| std::sync::Mutex::new(Some((i, c))))
         .collect();
-    let workers = num_threads().min(n_chunks);
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -100,5 +145,40 @@ mod tests {
         let mut data = vec![1i64; 16];
         par_chunks(&mut data, 4, |_, c| c.iter_mut().for_each(|v| *v *= 2));
         assert!(data.iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn weighted_matches_unweighted_result() {
+        // The weight only moves the sequential/parallel cutoff; the
+        // computed result must be identical either way.
+        for &w in &[1usize, 16, 1 << 20] {
+            let mut data = vec![3u64; 2000];
+            par_chunks_weighted(&mut data, 64, w, |i, c| {
+                for v in c.iter_mut() {
+                    *v += i as u64;
+                }
+            });
+            for (pos, &v) in data.iter().enumerate() {
+                assert_eq!(v, 3 + (pos / 64) as u64, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_every_worker_count() {
+        for workers in 0..6 {
+            let mut data = vec![0u32; 999];
+            run_chunks(&mut data, 100, workers, |i, c| {
+                for v in c.iter_mut() {
+                    *v = i as u32 + 1;
+                }
+            });
+            for (pos, &v) in data.iter().enumerate() {
+                assert_eq!(v, (pos / 100) as u32 + 1, "workers={workers}");
+            }
+        }
+        // empty input is a no-op, not a panic
+        let mut empty: Vec<u32> = Vec::new();
+        run_chunks(&mut empty, 8, 4, |_, _| unreachable!());
     }
 }

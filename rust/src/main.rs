@@ -140,6 +140,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: cfg.get_usize("server.max_batch", 32),
         max_wait: std::time::Duration::from_micros(cfg.get_usize("server.max_wait_us", 2000) as u64),
         queue_cap: cfg.get_usize("server.queue_cap", 1024),
+        workers: cfg.get_usize("server.workers", BatcherConfig::default().workers),
     };
     let mut rng = Rng::seed_from_u64(cfg.get_i64("model.seed", 0) as u64);
     let mut coordinator = Coordinator::new();

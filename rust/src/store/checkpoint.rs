@@ -446,7 +446,7 @@ impl ModelEngine {
 }
 
 impl Engine for ModelEngine {
-    fn infer_batch(&mut self, x: &Mat) -> Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> Result<Mat> {
         Ok(self.model.forward(x))
     }
     fn input_dim(&self) -> usize {
@@ -510,7 +510,7 @@ mod tests {
     fn engine_adapter_has_right_dims() {
         let mut rng = Rng::seed_from_u64(401);
         let m = Model::Truncated(TruncatedButterfly::fjlt(32, 5, &mut rng));
-        let mut e = ModelEngine::new(m);
+        let e = ModelEngine::new(m);
         assert_eq!(e.input_dim(), 32);
         assert_eq!(e.output_dim(), 5);
         let x = Mat::gaussian(3, 32, 1.0, &mut rng);

@@ -17,6 +17,7 @@ fn bcfg() -> BatcherConfig {
         max_batch: 16,
         max_wait: Duration::from_millis(1),
         queue_cap: 512,
+        workers: 2,
     }
 }
 
@@ -136,7 +137,7 @@ fn pjrt_engine_behind_batcher_matches_native_math() {
     }
     impl butterfly_net::coordinator::Engine for KernelEngine {
         fn infer_batch(
-            &mut self,
+            &self,
             x: &butterfly_net::linalg::Mat,
         ) -> anyhow::Result<butterfly_net::linalg::Mat> {
             anyhow::ensure!(x.rows() <= self.batch);

@@ -13,7 +13,7 @@ use std::time::Duration;
 
 struct Echo(usize);
 impl Engine for Echo {
-    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
         Ok(x.clone())
     }
     fn input_dim(&self) -> usize {
@@ -30,6 +30,7 @@ fn start() -> (Arc<Coordinator>, butterfly_net::coordinator::ServerHandle) {
         max_batch: 8,
         max_wait: Duration::from_millis(1),
         queue_cap: 64,
+        workers: 2,
     };
     c.register("dense", Box::new(Echo(2)), cfg.clone());
     c.register("butterfly", Box::new(Echo(2)), cfg);

@@ -22,7 +22,7 @@ struct Recorder {
 }
 
 impl Engine for Recorder {
-    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
         self.calls.fetch_add(1, Ordering::SeqCst);
         self.batch_sizes.lock().unwrap().push(x.rows());
         if !self.latency.is_zero() {
@@ -47,6 +47,7 @@ fn spawn(obs: &Obs, name: &str, engine: Box<dyn Engine>, cfg: BatcherConfig) -> 
 struct Scenario {
     max_batch: usize,
     queue_cap: usize,
+    workers: usize,
     n_threads: usize,
     reqs_per_thread: usize,
     latency_us: u64,
@@ -56,6 +57,7 @@ fn random_scenario(rng: &mut Rng) -> Scenario {
     Scenario {
         max_batch: gen::range(rng, 1, 12),
         queue_cap: gen::range(rng, 8, 128),
+        workers: gen::range(rng, 1, 4),
         n_threads: gen::range(rng, 1, 6),
         reqs_per_thread: gen::range(rng, 1, 15),
         latency_us: gen::range(rng, 0, 300) as u64,
@@ -86,6 +88,7 @@ fn conservation_and_batch_bound() {
                 max_batch: s.max_batch,
                 max_wait: Duration::from_micros(200),
                 queue_cap: s.queue_cap,
+                workers: s.workers,
             },
         );
         let b = Arc::new(b);
@@ -196,6 +199,7 @@ fn router_conservation_across_variants() {
                         max_batch: 4,
                         max_wait: Duration::from_micros(100),
                         queue_cap: 64,
+                        workers: 2,
                     },
                 );
             }
@@ -277,6 +281,7 @@ fn per_variant_accounting_under_mixed_load() {
                     max_batch: 4,
                     max_wait: Duration::from_micros(100),
                     queue_cap,
+                    workers: 2,
                 },
             );
             let c = Arc::new(c);
@@ -351,7 +356,7 @@ struct Mul {
 }
 
 impl Engine for Mul {
-    fn infer_batch(&mut self, x: &Mat) -> anyhow::Result<Mat> {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
         if !self.latency.is_zero() {
             std::thread::sleep(self.latency);
         }
@@ -400,6 +405,7 @@ fn hot_swap_conserves_requests_and_switches_cleanly() {
                     max_batch,
                     max_wait: Duration::from_micros(150),
                     queue_cap: 4096, // large: this property isolates swap, not backpressure
+                    workers: 2,
                 },
             );
             let c = Arc::new(c);
@@ -509,6 +515,7 @@ fn deadline_bounds_queue_wait() {
                     max_batch: 1_000_000,
                     max_wait: Duration::from_millis(wait_ms),
                     queue_cap: 16,
+                    workers: 1,
                 },
             );
             let t0 = std::time::Instant::now();

@@ -1,0 +1,132 @@
+//! Stress: concurrent submit + hot-swap + shutdown against one
+//! variant, locking in the three coordinator races this crate fixed:
+//!
+//! 1. `queue_depth` could transiently read negative (decremented by
+//!    the batcher before the submitter incremented it). A sampler
+//!    thread here polls the gauge the whole run and records the
+//!    minimum it ever observed — it must never be below zero.
+//! 2. Accounting drift under rejects: `requests` must equal
+//!    `responses + rejected + errors` once traffic quiesces.
+//! 3. Shutdown must terminate (no sentinel lost to a full queue) and
+//!    leave the queue empty.
+
+use butterfly_net::coordinator::{BatcherConfig, Coordinator, Engine};
+use butterfly_net::linalg::Mat;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Multiplies by a constant with a small sleep, so batches genuinely
+/// overlap with submits and swaps.
+struct Mul(f64);
+
+impl Engine for Mul {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        std::thread::sleep(Duration::from_micros(200));
+        let f = self.0;
+        Ok(x.map(|v| v * f))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+#[test]
+fn submit_swap_shutdown_stress_holds_invariants() {
+    let mut c = Coordinator::new();
+    c.register(
+        "m",
+        Box::new(Mul(2.0)),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 8, // small on purpose: rejects must occur
+            workers: 2,
+        },
+    );
+    let c = Arc::new(c);
+    let vm = c.obs.variant("m");
+
+    let stop_sampler = Arc::new(AtomicBool::new(false));
+    let min_depth = Arc::new(AtomicI64::new(0));
+    let ok = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+
+    std::thread::scope(|outer| {
+        // Gauge watchdog: record the minimum queue depth ever seen.
+        {
+            let vm = Arc::clone(&vm);
+            let stop = Arc::clone(&stop_sampler);
+            let min_depth = Arc::clone(&min_depth);
+            outer.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    min_depth.fetch_min(vm.queue_depth.get(), Ordering::SeqCst);
+                    std::thread::yield_now();
+                }
+            });
+        }
+        // Inner scope joins all traffic before the sampler is stopped,
+        // so the gauge is watched for the whole run.
+        std::thread::scope(|s| {
+            // 6 submitters hammering the variant.
+            for t in 0..6u64 {
+                let c = Arc::clone(&c);
+                let ok = Arc::clone(&ok);
+                let rejected = Arc::clone(&rejected);
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let v = (t * 1000 + i) as f64;
+                        match c.infer("m", vec![v, -v]) {
+                            Ok(out) => {
+                                // every generation is a pure scaling
+                                assert_eq!(out.len(), 2);
+                                assert_eq!(out[0], -out[1]);
+                                ok.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_) => {
+                                rejected.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                });
+            }
+            // Swapper: replace the engine mid-traffic, repeatedly.
+            {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for g in 0..10u32 {
+                        std::thread::sleep(Duration::from_millis(2));
+                        c.swap_variant("m", Box::new(Mul(f64::from(g) + 3.0)))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        stop_sampler.store(true, Ordering::SeqCst);
+    });
+
+    assert!(
+        min_depth.load(Ordering::SeqCst) >= 0,
+        "queue_depth gauge went negative: {}",
+        min_depth.load(Ordering::SeqCst)
+    );
+    assert!(ok.load(Ordering::SeqCst) > 0, "no request succeeded");
+    assert!(
+        vm.accounted(),
+        "requests={} responses={} rejected={} errors={}",
+        vm.requests.get(),
+        vm.responses.get(),
+        vm.rejected.get(),
+        vm.errors.get()
+    );
+    assert_eq!(vm.swaps.get(), 10);
+
+    // Shutdown must terminate and drain: no queued job left behind.
+    let c = Arc::try_unwrap(c).unwrap_or_else(|_| panic!("coordinator still shared"));
+    c.shutdown();
+    assert_eq!(vm.queue_depth.get(), 0, "queue not drained at shutdown");
+    assert!(vm.accounted(), "accounting broken after shutdown");
+}
