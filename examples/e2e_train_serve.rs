@@ -214,6 +214,7 @@ fn main() -> Result<()> {
         max_wait: std::time::Duration::from_millis(1),
         queue_cap: 4096,
         workers: 2,
+        ..BatcherConfig::default()
     };
     for v in [dense, bfly] {
         let engine = PjrtEngine::new(rt.clone(), v.artifact_fwd, v.bound.clone(), 0)?;

@@ -78,6 +78,7 @@ fn main() -> Result<()> {
             max_wait: std::time::Duration::from_micros(500),
             queue_cap: 4096,
             workers: 2,
+            ..BatcherConfig::default()
         },
     )?;
     let coordinator = Arc::new(coordinator);

@@ -25,6 +25,7 @@ fn main() {
             max_wait: Duration::from_micros(200),
             queue_cap: 8192,
             workers,
+            ..BatcherConfig::default()
         };
         c.register(
             &format!("dense-w{workers}"),

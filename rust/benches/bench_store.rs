@@ -89,6 +89,7 @@ fn main() {
                 max_wait: Duration::from_micros(200),
                 queue_cap: 8192,
                 workers: 2,
+                ..BatcherConfig::default()
             },
         );
         let c = Arc::new(c);

@@ -17,11 +17,20 @@
 //! when the queue is full (a `try_send(Shutdown)` sentinel could be
 //! lost exactly then).
 //!
+//! Robustness: each job may carry a client deadline; the dispatch path
+//! sheds already-expired jobs (`deadline exceeded`, counted in the
+//! `deadline_expired` counter) *before* the batch reaches the engine,
+//! and re-sheds before every retry. Transient engine failures are
+//! retried per batch under [`RetryPolicy`] — capped exponential
+//! backoff with deterministic jitter — and a retry re-pins to the
+//! *current* engine generation, so a batch retried across a hot swap
+//! runs on the post-swap engine.
+//!
 //! Observability: every job carries a trace ID assigned at submit; the
 //! batcher records queue depth, queue wait, batch occupancy and engine
 //! time into its variant's [`VariantMetrics`], publishes a completed
 //! trace per request into the [`TraceRing`], and emits structured
-//! events on swap, backpressure rejection and engine error.
+//! events on swap, backpressure rejection, retry and engine error.
 
 use super::engine::Engine;
 use crate::linalg::Mat;
@@ -45,6 +54,9 @@ pub struct BatcherConfig {
     /// Engine-pool size: worker threads running `infer_batch`
     /// concurrently for this variant (min 1).
     pub workers: usize,
+    /// Retry policy for transient engine failures (default: no
+    /// retries, preserving fail-fast semantics).
+    pub retry: RetryPolicy,
 }
 
 impl Default for BatcherConfig {
@@ -56,7 +68,52 @@ impl Default for BatcherConfig {
             // Enough to overlap engine time across batches without
             // oversubscribing the data-parallel kernel threads.
             workers: crate::linalg::num_threads().clamp(1, 4),
+            retry: RetryPolicy::default(),
         }
+    }
+}
+
+/// Per-batch retry policy for transient `Engine::infer_batch` failures:
+/// capped exponential backoff with deterministic jitter. Retries re-pin
+/// to the *current* engine generation (see [`dispatch`]), so a retry
+/// after a hot swap runs on the new engine.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Extra engine attempts after the first failure (0 disables).
+    pub max_retries: usize,
+    /// Backoff before the first retry; doubles on each further retry.
+    pub backoff: Duration,
+    /// Upper bound on the doubled backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 0,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Pause before retry number `attempt` (1-based):
+    /// `backoff · 2^(attempt−1)` capped at `max_backoff`, scaled by a
+    /// jitter factor in `[0.5, 1.0)` derived deterministically from
+    /// `seed` (the batch's first trace ID), so concurrent failing
+    /// batches desynchronise but failures stay replayable.
+    pub fn backoff_before(&self, attempt: u32, seed: u64) -> Duration {
+        debug_assert!(attempt >= 1);
+        let shift = attempt.saturating_sub(1).min(16);
+        let capped = self
+            .backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.max_backoff);
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ u64::from(attempt);
+        let r = crate::rng::splitmix64(&mut s);
+        let frac = 0.5 + 0.5 * ((r >> 11) as f64 / (1u64 << 53) as f64);
+        capped.mul_f64(frac)
     }
 }
 
@@ -87,6 +144,9 @@ pub struct Job {
     pub input: Vec<f64>,
     pub resp: SyncSender<JobResult>,
     pub enqueued: Instant,
+    /// Client deadline: once past, the job is shed before reaching the
+    /// engine (`deadline exceeded`) instead of riding its batch.
+    pub deadline: Option<Instant>,
 }
 
 enum Msg {
@@ -122,7 +182,11 @@ impl Batcher {
             .name(format!("batcher-{name}"))
             .spawn(move || {
                 let vm = vm2;
-                let mut engine: Arc<dyn Engine> = Arc::from(engine);
+                // The current engine generation. The batcher thread is
+                // the only writer (swap installs); workers read it to
+                // re-pin retries after a hot swap.
+                let current: Arc<Mutex<Arc<dyn Engine>>> =
+                    Arc::new(Mutex::new(Arc::from(engine)));
                 // Engine pool: closed batches flow over a small bounded
                 // channel to `workers` executor threads. Bounding it
                 // keeps total admitted-but-unanswered work limited, so
@@ -135,6 +199,8 @@ impl Batcher {
                         let wrx = Arc::clone(&wrx);
                         let vm = Arc::clone(&vm);
                         let traces = Arc::clone(&traces);
+                        let current = Arc::clone(&current);
+                        let retry = cfg.retry.clone();
                         std::thread::Builder::new()
                             .name(format!("engine-{name}-{i}"))
                             .spawn(move || loop {
@@ -145,7 +211,7 @@ impl Batcher {
                                     Ok(it) => it,
                                     Err(_) => break, // pool channel closed
                                 };
-                                dispatch(&*item.engine, &item.jobs, &vm, &traces);
+                                dispatch(&item.engine, &current, &retry, &item.jobs, &vm, &traces);
                             })
                             .expect("spawn engine worker")
                     })
@@ -162,7 +228,7 @@ impl Batcher {
                         }
                         Ok(Msg::Swap(e, ack)) => {
                             // Queue empty ahead of the swap: install now.
-                            engine = e;
+                            *current.lock().unwrap() = e;
                             vm.swaps.inc();
                             event::info("coordinator.swap")
                                 .field("variant", &vm.name)
@@ -201,16 +267,17 @@ impl Batcher {
                     // blocks when all workers are busy and the small
                     // work channel is full — that is the backpressure
                     // path that lets `submit` start rejecting.
+                    let pinned = Arc::clone(&*current.lock().unwrap());
                     let _ = wtx.send(WorkItem {
                         jobs,
-                        engine: Arc::clone(&engine),
+                        engine: pinned,
                     });
                     // Drain-and-replace: the in-flight batch was handed
                     // over with the old engine Arc; everything queued
                     // after the swap message sees the new one. No
                     // request is ever dropped.
                     if let Some((e, ack)) = pending_swap {
-                        engine = e;
+                        *current.lock().unwrap() = e;
                         vm.swaps.inc();
                         event::info("coordinator.swap")
                             .field("variant", &vm.name)
@@ -241,10 +308,28 @@ impl Batcher {
     }
 }
 
-/// Run one closed batch on `engine` and answer every job. Executes on
-/// the engine-pool worker threads; takes `&dyn Engine` because one
-/// engine generation may serve several batches concurrently.
-fn dispatch(engine: &dyn Engine, jobs: &[Job], vm: &VariantMetrics, traces: &TraceRing) {
+/// Run one closed batch and answer every job. Executes on the
+/// engine-pool worker threads.
+///
+/// Robustness semantics, in order:
+///
+/// 1. jobs whose deadline has already passed are shed (`deadline
+///    exceeded`, `deadline_expired` counter) — before dim validation,
+///    before the input matrix is built, and again before every retry,
+///    so an expired request never reaches `Engine::infer_batch`;
+/// 2. the first engine attempt uses `pinned` — the generation the
+///    batch closed under, keeping drain-and-replace hot-swap exact;
+/// 3. on a transient failure, up to `retry.max_retries` further
+///    attempts run after a capped, jittered backoff, each re-pinned to
+///    `current` so a retry after a hot swap runs on the new engine.
+fn dispatch(
+    pinned: &Arc<dyn Engine>,
+    current: &Mutex<Arc<dyn Engine>>,
+    retry: &RetryPolicy,
+    jobs: &[Job],
+    vm: &VariantMetrics,
+    traces: &TraceRing,
+) {
     let batch_size = jobs.len() as u32;
     vm.batches.record(jobs.len());
     let dispatched = Instant::now();
@@ -256,11 +341,36 @@ fn dispatch(engine: &dyn Engine, jobs: &[Job], vm: &VariantMetrics, traces: &Tra
             w.as_micros() as u64
         })
         .collect();
-    let dim = engine.input_dim();
-    // Validate per-row input sizes before forming the batch.
+    let shed = |i: usize, j: &Job, retries_used: u32| {
+        vm.deadline_expired.inc();
+        traces.push(TraceEvent {
+            id: j.id,
+            tag: vm.trace_tag,
+            queue_wait_us: waits_us[i],
+            engine_us: 0,
+            total_us: j.enqueued.elapsed().as_micros() as u64,
+            batch: batch_size,
+            retries: retries_used,
+            ok: false,
+        });
+        let _ = j.resp.try_send(JobResult {
+            result: Err("deadline exceeded".to_string()),
+            trace_id: j.id,
+            queue_wait_us: waits_us[i],
+            engine_us: 0,
+            batch_size,
+        });
+    };
+    let dim = pinned.input_dim();
+    // Validate per-row input sizes before forming the batch. A job
+    // that is both expired and mis-sized counts as expired, keeping
+    // the accounting terms disjoint.
+    let now = Instant::now();
     let mut valid: Vec<(usize, &Job)> = Vec::with_capacity(jobs.len());
     for (i, j) in jobs.iter().enumerate() {
-        if j.input.len() == dim {
+        if j.deadline.is_some_and(|d| now >= d) {
+            shed(i, j, 0);
+        } else if j.input.len() == dim {
             valid.push((i, j));
         } else {
             vm.errors.inc();
@@ -271,6 +381,7 @@ fn dispatch(engine: &dyn Engine, jobs: &[Job], vm: &VariantMetrics, traces: &Tra
                 engine_us: 0,
                 total_us: j.enqueued.elapsed().as_micros() as u64,
                 batch: batch_size,
+                retries: 0,
                 ok: false,
             });
             let _ = j.resp.try_send(JobResult {
@@ -282,66 +393,109 @@ fn dispatch(engine: &dyn Engine, jobs: &[Job], vm: &VariantMetrics, traces: &Tra
             });
         }
     }
-    if valid.is_empty() {
-        return;
-    }
-    let mut x = Mat::zeros(valid.len(), dim);
-    for (r, (_, j)) in valid.iter().enumerate() {
-        x.row_mut(r).copy_from_slice(&j.input);
-    }
-    let t_engine = Instant::now();
-    let outcome = engine.infer_batch(&x);
-    let engine_elapsed = t_engine.elapsed();
-    vm.engine_time.record(engine_elapsed);
-    let engine_us = engine_elapsed.as_micros() as u64;
-    match outcome {
-        Ok(y) => {
-            for (r, (i, j)) in valid.iter().enumerate() {
-                traces.push(TraceEvent {
-                    id: j.id,
-                    tag: vm.trace_tag,
-                    queue_wait_us: waits_us[*i],
-                    engine_us,
-                    total_us: j.enqueued.elapsed().as_micros() as u64,
-                    batch: batch_size,
-                    ok: true,
-                });
-                let _ = j.resp.try_send(JobResult {
-                    result: Ok(y.row(r).to_vec()),
-                    trace_id: j.id,
-                    queue_wait_us: waits_us[*i],
-                    engine_us,
-                    batch_size,
+    let jitter_seed = jobs.first().map(|j| j.id).unwrap_or_default();
+    let mut retries_used: u32 = 0;
+    loop {
+        if valid.is_empty() {
+            return;
+        }
+        let mut x = Mat::zeros(valid.len(), dim);
+        for (r, (_, j)) in valid.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(&j.input);
+        }
+        // First attempt: the batch's pinned generation. Retries: the
+        // current generation (re-pin across hot swaps).
+        let engine: Arc<dyn Engine> = if retries_used == 0 {
+            Arc::clone(pinned)
+        } else {
+            Arc::clone(&*current.lock().unwrap())
+        };
+        let t_engine = Instant::now();
+        let outcome = engine.infer_batch(&x);
+        let engine_elapsed = t_engine.elapsed();
+        vm.engine_time.record(engine_elapsed);
+        let engine_us = engine_elapsed.as_micros() as u64;
+        match outcome {
+            Ok(y) => {
+                for (r, (i, j)) in valid.iter().enumerate() {
+                    traces.push(TraceEvent {
+                        id: j.id,
+                        tag: vm.trace_tag,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        total_us: j.enqueued.elapsed().as_micros() as u64,
+                        batch: batch_size,
+                        retries: retries_used,
+                        ok: true,
+                    });
+                    let _ = j.resp.try_send(JobResult {
+                        result: Ok(y.row(r).to_vec()),
+                        trace_id: j.id,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        batch_size,
+                    });
+                }
+                return;
+            }
+            Err(e) if (retries_used as usize) < retry.max_retries => {
+                retries_used += 1;
+                vm.retries.inc();
+                let pause = retry.backoff_before(retries_used, jitter_seed);
+                event::warn("coordinator.retry")
+                    .field("variant", &vm.name)
+                    .field("attempt", retries_used)
+                    .field("backoff_us", pause.as_micros())
+                    .field("batch", valid.len())
+                    .msg(format!("{e:#}"))
+                    .emit();
+                // Sleeping here occupies this pool worker for the
+                // backoff — deliberate: a failing engine should not
+                // absorb additional concurrent batches meanwhile.
+                std::thread::sleep(pause);
+                // Re-shed before the retry: deadlines may have passed
+                // during the failed attempt or the backoff.
+                let now = Instant::now();
+                valid.retain(|&(i, j)| {
+                    let expired = j.deadline.is_some_and(|d| now >= d);
+                    if expired {
+                        shed(i, j, retries_used);
+                    }
+                    !expired
                 });
             }
-        }
-        Err(e) => {
-            // Count one error per failed request so the per-variant
-            // invariant `requests == responses + rejected + errors`
-            // reconciles even for multi-request batches.
-            vm.errors.add(valid.len() as u64);
-            event::error("coordinator.engine")
-                .field("variant", &vm.name)
-                .field("batch", valid.len())
-                .msg(format!("{e:#}"))
-                .emit();
-            for (i, j) in &valid {
-                traces.push(TraceEvent {
-                    id: j.id,
-                    tag: vm.trace_tag,
-                    queue_wait_us: waits_us[*i],
-                    engine_us,
-                    total_us: j.enqueued.elapsed().as_micros() as u64,
-                    batch: batch_size,
-                    ok: false,
-                });
-                let _ = j.resp.try_send(JobResult {
-                    result: Err(format!("{e:#}")),
-                    trace_id: j.id,
-                    queue_wait_us: waits_us[*i],
-                    engine_us,
-                    batch_size,
-                });
+            Err(e) => {
+                // Count one error per failed request so the per-variant
+                // invariant `requests == responses + rejected + errors
+                // + deadline_expired` reconciles even for multi-request
+                // batches.
+                vm.errors.add(valid.len() as u64);
+                event::error("coordinator.engine")
+                    .field("variant", &vm.name)
+                    .field("batch", valid.len())
+                    .field("retries", retries_used)
+                    .msg(format!("{e:#}"))
+                    .emit();
+                for (i, j) in &valid {
+                    traces.push(TraceEvent {
+                        id: j.id,
+                        tag: vm.trace_tag,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        total_us: j.enqueued.elapsed().as_micros() as u64,
+                        batch: batch_size,
+                        retries: retries_used,
+                        ok: false,
+                    });
+                    let _ = j.resp.try_send(JobResult {
+                        result: Err(format!("{e:#}")),
+                        trace_id: j.id,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        batch_size,
+                    });
+                }
+                return;
             }
         }
     }
@@ -353,12 +507,24 @@ impl Batcher {
     /// Rejections are counted against the variant and emit a
     /// `coordinator.backpressure` warn event.
     pub fn submit(&self, input: Vec<f64>) -> Result<Receiver<JobResult>> {
+        self.submit_with_deadline(input, None)
+    }
+
+    /// [`submit`](Self::submit) with a client deadline: if it passes
+    /// before the job's batch is dispatched (or retried), the job is
+    /// shed with `deadline exceeded` instead of reaching the engine.
+    pub fn submit_with_deadline(
+        &self,
+        input: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<JobResult>> {
         let (rtx, rrx) = sync_channel(1);
         let job = Job {
             id: next_trace_id(),
             input,
             resp: rtx,
             enqueued: Instant::now(),
+            deadline,
         };
         let tx = self.tx.as_ref().expect("batcher running");
         // Count the job into the gauge *before* the send: once the
@@ -488,6 +654,7 @@ mod tests {
                 max_wait: Duration::from_millis(30),
                 queue_cap: 64,
                 workers: 2,
+                ..BatcherConfig::default()
             },
         );
         // Submit 8 quickly: they should ride in very few engine calls.
@@ -548,6 +715,7 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 queue_cap: 2,
                 workers: 1,
+                ..BatcherConfig::default()
             },
         );
         let mut rejected = 0;
@@ -593,6 +761,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_cap: 64,
                 workers: 2,
+                ..BatcherConfig::default()
             },
         );
         let vm = obs.variant("t");
@@ -633,6 +802,7 @@ mod tests {
                 max_wait: Duration::from_millis(5),
                 queue_cap: 8,
                 workers: 1,
+                ..BatcherConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -661,6 +831,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_cap: 8,
                 workers: 1,
+                ..BatcherConfig::default()
             },
         );
         let rx = b.submit(vec![7.0]).unwrap();
@@ -693,6 +864,7 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 queue_cap: 2,
                 workers: 1,
+                ..BatcherConfig::default()
             },
         );
         // Fill the queue past capacity so at least one submit rejects
@@ -728,6 +900,7 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 queue_cap: 16,
                 workers: 4,
+                ..BatcherConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -743,5 +916,182 @@ mod tests {
             "no overlap: 4 x 30ms batches took {elapsed:?}"
         );
         b.shutdown();
+    }
+
+    /// 1-dim engine that records the first element of every row it is
+    /// given, then sleeps — used to prove expired jobs never reach it.
+    struct Recording {
+        seen: Arc<Mutex<Vec<f64>>>,
+        delay: Duration,
+    }
+    impl Engine for Recording {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+            let mut seen = self.seen.lock().unwrap();
+            for r in 0..x.rows() {
+                seen.push(x.row(r)[0]);
+            }
+            drop(seen);
+            std::thread::sleep(self.delay);
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn output_dim(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_before_engine() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "dl",
+            Box::new(Recording {
+                seen: Arc::clone(&seen),
+                delay: Duration::from_millis(100),
+            }),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_cap: 8,
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        );
+        // Filler occupies the single worker for ~100 ms...
+        let filler = b.submit(vec![0.0]).unwrap();
+        // ...so the marker's 10 ms deadline expires while its batch
+        // waits for a worker, and dispatch must shed it unseen.
+        let marker = b
+            .submit_with_deadline(vec![1.0], Some(Instant::now() + Duration::from_millis(10)))
+            .unwrap();
+        let res = marker.recv().unwrap();
+        assert_eq!(res.result.unwrap_err(), "deadline exceeded");
+        assert!(filler.recv().unwrap().result.is_ok());
+        let vm = obs.variant("dl");
+        assert_eq!(vm.deadline_expired.get(), 1);
+        assert_eq!(vm.errors.get(), 0, "shedding is not an engine error");
+        assert_eq!(
+            *seen.lock().unwrap(),
+            vec![0.0],
+            "expired request reached the engine"
+        );
+        // the shed request still produced a (failed) trace
+        assert!(obs.traces.recent(8).iter().any(|t| t.id == res.trace_id && !t.ok));
+        b.shutdown();
+    }
+
+    /// 1-dim engine failing its first `fails` calls, then echoing.
+    struct Flaky {
+        fails: usize,
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+    }
+    impl Engine for Flaky {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+            let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if n < self.fails {
+                anyhow::bail!("transient fault {n}");
+            }
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn output_dim(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_failure() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "flaky",
+            Box::new(Flaky {
+                fails: 2,
+                calls: Arc::clone(&calls),
+            }),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_cap: 8,
+                workers: 1,
+                retry: RetryPolicy {
+                    max_retries: 3,
+                    backoff: Duration::from_millis(1),
+                    max_backoff: Duration::from_millis(4),
+                },
+            },
+        );
+        let rx = b.submit(vec![7.0]).unwrap();
+        let res = rx.recv().unwrap();
+        assert_eq!(res.result.unwrap()[0], 7.0, "retry must recover");
+        let vm = obs.variant("flaky");
+        assert_eq!(vm.retries.get(), 2, "two failed attempts were retried");
+        assert_eq!(vm.errors.get(), 0, "recovered batch is not an error");
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 3);
+        // the success trace carries the retry count
+        let t = &obs.traces.recent(1)[0];
+        assert!(t.ok);
+        assert_eq!(t.retries, 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn retry_exhaustion_is_an_error() {
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "doomed",
+            Box::new(Flaky {
+                fails: usize::MAX,
+                calls: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            }),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_cap: 8,
+                workers: 1,
+                retry: RetryPolicy {
+                    max_retries: 1,
+                    backoff: Duration::from_millis(1),
+                    max_backoff: Duration::from_millis(2),
+                },
+            },
+        );
+        let rx = b.submit(vec![1.0]).unwrap();
+        let res = rx.recv().unwrap();
+        assert!(res.result.is_err());
+        let vm = obs.variant("doomed");
+        assert_eq!(vm.retries.get(), 1);
+        assert_eq!(vm.errors.get(), 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn backoff_is_capped_jittered_and_deterministic() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(80),
+        };
+        for attempt in 1..=8u32 {
+            let d = p.backoff_before(attempt, 42);
+            let uncapped = Duration::from_millis(10 * (1 << (attempt - 1).min(16)) as u64);
+            let cap = uncapped.min(Duration::from_millis(80));
+            assert!(d <= cap, "attempt {attempt}: {d:?} > cap {cap:?}");
+            assert!(d >= cap / 2, "attempt {attempt}: {d:?} < half of {cap:?}");
+            assert_eq!(d, p.backoff_before(attempt, 42), "jitter must replay");
+        }
+        assert_ne!(
+            p.backoff_before(1, 1),
+            p.backoff_before(1, 2),
+            "different batches desynchronise"
+        );
     }
 }

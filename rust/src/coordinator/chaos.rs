@@ -1,0 +1,194 @@
+//! Fault injection for the serving stack: [`FaultyEngine`] wraps any
+//! [`Engine`] and injects failures and latency according to a
+//! [`ChaosConfig`].
+//!
+//! This is how the robustness layer is tested — and how it can be
+//! exercised against a live server (`serve --chaos`): probabilistic or
+//! patterned `infer_batch` errors drive the retry path, injected
+//! latency drives deadline shedding, and the chaos suite
+//! (`rust/tests/chaos_coordinator.rs`) proves the accounting invariant
+//! `requests == responses + rejected + errors + deadline_expired`
+//! holds under all of it, concurrently with hot swaps.
+//!
+//! Randomness is seeded ([`ChaosConfig::seed`]) so a failing chaos run
+//! replays deterministically up to thread scheduling.
+
+use super::engine::Engine;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What to inject. The default injects nothing.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Probability in `[0, 1]` that a call fails (sampled per call).
+    pub fail_prob: f64,
+    /// Deterministic pattern: additionally fail every Nth call
+    /// (1-based; `Some(1)` fails every call).
+    pub fail_every: Option<u64>,
+    /// Uniform latency injected before each call completes.
+    pub latency: Option<(Duration, Duration)>,
+    /// Seed for the failure/latency RNG (replayable runs).
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            fail_prob: 0.0,
+            fail_every: None,
+            latency: None,
+            seed: 0xC4A0,
+        }
+    }
+}
+
+/// An [`Engine`] wrapper injecting faults per [`ChaosConfig`].
+///
+/// Thread-safe like any engine: the call counter is atomic and the RNG
+/// sits behind a mutex (held only to draw, never across the inner
+/// call), so one wrapped engine can serve a whole worker pool.
+pub struct FaultyEngine {
+    inner: Box<dyn Engine>,
+    cfg: ChaosConfig,
+    calls: AtomicU64,
+    faults: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn Engine>, cfg: ChaosConfig) -> Self {
+        let rng = Rng::seed_from_u64(cfg.seed);
+        FaultyEngine {
+            inner,
+            cfg,
+            calls: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            rng: Mutex::new(rng),
+        }
+    }
+
+    /// Total `infer_batch` calls observed (including injected faults).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Calls that failed with an injected fault.
+    pub fn faults(&self) -> u64 {
+        self.faults.load(Ordering::SeqCst)
+    }
+}
+
+impl Engine for FaultyEngine {
+    fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        let (pause, fail) = {
+            let mut rng = self.rng.lock().unwrap();
+            let pause = self.cfg.latency.map(|(lo, hi)| {
+                let span = hi.saturating_sub(lo);
+                lo + span.mul_f64(rng.f64())
+            });
+            let fail = self.cfg.fail_every.is_some_and(|k| n % k.max(1) == 0)
+                || (self.cfg.fail_prob > 0.0 && rng.bernoulli(self.cfg.fail_prob));
+            (pause, fail)
+        };
+        if let Some(d) = pause {
+            std::thread::sleep(d);
+        }
+        if fail {
+            self.faults.fetch_add(1, Ordering::SeqCst);
+            bail!("injected fault (call {n})");
+        }
+        self.inner.infer_batch(x)
+    }
+    fn input_dim(&self) -> usize {
+        self.inner.input_dim()
+    }
+    fn output_dim(&self) -> usize {
+        self.inner.output_dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    struct Echo(usize);
+    impl Engine for Echo {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            self.0
+        }
+        fn output_dim(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let e = FaultyEngine::new(Box::new(Echo(2)), ChaosConfig::default());
+        let x = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        for _ in 0..50 {
+            assert!(e.infer_batch(&x).is_ok());
+        }
+        assert_eq!(e.calls(), 50);
+        assert_eq!(e.faults(), 0);
+        assert_eq!(e.input_dim(), 2);
+        assert_eq!(e.output_dim(), 2);
+    }
+
+    #[test]
+    fn fail_every_is_a_deterministic_pattern() {
+        let e = FaultyEngine::new(
+            Box::new(Echo(1)),
+            ChaosConfig {
+                fail_every: Some(3),
+                ..ChaosConfig::default()
+            },
+        );
+        let x = Mat::from_vec(1, 1, vec![0.0]);
+        let outcomes: Vec<bool> = (0..9).map(|_| e.infer_batch(&x).is_ok()).collect();
+        assert_eq!(
+            outcomes,
+            vec![true, true, false, true, true, false, true, true, false]
+        );
+        assert_eq!(e.faults(), 3);
+    }
+
+    #[test]
+    fn fail_prob_one_always_fails_with_clear_message() {
+        let e = FaultyEngine::new(
+            Box::new(Echo(1)),
+            ChaosConfig {
+                fail_prob: 1.0,
+                ..ChaosConfig::default()
+            },
+        );
+        let x = Mat::from_vec(1, 1, vec![0.0]);
+        let err = e.infer_batch(&x).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert_eq!(e.faults(), 1);
+    }
+
+    #[test]
+    fn latency_injection_bounds_hold() {
+        let e = FaultyEngine::new(
+            Box::new(Echo(1)),
+            ChaosConfig {
+                latency: Some((Duration::from_millis(10), Duration::from_millis(20))),
+                ..ChaosConfig::default()
+            },
+        );
+        let x = Mat::from_vec(1, 1, vec![0.0]);
+        let t0 = Instant::now();
+        assert!(e.infer_batch(&x).is_ok());
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(10), "{elapsed:?}");
+    }
+}

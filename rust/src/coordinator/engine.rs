@@ -64,6 +64,42 @@ pub struct PjrtEngine {
     out_index: usize,
 }
 
+/// Check a spec + bound-input count + output index against the
+/// engine's conventions, returning `(max_batch, in_dim, out_dim)`.
+/// Pure so it is unit-testable without a live PJRT runtime; every
+/// mismatch — including an out-of-range `out_index` — is an error,
+/// never a panic.
+fn validate_spec(
+    spec: &crate::runtime::ArtifactSpec,
+    bound_len: usize,
+    out_index: usize,
+) -> Result<(usize, usize, usize)> {
+    if bound_len + 1 != spec.inputs.len() {
+        bail!(
+            "artifact `{}` wants {} inputs, {} bound + 1 batch",
+            spec.name,
+            spec.inputs.len(),
+            bound_len
+        );
+    }
+    let batch_spec = spec.inputs.last().unwrap();
+    if batch_spec.shape.len() != 2 {
+        bail!("batch input must be rank 2, got {:?}", batch_spec.shape);
+    }
+    let out_spec = match spec.outputs.get(out_index) {
+        Some(s) => s,
+        None => bail!(
+            "output index {out_index} out of range: artifact `{}` has {} outputs",
+            spec.name,
+            spec.outputs.len()
+        ),
+    };
+    if out_spec.shape.len() != 2 || out_spec.shape[0] != batch_spec.shape[0] {
+        bail!("output {out_index} shape {:?} incompatible", out_spec.shape);
+    }
+    Ok((batch_spec.shape[0], batch_spec.shape[1], out_spec.shape[1]))
+}
+
 impl PjrtEngine {
     /// Bind all non-batch inputs; infer the batch shape from the
     /// manifest (last input) and the output from `out_index`.
@@ -78,22 +114,7 @@ impl PjrtEngine {
                 Some(s) => s,
                 None => bail!("artifact `{artifact}` not in manifest"),
             };
-            if bound.len() + 1 != spec.inputs.len() {
-                bail!(
-                    "artifact `{artifact}` wants {} inputs, {} bound + 1 batch",
-                    spec.inputs.len(),
-                    bound.len()
-                );
-            }
-            let batch_spec = spec.inputs.last().unwrap();
-            if batch_spec.shape.len() != 2 {
-                bail!("batch input must be rank 2, got {:?}", batch_spec.shape);
-            }
-            let out_spec = &spec.outputs[out_index];
-            if out_spec.shape.len() != 2 || out_spec.shape[0] != batch_spec.shape[0] {
-                bail!("output {out_index} shape {:?} incompatible", out_spec.shape);
-            }
-            (batch_spec.shape[0], batch_spec.shape[1], out_spec.shape[1])
+            validate_spec(&spec, bound.len(), out_index)?
         };
         Ok(PjrtEngine {
             runtime,
@@ -154,5 +175,51 @@ mod tests {
         assert!(y.is_finite());
     }
     // PjrtEngine is exercised by rust/tests/integration_runtime.rs and
-    // integration_coordinator.rs (needs real artifacts).
+    // integration_coordinator.rs (needs real artifacts). Its spec
+    // validation is pure and tested here without a runtime.
+
+    use crate::runtime::{ArtifactSpec, Dtype, TensorSpec};
+
+    fn spec(n_out: usize) -> ArtifactSpec {
+        let t = |shape: &[usize]| TensorSpec {
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+        };
+        ArtifactSpec {
+            name: "a".to_string(),
+            inputs: vec![t(&[8, 4]), t(&[16, 8])],
+            outputs: (0..n_out).map(|_| t(&[16, 2])).collect(),
+        }
+    }
+
+    #[test]
+    fn validate_spec_accepts_matching_artifact() {
+        let (max_batch, in_dim, out_dim) = validate_spec(&spec(1), 1, 0).unwrap();
+        assert_eq!((max_batch, in_dim, out_dim), (16, 8, 2));
+    }
+
+    /// Regression: an out-of-range `out_index` used to panic on
+    /// `spec.outputs[out_index]` instead of returning an error like
+    /// every other spec mismatch.
+    #[test]
+    fn validate_spec_rejects_out_of_range_out_index() {
+        let e = validate_spec(&spec(1), 1, 3).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        let e = validate_spec(&spec(0), 1, 0).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+    }
+
+    #[test]
+    fn validate_spec_rejects_other_mismatches() {
+        // wrong bound count
+        assert!(validate_spec(&spec(1), 0, 0).is_err());
+        // non-rank-2 batch input
+        let mut s = spec(1);
+        s.inputs.last_mut().unwrap().shape = vec![16];
+        assert!(validate_spec(&s, 1, 0).is_err());
+        // output batch dim mismatch
+        let mut s = spec(1);
+        s.outputs[0].shape = vec![8, 2];
+        assert!(validate_spec(&s, 1, 0).is_err());
+    }
 }

@@ -33,11 +33,21 @@
 //! `METRICS` renders the human snapshot, `METRICS PROM` the Prometheus
 //! text format.
 //!
+//! Robustness (checked by `rust/tests/chaos_coordinator.rs` under
+//! injected faults): requests may carry a client deadline
+//! (`INFER ... DEADLINE <ms>`) and are shed with `deadline exceeded`
+//! if it passes before dispatch — never reaching the engine — while
+//! transient engine failures are retried per batch with capped,
+//! jittered backoff ([`RetryPolicy`]), re-pinned to the current engine
+//! generation so a retry after a hot swap runs on the new engine. The
+//! [`chaos`] module's [`FaultyEngine`] wrapper injects failures and
+//! latency for tests and the `--chaos` serve flag.
+//!
 //! Invariants (checked by `rust/tests/prop_coordinator.rs`):
 //! * conservation — every accepted request is answered exactly once;
 //! * accounting — per variant, `requests == responses + rejected +
-//!   errors` once traffic drains (unknown variants count against the
-//!   reserved [`UNROUTED`] pseudo-variant);
+//!   errors + deadline_expired` once traffic drains (unknown variants
+//!   count against the reserved [`UNROUTED`] pseudo-variant);
 //! * batch bound — no formed batch exceeds `max_batch`;
 //! * deadline — a request waits at most `max_wait` before its batch is
 //!   formed (modulo engine latency);
@@ -45,11 +55,13 @@
 //!   are rejected, never silently dropped.
 
 mod batcher;
+pub mod chaos;
 mod engine;
 mod protocol;
 mod server;
 
-pub use batcher::{Batcher, BatcherConfig, Job, JobResult};
+pub use batcher::{Batcher, BatcherConfig, Job, JobResult, RetryPolicy};
+pub use chaos::{ChaosConfig, FaultyEngine};
 pub use engine::{Engine, NativeHeadEngine, PjrtEngine};
 pub use protocol::{parse_request, Request, Response};
 pub use server::{serve, serve_with, ServerConfig, ServerHandle};
@@ -142,10 +154,24 @@ impl Coordinator {
     /// Submit one request row; blocks until the response arrives.
     /// Returns `Err` on unknown variant or queue-full backpressure.
     pub fn infer(&self, variant: &str, input: Vec<f64>) -> Result<Vec<f64>> {
+        self.infer_deadline(variant, input, None)
+    }
+
+    /// [`infer`](Self::infer) with an optional client deadline: if it
+    /// passes before the request's batch is dispatched, the request is
+    /// shed with `deadline exceeded` (counted in the variant's
+    /// `deadline_expired`, never reaching the engine).
+    pub fn infer_deadline(
+        &self,
+        variant: &str,
+        input: Vec<f64>,
+        patience: Option<std::time::Duration>,
+    ) -> Result<Vec<f64>> {
         // Unknown variants are accounted to the reserved `_unrouted`
         // pseudo-variant so every real variant's invariant
-        // `requests == responses + rejected + errors` reconciles and
-        // unroutable traffic is still visible in the metrics.
+        // `requests == responses + rejected + errors + deadline_expired`
+        // reconciles and unroutable traffic is still visible in the
+        // metrics.
         let b = match self.variants.get(variant) {
             Some(b) => b,
             None => {
@@ -162,8 +188,9 @@ impl Coordinator {
         let vm = b.metrics();
         vm.requests.inc();
         let started = std::time::Instant::now();
+        let deadline = patience.map(|p| started + p);
         // Queue-full rejections are counted inside `Batcher::submit`.
-        let rx = b.submit(input)?;
+        let rx = b.submit_with_deadline(input, deadline)?;
         let res = rx.recv().map_err(|_| {
             vm.errors.inc();
             anyhow!("variant `{variant}` worker gone")
@@ -181,7 +208,16 @@ impl Coordinator {
                 .msg("slow request")
                 .emit();
         }
-        let out = res.result.map_err(|e| anyhow!("inference failed: {e}"))?;
+        // `deadline exceeded` keeps its exact wording on the wire (the
+        // `deadline_expired` counter was bumped in dispatch); engine
+        // and validation failures get the generic prefix.
+        let out = res.result.map_err(|e| {
+            if e == "deadline exceeded" {
+                anyhow!("deadline exceeded")
+            } else {
+                anyhow!("inference failed: {e}")
+            }
+        })?;
         vm.latency.record(total);
         vm.responses.inc();
         Ok(out)
@@ -255,6 +291,7 @@ mod tests {
             max_wait: std::time::Duration::from_millis(2),
             queue_cap: 64,
             workers: 2,
+            ..BatcherConfig::default()
         }
     }
 
@@ -373,6 +410,61 @@ mod tests {
         // queue wait and engine time were recorded per batch / request
         assert_eq!(vm.queue_wait.count(), 16);
         assert_eq!(vm.engine_time.count(), nb);
+    }
+
+    #[test]
+    fn infer_deadline_sheds_and_accounts() {
+        use std::time::Duration;
+        /// Doubler with enough latency to let a queued deadline expire.
+        struct SlowDoubler;
+        impl Engine for SlowDoubler {
+            fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+                std::thread::sleep(Duration::from_millis(60));
+                Ok(x.map(|v| v * 2.0))
+            }
+            fn input_dim(&self) -> usize {
+                4
+            }
+            fn output_dim(&self) -> usize {
+                4
+            }
+        }
+        let mut c = Coordinator::new();
+        c.register(
+            "s",
+            Box::new(SlowDoubler),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: std::time::Duration::from_micros(1),
+                queue_cap: 16,
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        );
+        let c = Arc::new(c);
+        // Filler occupies the lone worker; the marker's deadline lapses
+        // while queued and must come back as `deadline exceeded`.
+        let filler = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || c.infer("s", vec![1.0; 4]))
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        let err = c
+            .infer_deadline("s", vec![2.0; 4], Some(Duration::from_millis(10)))
+            .unwrap_err();
+        assert_eq!(err.to_string(), "deadline exceeded");
+        assert!(filler.join().unwrap().is_ok());
+        let vm = c.obs.variant("s");
+        assert_eq!(vm.deadline_expired.get(), 1);
+        assert_eq!(vm.errors.get(), 0);
+        assert_eq!(vm.responses.get(), 1);
+        assert!(vm.accounted(), "deadline_expired closes the books");
+        // a generous deadline is a normal success
+        assert_eq!(
+            c.infer_deadline("s", vec![1.0; 4], Some(Duration::from_secs(5)))
+                .unwrap(),
+            vec![2.0; 4]
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! client → server:
-//!   INFER <variant> <v0> <v1> ... <vd>\n
+//!   INFER <variant> [DEADLINE <ms>] <v0> <v1> ... <vd>\n
 //!   SWAP <variant> <name[@vN]>\n   (hot-swap variant to a store checkpoint)
 //!   METRICS\n                      (human-readable per-variant snapshot)
 //!   METRICS PROM\n                 (Prometheus text exposition format)
@@ -16,11 +16,31 @@
 //!   PONG\n
 //!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / TRACE / VARIANTS)
 //! ```
+//!
+//! `INFER` grammar details:
+//!
+//! * The optional `DEADLINE <ms>` attribute comes immediately after the
+//!   variant name (`<ms>` is a whole number of milliseconds ≥ 1,
+//!   measured from parse time). A request whose deadline passes before
+//!   its batch is dispatched is shed with `ERR deadline exceeded` —
+//!   it never reaches the engine, and is counted in the per-variant
+//!   `deadline_expired` counter (distinct from backpressure rejects).
+//!   The token cannot collide with input values, which are numbers.
+//! * Input values must be finite: `NaN`, `inf`, `-inf` and any literal
+//!   that overflows `f64` (e.g. `1e999`) are rejected at parse with
+//!   `ERR non-finite value ...`, so engines only ever see finite
+//!   inputs.
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Infer { variant: String, input: Vec<f64> },
+    Infer {
+        variant: String,
+        input: Vec<f64>,
+        /// Optional `DEADLINE <ms>` attribute: the client's patience in
+        /// whole milliseconds from parse time.
+        deadline_ms: Option<u64>,
+    },
     /// Hot-swap `variant` to the checkpoint `name[@vN]` from the
     /// server's model store (zero-downtime drain-and-replace).
     Swap { variant: String, checkpoint: String },
@@ -54,14 +74,37 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 .next()
                 .ok_or_else(|| "INFER needs a variant".to_string())?
                 .to_string();
+            let mut it = it.peekable();
+            let mut deadline_ms = None;
+            if it.peek() == Some(&"DEADLINE") {
+                it.next();
+                let t = it
+                    .next()
+                    .ok_or_else(|| "DEADLINE needs a millisecond count".to_string())?;
+                let ms: u64 = t
+                    .parse()
+                    .map_err(|_| format!("DEADLINE needs whole milliseconds, got `{t}`"))?;
+                if ms == 0 {
+                    return Err("DEADLINE must be ≥ 1 ms".to_string());
+                }
+                deadline_ms = Some(ms);
+            }
             let input: Result<Vec<f64>, String> = it
-                .map(|t| t.parse::<f64>().map_err(|_| format!("bad number `{t}`")))
+                .map(|t| match t.parse::<f64>() {
+                    Ok(v) if v.is_finite() => Ok(v),
+                    Ok(_) => Err(format!("non-finite value `{t}`")),
+                    Err(_) => Err(format!("bad number `{t}`")),
+                })
                 .collect();
             let input = input?;
             if input.is_empty() {
                 return Err("INFER needs at least one value".to_string());
             }
-            Ok(Request::Infer { variant, input })
+            Ok(Request::Infer {
+                variant,
+                input,
+                deadline_ms,
+            })
         }
         Some("SWAP") => {
             let variant = it
@@ -147,9 +190,30 @@ mod tests {
             r,
             Request::Infer {
                 variant: "bfly".into(),
-                input: vec![1.5, -2.0, 0.03]
+                input: vec![1.5, -2.0, 0.03],
+                deadline_ms: None,
             }
         );
+    }
+
+    #[test]
+    fn parse_infer_deadline() {
+        assert_eq!(
+            parse_request("INFER bfly DEADLINE 25 1 2").unwrap(),
+            Request::Infer {
+                variant: "bfly".into(),
+                input: vec![1.0, 2.0],
+                deadline_ms: Some(25),
+            }
+        );
+        // DEADLINE must come first; afterwards it's just a bad number
+        assert!(parse_request("INFER bfly 1 DEADLINE 25 2").is_err());
+        assert!(parse_request("INFER bfly DEADLINE").is_err());
+        assert!(parse_request("INFER bfly DEADLINE x 1").is_err());
+        assert!(parse_request("INFER bfly DEADLINE 0 1").is_err());
+        assert!(parse_request("INFER bfly DEADLINE 2.5 1").is_err());
+        // attribute alone, no values
+        assert!(parse_request("INFER bfly DEADLINE 25").is_err());
     }
 
     #[test]
@@ -159,6 +223,67 @@ mod tests {
         assert!(parse_request("INFER v").is_err());
         assert!(parse_request("INFER v 1 x").is_err());
         assert!(parse_request("WAT 1 2").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_values() {
+        for line in [
+            "INFER v NaN",
+            "INFER v nan",
+            "INFER v inf",
+            "INFER v -inf",
+            "INFER v infinity",
+            "INFER v 1e999",
+            "INFER v -1e999",
+            "INFER v 1 2 NaN 4",
+            "INFER v DEADLINE 10 inf",
+        ] {
+            let e = parse_request(line).unwrap_err();
+            assert!(e.contains("non-finite"), "{line} → {e}");
+        }
+        // finite but extreme values still pass
+        assert!(parse_request("INFER v 1e308 -1e308 5e-324").is_ok());
+    }
+
+    #[test]
+    fn prop_parse_accepted_inputs_are_finite() {
+        use crate::testing::{forall, PropConfig};
+        // Lines mixing finite floats with hostile tokens: whatever the
+        // parser accepts must contain only finite values.
+        const HOSTILE: &[&str] = &[
+            "NaN", "-NaN", "inf", "-inf", "Infinity", "1e999", "-2e400", "1e", "--3", "4..2", "",
+        ];
+        forall(
+            "parse-accepted-infer-inputs-are-finite",
+            &PropConfig::default(),
+            |rng| {
+                let ntok = 1 + rng.below(8);
+                let mut line = String::from("INFER v");
+                if rng.bernoulli(0.3) {
+                    line.push_str(&format!(" DEADLINE {}", 1 + rng.below(1000)));
+                }
+                for _ in 0..ntok {
+                    line.push(' ');
+                    if rng.bernoulli(0.3) {
+                        line.push_str(HOSTILE[rng.below(HOSTILE.len())]);
+                    } else {
+                        line.push_str(&format!("{}", rng.gaussian() * 1e3));
+                    }
+                }
+                line
+            },
+            |line| match parse_request(line) {
+                Ok(Request::Infer { input, .. }) => {
+                    if input.iter().all(|v| v.is_finite()) {
+                        Ok(())
+                    } else {
+                        Err(format!("accepted non-finite input: {input:?}"))
+                    }
+                }
+                Ok(other) => Err(format!("INFER line parsed as {other:?}")),
+                Err(_) => Ok(()), // rejecting is always safe
+            },
+        );
     }
 
     #[test]

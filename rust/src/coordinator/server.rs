@@ -96,6 +96,10 @@ pub fn serve_with(
                 handlers.retain(|h| !h.is_finished());
                 if handlers.len() >= cfg.max_conns {
                     let mut s = stream;
+                    // The courtesy ERR is a blocking write on the accept
+                    // thread: bound it, or one peer with a full receive
+                    // window could stall every new connection.
+                    let _ = s.set_write_timeout(Some(Duration::from_millis(100)));
                     let _ = s.write_all(
                         Response::Err("server at connection capacity".into())
                             .serialize()
@@ -176,7 +180,12 @@ fn handle_conn(
             }
         }
         if buf.len() > MAX_LINE_BYTES {
-            break; // unterminated-garbage guard
+            // Unterminated-garbage guard. Say why before closing, so a
+            // protocol violation is distinguishable from a network
+            // drop on the client side.
+            let _ = writer.write_all(Response::Err("line too long".into()).serialize().as_bytes());
+            let _ = writer.flush();
+            break;
         }
     }
     Ok(())
@@ -190,10 +199,17 @@ fn respond(c: &Coordinator, line: &str) -> Response {
         Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
         Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
         Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
-        Ok(Request::Infer { variant, input }) => match c.infer(&variant, input) {
-            Ok(out) => Response::Ok(out),
-            Err(e) => Response::Err(format!("{e:#}")),
-        },
+        Ok(Request::Infer {
+            variant,
+            input,
+            deadline_ms,
+        }) => {
+            let patience = deadline_ms.map(Duration::from_millis);
+            match c.infer_deadline(&variant, input, patience) {
+                Ok(out) => Response::Ok(out),
+                Err(e) => Response::Err(format!("{e:#}")),
+            }
+        }
         Ok(Request::Swap {
             variant,
             checkpoint,
@@ -234,6 +250,7 @@ mod tests {
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 32,
                 workers: 2,
+                ..BatcherConfig::default()
             },
         );
         let c = Arc::new(c);
@@ -332,6 +349,7 @@ mod tests {
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 32,
                 workers: 2,
+                ..BatcherConfig::default()
             },
         )
         .unwrap();
@@ -402,6 +420,7 @@ mod tests {
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 32,
                 workers: 1,
+                ..BatcherConfig::default()
             },
         );
         let c = Arc::new(c);
@@ -446,6 +465,138 @@ mod tests {
             assert_eq!(l, "OK -1 -2\n");
         }
         drop(live);
+        h.stop();
+    }
+
+    /// Regression: an unterminated line past `MAX_LINE_BYTES` used to
+    /// close the connection silently. The client must see one
+    /// `ERR line too long` before EOF so the drop is attributable.
+    #[test]
+    fn oversized_line_gets_err_before_close() {
+        let (_c, h) = start();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        // One byte past the guard: the server consumes the whole
+        // stream before tripping, so the close is a clean FIN and the
+        // ERR line is not lost to a reset.
+        let payload = vec![b'x'; MAX_LINE_BYTES + 1];
+        s.write_all(&payload).unwrap();
+        s.flush().unwrap();
+        let mut r = BufReader::new(s);
+        let mut l = String::new();
+        r.read_line(&mut l).unwrap();
+        assert_eq!(l, "ERR line too long\n");
+        let mut rest = String::new();
+        let n = r.read_line(&mut rest).unwrap();
+        assert_eq!(n, 0, "connection should close after the ERR, got {rest:?}");
+        h.stop();
+    }
+
+    /// Regression: the over-capacity ERR reply is written from the
+    /// accept thread. A peer that never reads must not stall it: new
+    /// connection attempts keep being answered promptly.
+    #[test]
+    fn non_reading_overcap_peer_does_not_stall_accept_loop() {
+        let mut c = Coordinator::new();
+        c.register(
+            "neg",
+            Box::new(Neg),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 32,
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        );
+        let c = Arc::new(c);
+        let h = serve_with(
+            Arc::clone(&c),
+            "127.0.0.1:0",
+            ServerConfig {
+                max_conns: 1,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        // fill the cap with one live connection
+        let mut live = TcpStream::connect(h.addr).unwrap();
+        live.write_all(b"PING\n").unwrap();
+        let mut lr = BufReader::new(live.try_clone().unwrap());
+        let mut l = String::new();
+        lr.read_line(&mut l).unwrap();
+        assert_eq!(l, "PONG\n");
+        // several over-cap peers that never read their ERR reply
+        let _silent: Vec<TcpStream> = (0..4)
+            .map(|_| TcpStream::connect(h.addr).unwrap())
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // the accept loop must still answer a reading client promptly
+        let t0 = std::time::Instant::now();
+        let s = TcpStream::connect(h.addr).unwrap();
+        let mut r = BufReader::new(s);
+        let mut l = String::new();
+        r.read_line(&mut l).unwrap();
+        assert!(l.starts_with("ERR") && l.contains("capacity"), "{l:?}");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "accept loop stalled for {:?} behind non-reading peers",
+            t0.elapsed()
+        );
+        // and the live connection still serves
+        live.write_all(b"INFER neg 1 2\n").unwrap();
+        let mut ok = String::new();
+        lr.read_line(&mut ok).unwrap();
+        assert_eq!(ok, "OK -1 -2\n");
+        h.stop();
+    }
+
+    /// `DEADLINE` rides the wire end to end: a request whose budget
+    /// expires while queued behind a slow batch gets
+    /// `ERR deadline exceeded`; a generous budget succeeds.
+    #[test]
+    fn deadline_attribute_over_tcp() {
+        struct SlowNeg;
+        impl Engine for SlowNeg {
+            fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+                std::thread::sleep(std::time::Duration::from_millis(80));
+                Ok(x.map(|v| -v))
+            }
+            fn input_dim(&self) -> usize {
+                2
+            }
+            fn output_dim(&self) -> usize {
+                2
+            }
+        }
+        let mut c = Coordinator::new();
+        c.register(
+            "slow",
+            Box::new(SlowNeg),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: std::time::Duration::from_micros(1),
+                queue_cap: 32,
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        );
+        let c = Arc::new(c);
+        let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        let addr = h.addr;
+        // occupy the single worker for ~80 ms
+        let filler = std::thread::spawn(move || roundtrip(addr, "INFER slow 1 2"));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        // 20 ms budget expires long before the worker frees up
+        let shed = roundtrip(h.addr, "INFER slow DEADLINE 20 3 4");
+        assert_eq!(shed, "ERR deadline exceeded\n");
+        assert!(filler.join().unwrap().starts_with("OK "));
+        // a generous budget succeeds
+        let ok = roundtrip(h.addr, "INFER slow DEADLINE 5000 1 2");
+        assert_eq!(ok, "OK -1 -2\n");
+        let vm = c.obs.variant("slow");
+        assert_eq!(vm.deadline_expired.get(), 1);
+        assert_eq!(vm.errors.get(), 0);
+        assert!(vm.accounted(), "{}", vm.snapshot());
         h.stop();
     }
 }

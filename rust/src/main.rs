@@ -4,7 +4,7 @@
 //! butterfly-net experiment <id>|all [--quick] [--seed N] [--out results]
 //! butterfly-net serve [--addr 127.0.0.1:7070] [--config cfg.toml] [--set k=v]
 //!                     [--store DIR] [--metrics-interval SECS] [--slow-ms MS]
-//!                     [--log-level debug|info|warn|error]
+//!                     [--log-level debug|info|warn|error] [--chaos]
 //! butterfly-net save [--store DIR] [--name m] [--kind butterfly-head]
 //!                    [--n1 64] [--n2 32] [--train-steps 200] [--seed N]
 //! butterfly-net swap <variant> <name[@vN]> [--addr 127.0.0.1:7070]
@@ -23,7 +23,10 @@ use anyhow::{anyhow, bail, Result};
 use butterfly_net::butterfly::{Butterfly, TruncatedButterfly};
 use butterfly_net::cli::Args;
 use butterfly_net::config::Config;
-use butterfly_net::coordinator::{serve, BatcherConfig, Coordinator, NativeHeadEngine, PjrtEngine};
+use butterfly_net::coordinator::{
+    serve, BatcherConfig, ChaosConfig, Coordinator, Engine, FaultyEngine, NativeHeadEngine,
+    PjrtEngine, RetryPolicy,
+};
 use butterfly_net::experiments::{self, ExpContext};
 use butterfly_net::linalg::Mat;
 use butterfly_net::model::{fit_head_to_teacher, Head};
@@ -112,6 +115,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "metrics-interval",
         "slow-ms",
         "log-level",
+        "chaos",
     ])?;
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_file(p)?,
@@ -136,22 +140,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_else(|| cfg.get_str("server.addr", "127.0.0.1:7070"));
     let n1 = cfg.get_usize("model.n1", 1024);
     let n2 = cfg.get_usize("model.n2", 512);
+    let retry_default = RetryPolicy::default();
     let bcfg = BatcherConfig {
         max_batch: cfg.get_usize("server.max_batch", 32),
         max_wait: std::time::Duration::from_micros(cfg.get_usize("server.max_wait_us", 2000) as u64),
         queue_cap: cfg.get_usize("server.queue_cap", 1024),
         workers: cfg.get_usize("server.workers", BatcherConfig::default().workers),
+        retry: RetryPolicy {
+            max_retries: cfg.get_usize("server.retries", retry_default.max_retries),
+            backoff: std::time::Duration::from_millis(
+                cfg.get_usize("server.backoff_ms", retry_default.backoff.as_millis() as usize)
+                    as u64,
+            ),
+            max_backoff: std::time::Duration::from_millis(cfg.get_usize(
+                "server.max_backoff_ms",
+                retry_default.max_backoff.as_millis() as usize,
+            ) as u64),
+        },
     };
+    // --chaos wraps every engine in a fault injector so the retry and
+    // deadline paths can be exercised against a live server. Tuned via
+    // the chaos.* config keys; off in normal operation.
+    let chaos = args.flag("chaos").then(|| ChaosConfig {
+        fail_prob: cfg.get_f64("chaos.fail_prob", 0.2),
+        fail_every: None,
+        latency: Some((
+            std::time::Duration::from_millis(cfg.get_usize("chaos.latency_min_ms", 0) as u64),
+            std::time::Duration::from_millis(cfg.get_usize("chaos.latency_max_ms", 50) as u64),
+        )),
+        seed: cfg.get_i64("chaos.seed", 0xC4A0) as u64,
+    });
+    let wrap = |e: Box<dyn Engine>| -> Box<dyn Engine> {
+        match &chaos {
+            Some(c) => Box::new(FaultyEngine::new(e, c.clone())),
+            None => e,
+        }
+    };
+    if let Some(c) = &chaos {
+        event::warn("coordinator.chaos")
+            .msg("fault injection ACTIVE on all variants")
+            .field("fail_prob", c.fail_prob)
+            .field("seed", c.seed)
+            .emit();
+    }
     let mut rng = Rng::seed_from_u64(cfg.get_i64("model.seed", 0) as u64);
     let mut coordinator = Coordinator::new();
     coordinator.register(
         "dense",
-        Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng))),
+        wrap(Box::new(NativeHeadEngine::new(Head::dense(n1, n2, &mut rng)))),
         bcfg.clone(),
     );
     coordinator.register(
         "butterfly",
-        Box::new(NativeHeadEngine::new(Head::butterfly(n1, n2, &mut rng))),
+        wrap(Box::new(NativeHeadEngine::new(Head::butterfly(
+            n1, n2, &mut rng,
+        )))),
         bcfg.clone(),
     );
     // Checkpoint-backed variants: every entry of the model store is
@@ -161,6 +204,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("store")
         .map(String::from)
         .or_else(|| cfg.get_str_opt("store.dir"));
+    // Store-backed variants stay unwrapped even under --chaos: they
+    // are the hot-swap targets, and swapping a clean checkpoint into a
+    // faulting variant is exactly the recovery drill the harness runs.
     if let Some(dir) = &store_dir {
         let registry = ModelRegistry::open(dir)?;
         let n = coordinator.register_store(&registry, bcfg.clone())?;
@@ -173,7 +219,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(rt) => match build_pjrt_classifier_engines(&rt) {
                 Ok(engines) => {
                     for (name, eng) in engines {
-                        coordinator.register(&name, eng, bcfg.clone());
+                        coordinator.register(&name, wrap(eng), bcfg.clone());
                     }
                 }
                 Err(e) => event::warn("coordinator.pjrt")
@@ -214,7 +260,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         handle.addr,
         coordinator.variant_names().join(", ")
     );
-    println!("protocol: INFER <variant> <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | VARIANTS | PING");
+    println!("protocol: INFER <variant> [DEADLINE <ms>] <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | VARIANTS | PING");
     if args.flag("once") {
         // test hook: serve briefly then exit cleanly
         std::thread::sleep(std::time::Duration::from_millis(200));

@@ -99,6 +99,8 @@ impl Obs {
                 .field("responses", vm.responses.get())
                 .field("errors", vm.errors.get())
                 .field("rejected", vm.rejected.get())
+                .field("deadline_expired", vm.deadline_expired.get())
+                .field("retries", vm.retries.get())
                 .field("swaps", vm.swaps.get())
                 .field("queue_depth", vm.queue_depth.get())
                 .field("p50_us", vm.latency.quantile(0.5).as_micros())
@@ -132,6 +134,7 @@ mod tests {
             engine_us: 10,
             total_us: 20,
             batch: 2,
+            retries: 0,
             ok: true,
         });
         let recent = obs.traces.recent(1);

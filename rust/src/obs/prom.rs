@@ -56,6 +56,20 @@ pub fn render(reg: &MetricsRegistry) -> String {
     );
     counter_family(
         &mut out,
+        "bfly_deadline_expired_total",
+        "Requests shed because their deadline passed before dispatch.",
+        &all,
+        |v| v.deadline_expired.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_retries_total",
+        "Engine batch retries after transient failures.",
+        &all,
+        |v| v.retries.get(),
+    );
+    counter_family(
+        &mut out,
         "bfly_swaps_total",
         "Engine hot-swaps completed.",
         &all,
@@ -193,6 +207,8 @@ mod tests {
         d.requests.add(4);
         d.responses.add(3);
         d.rejected.inc();
+        d.deadline_expired.add(2);
+        d.retries.add(5);
         d.queue_depth.set(2);
         d.batches.record(3);
         d.latency.record(Duration::from_micros(3));
@@ -212,6 +228,8 @@ mod tests {
         assert!(text.contains("# TYPE bfly_latency_us histogram"));
         assert!(text.contains("bfly_requests_total{variant=\"dense\"} 4"));
         assert!(text.contains("bfly_rejected_total{variant=\"dense\"} 1"));
+        assert!(text.contains("bfly_deadline_expired_total{variant=\"dense\"} 2"));
+        assert!(text.contains("bfly_retries_total{variant=\"dense\"} 5"));
         assert!(text.contains("bfly_queue_depth{variant=\"dense\"} 2"));
         // idle variant renders zeros, including a histogram skeleton
         assert!(text.contains("bfly_requests_total{variant=\"butterfly\"} 0"));

@@ -5,8 +5,8 @@
 //!
 //! Requests that never reach a variant (unknown-variant lookups) are
 //! accounted to the reserved [`UNROUTED`] variant so the per-variant
-//! invariant `requests == responses + rejected + errors` always
-//! reconciles.
+//! invariant `requests == responses + rejected + errors +
+//! deadline_expired` always reconciles.
 
 use super::trace::TraceRing;
 use crate::metrics::{BatchStats, Counter, Gauge, LatencyHistogram};
@@ -27,6 +27,13 @@ pub struct VariantMetrics {
     pub responses: Counter,
     pub errors: Counter,
     pub rejected: Counter,
+    /// Requests shed by the batcher because their deadline had already
+    /// passed before dispatch (`ERR deadline exceeded`). Disjoint from
+    /// `rejected` (backpressure) and `errors` (engine failures).
+    pub deadline_expired: Counter,
+    /// Engine retry attempts (each re-run of a batch after a transient
+    /// failure counts once; not part of the accounting invariant).
+    pub retries: Counter,
     /// Engine hot-swaps completed by this variant's batcher.
     pub swaps: Counter,
     /// Jobs currently queued (submitted, not yet dispatched).
@@ -49,6 +56,8 @@ impl VariantMetrics {
             responses: Counter::default(),
             errors: Counter::default(),
             rejected: Counter::default(),
+            deadline_expired: Counter::default(),
+            retries: Counter::default(),
             swaps: Counter::default(),
             queue_depth: Gauge::default(),
             latency: LatencyHistogram::new(),
@@ -58,17 +67,23 @@ impl VariantMetrics {
         }
     }
 
-    /// Does `requests == responses + rejected + errors` hold right now?
-    /// (Meaningful only when no request is in flight.)
+    /// Does `requests == responses + rejected + errors +
+    /// deadline_expired` hold right now? (Meaningful only when no
+    /// request is in flight.)
     pub fn accounted(&self) -> bool {
-        self.requests.get() == self.responses.get() + self.rejected.get() + self.errors.get()
+        self.requests.get()
+            == self.responses.get()
+                + self.rejected.get()
+                + self.errors.get()
+                + self.deadline_expired.get()
     }
 
     /// Multi-line human snapshot of this variant.
     pub fn snapshot(&self) -> String {
         let (nb, mean_b, max_b) = self.batches.summary();
         format!(
-            "variant={} requests={} responses={} errors={} rejected={} swaps={} queue_depth={}\n\
+            "variant={} requests={} responses={} errors={} rejected={} swaps={} queue_depth={} \
+             deadline_expired={} retries={}\n\
              variant={} {}\n\
              variant={} {}\n\
              variant={} {}\n\
@@ -80,6 +95,8 @@ impl VariantMetrics {
             self.rejected.get(),
             self.swaps.get(),
             self.queue_depth.get(),
+            self.deadline_expired.get(),
+            self.retries.get(),
             self.name,
             self.latency.snapshot("latency"),
             self.name,
@@ -102,6 +119,8 @@ pub struct Totals {
     pub responses: u64,
     pub errors: u64,
     pub rejected: u64,
+    pub deadline_expired: u64,
+    pub retries: u64,
     pub swaps: u64,
     pub batches: u64,
     pub batch_items: u64,
@@ -163,6 +182,8 @@ impl MetricsRegistry {
             t.responses += vm.responses.get();
             t.errors += vm.errors.get();
             t.rejected += vm.rejected.get();
+            t.deadline_expired += vm.deadline_expired.get();
+            t.retries += vm.retries.get();
             t.swaps += vm.swaps.get();
             let (nb, _, max_b) = vm.batches.summary();
             t.batches += nb;
@@ -229,6 +250,25 @@ mod tests {
         assert_eq!(t.max_batch, 7);
         assert!(a.accounted());
         assert!(b.accounted());
+    }
+
+    #[test]
+    fn deadline_expired_is_its_own_accounting_term() {
+        let r = registry();
+        let vm = r.variant("d");
+        vm.requests.add(4);
+        vm.responses.inc();
+        vm.rejected.inc();
+        vm.errors.inc();
+        assert!(!vm.accounted(), "one request still unaccounted");
+        vm.deadline_expired.inc();
+        assert!(vm.accounted(), "deadline_expired closes the books");
+        vm.retries.add(3); // retries are informational, not a term
+        assert!(vm.accounted());
+        let t = r.totals();
+        assert_eq!(t.deadline_expired, 1);
+        assert_eq!(t.retries, 3);
+        assert!(vm.snapshot().contains("deadline_expired=1 retries=3"));
     }
 
     #[test]

@@ -41,6 +41,9 @@ pub struct TraceEvent {
     pub total_us: u64,
     /// Size of the batch this request rode in.
     pub batch: u32,
+    /// Engine retry attempts this request's batch consumed (0 = first
+    /// attempt succeeded or retries disabled).
+    pub retries: u32,
     pub ok: bool,
 }
 
@@ -53,6 +56,7 @@ pub struct CompletedTrace {
     pub engine_us: u64,
     pub total_us: u64,
     pub batch: u32,
+    pub retries: u32,
     pub ok: bool,
 }
 
@@ -66,6 +70,7 @@ struct Slot {
     engine_us: AtomicU64,
     total_us: AtomicU64,
     batch: AtomicU32,
+    retries: AtomicU32,
     ok: AtomicU32,
 }
 
@@ -79,6 +84,7 @@ impl Slot {
             engine_us: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
             batch: AtomicU32::new(0),
+            retries: AtomicU32::new(0),
             ok: AtomicU32::new(0),
         }
     }
@@ -149,6 +155,7 @@ impl TraceRing {
         slot.engine_us.store(t.engine_us, Ordering::Relaxed);
         slot.total_us.store(t.total_us, Ordering::Relaxed);
         slot.batch.store(t.batch, Ordering::Relaxed);
+        slot.retries.store(t.retries, Ordering::Relaxed);
         slot.ok.store(t.ok as u32, Ordering::Relaxed);
         slot.seq.store(ticket * 2 + 2, Ordering::Release);
     }
@@ -176,6 +183,7 @@ impl TraceRing {
                 engine_us: slot.engine_us.load(Ordering::Relaxed),
                 total_us: slot.total_us.load(Ordering::Relaxed),
                 batch: slot.batch.load(Ordering::Relaxed),
+                retries: slot.retries.load(Ordering::Relaxed),
                 ok: slot.ok.load(Ordering::Relaxed) != 0,
             };
             // Re-check: if a writer claimed the slot while we copied,
@@ -196,14 +204,15 @@ impl TraceRing {
         let mut out = String::new();
         for t in traces {
             out.push_str(&format!(
-                "#{} variant={} ok={} total_us={} queue_us={} engine_us={} batch={}\n",
+                "#{} variant={} ok={} total_us={} queue_us={} engine_us={} batch={} retries={}\n",
                 t.id,
                 t.variant,
                 t.ok as u8,
                 t.total_us,
                 t.queue_wait_us,
                 t.engine_us,
-                t.batch
+                t.batch,
+                t.retries
             ));
         }
         out.pop(); // protocol Text responses add the trailing newline
@@ -230,6 +239,7 @@ mod tests {
             engine_us: 20,
             total_us: total,
             batch: 4,
+            retries: 0,
             ok: true,
         }
     }
@@ -282,6 +292,7 @@ mod tests {
                             engine_us: i,
                             total_us: 2 * i,
                             batch: 1,
+                            retries: 0,
                             ok: true,
                         });
                     }
@@ -305,6 +316,7 @@ mod tests {
         r.push(ev(&r, 42, tag, 812));
         let s = r.render(5);
         assert!(s.starts_with("#42 variant=net ok=1 total_us=812"), "{s}");
+        assert!(s.contains("retries=0"), "{s}");
     }
 
     #[test]

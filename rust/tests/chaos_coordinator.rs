@@ -1,0 +1,257 @@
+//! Chaos suite: the accounting invariant
+//! `requests == responses + rejected + errors + deadline_expired`
+//! must hold under injected engine failures, latency spikes, request
+//! deadlines, and concurrent hot swaps — before and after shutdown.
+//!
+//! These tests run in their own CI step (`cargo test -q --test
+//! chaos_coordinator`); the tier-1 runs skip them by the `chaos_`
+//! name prefix.
+
+use butterfly_net::coordinator::{
+    BatcherConfig, ChaosConfig, Coordinator, Engine, FaultyEngine, RetryPolicy,
+};
+use butterfly_net::linalg::Mat;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+struct Mul(f64);
+impl Engine for Mul {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        Ok(x.map(|v| self.0 * v))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// Engine that records the first coordinate of every row it is asked
+/// to run — the witness that shed requests never reach an engine.
+#[derive(Clone)]
+struct Probe {
+    seen: Arc<Mutex<Vec<f64>>>,
+}
+impl Engine for Probe {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        let mut seen = self.seen.lock().unwrap();
+        for r in 0..x.rows() {
+            seen.push(x.row(r)[0]);
+        }
+        Ok(x.clone())
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// 20% injected failures, 50–200 ms latency spikes, mixed deadlines,
+/// backpressure-sized queue, and 10 hot swaps concurrent with the
+/// traffic: every request is accounted for exactly once, before and
+/// after shutdown.
+#[test]
+fn chaos_accounting_under_failures_latency_and_swaps() {
+    let chaos = ChaosConfig {
+        fail_prob: 0.2,
+        fail_every: None,
+        latency: Some((Duration::from_millis(50), Duration::from_millis(200))),
+        seed: 0xBEEF,
+    };
+    let mut c = Coordinator::new();
+    c.register(
+        "m",
+        Box::new(FaultyEngine::new(Box::new(Mul(2.0)), chaos.clone())),
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 4, // small on purpose: rejects must be possible
+            workers: 4,
+            retry: RetryPolicy {
+                max_retries: 2,
+                backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(20),
+            },
+        },
+    );
+    let c = Arc::new(c);
+    let vm = c.obs.variant("m");
+
+    const THREADS: usize = 8;
+    const REQS: usize = 20;
+    let mut clients = Vec::new();
+    for t in 0..THREADS {
+        let c = Arc::clone(&c);
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut shed, mut other) = (0usize, 0usize, 0usize);
+            for i in 0..REQS {
+                let x = (t * REQS + i) as f64;
+                // every third request carries a tight deadline that
+                // the latency spikes will often blow through
+                let patience = (i % 3 == 0).then(|| Duration::from_millis(30));
+                match c.infer_deadline("m", vec![x, -x], patience) {
+                    Ok(y) => {
+                        assert_eq!(y, vec![2.0 * x, -2.0 * x]);
+                        ok += 1;
+                    }
+                    Err(e) if e.to_string() == "deadline exceeded" => shed += 1,
+                    Err(_) => other += 1, // backpressure or exhausted retries
+                }
+            }
+            (ok, shed, other)
+        }));
+    }
+    // 10 hot swaps racing the traffic, each installing a fresh chaotic
+    // engine so the failure pressure never lets up
+    let swapper = {
+        let c = Arc::clone(&c);
+        let chaos = chaos.clone();
+        std::thread::spawn(move || {
+            for k in 0..10 {
+                std::thread::sleep(Duration::from_millis(30));
+                let e = FaultyEngine::new(
+                    Box::new(Mul(2.0)),
+                    ChaosConfig {
+                        seed: chaos.seed + k,
+                        ..chaos.clone()
+                    },
+                );
+                c.swap_variant("m", Box::new(e)).unwrap();
+            }
+        })
+    };
+    let mut totals = (0usize, 0usize, 0usize);
+    for h in clients {
+        let (ok, shed, other) = h.join().unwrap();
+        totals = (totals.0 + ok, totals.1 + shed, totals.2 + other);
+    }
+    swapper.join().unwrap();
+
+    let n = (THREADS * REQS) as u64;
+    assert_eq!(totals.0 + totals.1 + totals.2, n as usize);
+    assert_eq!(vm.requests.get(), n);
+    assert_eq!(vm.responses.get(), totals.0 as u64);
+    assert_eq!(vm.deadline_expired.get(), totals.1 as u64);
+    assert_eq!(vm.rejected.get() + vm.errors.get(), totals.2 as u64);
+    assert_eq!(vm.swaps.get(), 10);
+    assert!(vm.accounted(), "pre-shutdown: {}", vm.snapshot());
+    assert_eq!(vm.queue_depth.get(), 0, "queue must drain");
+
+    let c = Arc::try_unwrap(c).ok().expect("all clones dropped");
+    c.shutdown();
+    assert_eq!(vm.requests.get(), n, "shutdown must not lose requests");
+    assert!(vm.accounted(), "post-shutdown: {}", vm.snapshot());
+}
+
+/// A request whose deadline passes while it is queued is shed by the
+/// dispatcher and must never reach `Engine::infer_batch` — even when
+/// the engine ahead of it is slowed by injected latency.
+#[test]
+fn chaos_expired_requests_never_reach_engine() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let probe = Probe {
+        seen: Arc::clone(&seen),
+    };
+    // latency injection sits in front of the probe, so the probe only
+    // records rows the dispatcher actually let through
+    let slow = FaultyEngine::new(
+        Box::new(probe),
+        ChaosConfig {
+            latency: Some((Duration::from_millis(200), Duration::from_millis(250))),
+            ..ChaosConfig::default()
+        },
+    );
+    let mut c = Coordinator::new();
+    c.register(
+        "p",
+        Box::new(slow),
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 32,
+            workers: 1,
+            ..BatcherConfig::default()
+        },
+    );
+    let c = Arc::new(c);
+    // occupy the single worker for ≥ 200 ms
+    let filler = {
+        let c = Arc::clone(&c);
+        std::thread::spawn(move || c.infer("p", vec![0.5, 0.5]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    // five concurrent markers queue up behind the filler; their 25 ms
+    // budgets all expire long before the worker frees up
+    let markers: Vec<_> = (0..5)
+        .map(|i| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                let x = 100.0 + i as f64;
+                c.infer_deadline("p", vec![x, x], Some(Duration::from_millis(25)))
+            })
+        })
+        .collect();
+    for m in markers {
+        let err = m.join().unwrap().unwrap_err();
+        assert_eq!(err.to_string(), "deadline exceeded");
+    }
+    assert_eq!(filler.join().unwrap(), vec![0.5, 0.5]);
+    let vm = c.obs.variant("p");
+    assert_eq!(vm.deadline_expired.get(), 5);
+    assert_eq!(vm.errors.get(), 0);
+    assert!(vm.accounted(), "{}", vm.snapshot());
+    assert_eq!(
+        *seen.lock().unwrap(),
+        vec![0.5],
+        "expired markers must never reach the engine"
+    );
+}
+
+/// A batch that fails and backs off across a hot swap must retry on
+/// the *post-swap* engine: an always-failing engine is swapped out for
+/// a healthy one mid-retry and the request still succeeds.
+#[test]
+fn chaos_retry_repins_to_post_swap_engine() {
+    let broken = FaultyEngine::new(
+        Box::new(Mul(2.0)),
+        ChaosConfig {
+            fail_prob: 1.0,
+            ..ChaosConfig::default()
+        },
+    );
+    let mut c = Coordinator::new();
+    c.register(
+        "r",
+        Box::new(broken),
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 8,
+            workers: 1,
+            retry: RetryPolicy {
+                max_retries: 6,
+                backoff: Duration::from_millis(30),
+                max_backoff: Duration::from_millis(60),
+            },
+        },
+    );
+    let c = Arc::new(c);
+    let req = {
+        let c = Arc::clone(&c);
+        std::thread::spawn(move || c.infer("r", vec![5.0, -1.0]))
+    };
+    // while the first attempt fails and backs off, swap in an engine
+    // that (a) works and (b) computes something visibly different
+    std::thread::sleep(Duration::from_millis(10));
+    c.swap_variant("r", Box::new(Mul(3.0))).unwrap();
+    let out = req.join().unwrap().expect("retry should land on the healthy engine");
+    assert_eq!(out, vec![15.0, -3.0], "must be the post-swap engine's answer");
+    let vm = c.obs.variant("r");
+    assert!(vm.retries.get() >= 1, "at least one retry must have happened");
+    assert_eq!(vm.errors.get(), 0);
+    assert_eq!(vm.responses.get(), 1);
+    assert!(vm.accounted(), "{}", vm.snapshot());
+}

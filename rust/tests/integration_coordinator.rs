@@ -18,6 +18,7 @@ fn bcfg() -> BatcherConfig {
         max_wait: Duration::from_millis(1),
         queue_cap: 512,
         workers: 2,
+        ..BatcherConfig::default()
     }
 }
 

@@ -31,6 +31,7 @@ fn start() -> (Arc<Coordinator>, butterfly_net::coordinator::ServerHandle) {
         max_wait: Duration::from_millis(1),
         queue_cap: 64,
         workers: 2,
+        ..BatcherConfig::default()
     };
     c.register("dense", Box::new(Echo(2)), cfg.clone());
     c.register("butterfly", Box::new(Echo(2)), cfg);

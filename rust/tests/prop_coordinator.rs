@@ -89,6 +89,7 @@ fn conservation_and_batch_bound() {
                 max_wait: Duration::from_micros(200),
                 queue_cap: s.queue_cap,
                 workers: s.workers,
+                ..BatcherConfig::default()
             },
         );
         let b = Arc::new(b);
@@ -200,6 +201,7 @@ fn router_conservation_across_variants() {
                         max_wait: Duration::from_micros(100),
                         queue_cap: 64,
                         workers: 2,
+                        ..BatcherConfig::default()
                     },
                 );
             }
@@ -282,6 +284,7 @@ fn per_variant_accounting_under_mixed_load() {
                     max_wait: Duration::from_micros(100),
                     queue_cap,
                     workers: 2,
+                    ..BatcherConfig::default()
                 },
             );
             let c = Arc::new(c);
@@ -406,6 +409,7 @@ fn hot_swap_conserves_requests_and_switches_cleanly() {
                     max_wait: Duration::from_micros(150),
                     queue_cap: 4096, // large: this property isolates swap, not backpressure
                     workers: 2,
+                    ..BatcherConfig::default()
                 },
             );
             let c = Arc::new(c);
@@ -516,6 +520,7 @@ fn deadline_bounds_queue_wait() {
                     max_wait: Duration::from_millis(wait_ms),
                     queue_cap: 16,
                     workers: 1,
+                    ..BatcherConfig::default()
                 },
             );
             let t0 = std::time::Instant::now();

@@ -45,6 +45,7 @@ fn submit_swap_shutdown_stress_holds_invariants() {
             max_wait: Duration::from_micros(100),
             queue_cap: 8, // small on purpose: rejects must occur
             workers: 2,
+            ..BatcherConfig::default()
         },
     );
     let c = Arc::new(c);
