@@ -42,8 +42,8 @@ fn main() -> Result<()> {
     let teacher = Mat::gaussian(N_OUT, N_IN, 1.0 / (N_IN as f64).sqrt(), &mut rng);
     let mut dense = Head::dense(N_IN, N_OUT, &mut rng);
     let mut bfly = Head::butterfly(N_IN, N_OUT, &mut rng);
-    let mse_d = fit_head_to_teacher(&mut dense, &teacher, 300, 32, &mut rng);
-    let mse_b = fit_head_to_teacher(&mut bfly, &teacher, 300, 32, &mut rng);
+    let mse_d = fit_head_to_teacher(&mut dense, &teacher, 300, 32, &mut rng)?;
+    let mse_b = fit_head_to_teacher(&mut bfly, &teacher, 300, 32, &mut rng)?;
     println!(
         "  dense     mse {mse_d:.5}  ({} params)\n  butterfly mse {mse_b:.5}  ({} params)",
         dense.num_params(),

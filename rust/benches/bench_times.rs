@@ -28,11 +28,11 @@ fn main() {
         });
         train.case(&format!("{label} dense"), batch, || {
             let (_, tape) = dense.forward_tape(&x);
-            black_box(dense.vjp(&tape, &cot));
+            black_box(dense.vjp(&tape, &cot).unwrap());
         });
         train.case(&format!("{label} butterfly"), batch, || {
             let (_, tape) = bfly.forward_tape(&x);
-            black_box(bfly.vjp(&tape, &cot));
+            black_box(bfly.vjp(&tape, &cot).unwrap());
         });
     }
     infer.report();

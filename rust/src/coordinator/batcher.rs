@@ -31,14 +31,31 @@
 //! time into its variant's [`VariantMetrics`], publishes a completed
 //! trace per request into the [`TraceRing`], and emits structured
 //! events on swap, backpressure rejection, retry and engine error.
+//!
+//! Self-healing: `Engine::infer_batch` runs under a `catch_unwind`
+//! net, so a panicking engine answers its batch with `ERR engine
+//! panic` (counted in the `panics` counter, its requests in `errors`)
+//! instead of killing the process. The worker that caught the panic
+//! exits — its engine state is suspect — and a per-variant
+//! *supervisor* thread respawns a replacement, so the pool never
+//! shrinks under a panic storm and no worker is ever lost silently
+//! (a drop-guard death notice fires even if a panic escapes the net).
+//! The supervisor owns every generation of worker `JoinHandle`, so
+//! `shutdown`/`Drop` join respawned workers, not just the originals.
+//! Each batcher also owns its variant's [`Health`] circuit breaker;
+//! the batcher thread resets it on hot swap (see
+//! [`Health::on_swap`]), and the coordinator drives admission.
 
 use super::engine::Engine;
+use super::health::{BreakerConfig, Health};
 use crate::linalg::Mat;
 use crate::obs::event;
 use crate::obs::trace::{next_trace_id, TraceEvent, TraceRing};
 use crate::obs::VariantMetrics;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -57,6 +74,10 @@ pub struct BatcherConfig {
     /// Retry policy for transient engine failures (default: no
     /// retries, preserving fail-fast semantics).
     pub retry: RetryPolicy,
+    /// Circuit-breaker policy for this variant (default: disabled,
+    /// preserving always-admit semantics for library embedders;
+    /// `serve` enables [`BreakerConfig::standard`]).
+    pub breaker: BreakerConfig,
 }
 
 impl Default for BatcherConfig {
@@ -69,6 +90,7 @@ impl Default for BatcherConfig {
             // oversubscribing the data-parallel kernel threads.
             workers: crate::linalg::num_threads().clamp(1, 4),
             retry: RetryPolicy::default(),
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -163,7 +185,142 @@ enum Msg {
 pub struct Batcher {
     tx: Option<SyncSender<Msg>>,
     vm: Arc<VariantMetrics>,
+    health: Arc<Health>,
     handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Everything an engine-pool worker needs, shared so the supervisor
+/// can hand the same context to respawned replacements.
+struct WorkerCtx {
+    name: String,
+    wrx: Arc<Mutex<Receiver<WorkItem>>>,
+    current: Arc<Mutex<Arc<dyn Engine>>>,
+    retry: RetryPolicy,
+    vm: Arc<VariantMetrics>,
+    traces: Arc<TraceRing>,
+}
+
+/// Why a worker thread ended, as reported to its supervisor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WorkerExit {
+    /// Work channel closed: normal shutdown drain. Not replaced.
+    Drained,
+    /// Gone after an engine panic (caught or escaped): replaced.
+    Died,
+}
+
+/// Lock that tolerates poisoning: a worker that panicked elsewhere
+/// must not take its siblings (or its own respawned replacement) down
+/// with a secondary `PoisonError` unwrap.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// Pull batches until the work channel closes or a panic poisons this
+/// worker's engine run.
+fn worker_loop(ctx: &WorkerCtx) -> WorkerExit {
+    loop {
+        // Hold the lock only while receiving, so idle workers can
+        // grab the next batch while this one runs the engine.
+        let item = match lock_ignore_poison(&ctx.wrx).recv() {
+            Ok(it) => it,
+            Err(_) => return WorkerExit::Drained, // pool channel closed
+        };
+        let panicked = dispatch(
+            &item.engine,
+            &ctx.current,
+            &ctx.retry,
+            &item.jobs,
+            &ctx.vm,
+            &ctx.traces,
+        );
+        if panicked {
+            // The batch was answered (`ERR engine panic`), but this
+            // worker's state is suspect: exit and let the supervisor
+            // spawn a clean replacement.
+            return WorkerExit::Died;
+        }
+    }
+}
+
+fn spawn_worker(
+    ctx: Arc<WorkerCtx>,
+    id: usize,
+    notices: mpsc::Sender<WorkerExit>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("engine-{}-{id}", ctx.name))
+        .spawn(move || {
+            // Drop guard: the death notice reaches the supervisor on
+            // *every* exit path — including a panic that escapes the
+            // catch_unwind net around the engine — so a worker can
+            // never vanish silently.
+            struct Notice {
+                tx: mpsc::Sender<WorkerExit>,
+                exit: WorkerExit,
+            }
+            impl Drop for Notice {
+                fn drop(&mut self) {
+                    let _ = self.tx.send(self.exit);
+                }
+            }
+            let mut notice = Notice {
+                tx: notices,
+                exit: WorkerExit::Died,
+            };
+            notice.exit = worker_loop(&ctx);
+        })
+        .expect("spawn engine worker")
+}
+
+/// Spawn the initial pool and keep it at strength: a `Died` notice
+/// respawns a replacement worker (counted in `respawns`); a `Drained`
+/// notice retires one slot. When every slot has drained, join every
+/// generation of worker handle — so joining the supervisor means all
+/// accepted work is answered and no thread (original or respawned) is
+/// left behind.
+fn spawn_supervisor(ctx: Arc<WorkerCtx>, workers: usize) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("supervisor-{}", ctx.name))
+        .spawn(move || {
+            let (ntx, nrx) = mpsc::channel();
+            let mut handles: Vec<std::thread::JoinHandle<()>> = (0..workers)
+                .map(|i| spawn_worker(Arc::clone(&ctx), i, ntx.clone()))
+                .collect();
+            let mut live = workers;
+            let mut next_id = workers;
+            while live > 0 {
+                match nrx.recv() {
+                    Ok(WorkerExit::Drained) => live -= 1,
+                    Ok(WorkerExit::Died) => {
+                        ctx.vm.respawns.inc();
+                        event::warn("coordinator.supervisor")
+                            .field("variant", &ctx.vm.name)
+                            .field("respawns", ctx.vm.respawns.get())
+                            .msg("engine worker lost to a panic, respawning")
+                            .emit();
+                        handles.push(spawn_worker(Arc::clone(&ctx), next_id, ntx.clone()));
+                        next_id += 1;
+                    }
+                    // Unreachable: the supervisor holds `ntx` itself,
+                    // so the channel cannot fully disconnect.
+                    Err(_) => break,
+                }
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        })
+        .expect("spawn supervisor thread")
 }
 
 impl Batcher {
@@ -178,10 +335,13 @@ impl Batcher {
         let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_cap);
         let name = name.to_string();
         let vm2 = Arc::clone(&vm);
+        let health = Arc::new(Health::new(cfg.breaker.clone(), Arc::clone(&vm)));
+        let health2 = Arc::clone(&health);
         let handle = std::thread::Builder::new()
             .name(format!("batcher-{name}"))
             .spawn(move || {
                 let vm = vm2;
+                let health = health2;
                 // The current engine generation. The batcher thread is
                 // the only writer (swap installs); workers read it to
                 // re-pin retries after a hot swap.
@@ -190,32 +350,20 @@ impl Batcher {
                 // Engine pool: closed batches flow over a small bounded
                 // channel to `workers` executor threads. Bounding it
                 // keeps total admitted-but-unanswered work limited, so
-                // backpressure still bites at roughly queue_cap.
+                // backpressure still bites at roughly queue_cap. The
+                // supervisor owns the worker threads and replaces any
+                // that die to an engine panic.
                 let workers = cfg.workers.max(1);
                 let (wtx, wrx) = sync_channel::<WorkItem>(workers);
-                let wrx = Arc::new(Mutex::new(wrx));
-                let pool: Vec<std::thread::JoinHandle<()>> = (0..workers)
-                    .map(|i| {
-                        let wrx = Arc::clone(&wrx);
-                        let vm = Arc::clone(&vm);
-                        let traces = Arc::clone(&traces);
-                        let current = Arc::clone(&current);
-                        let retry = cfg.retry.clone();
-                        std::thread::Builder::new()
-                            .name(format!("engine-{name}-{i}"))
-                            .spawn(move || loop {
-                                // Hold the lock only while receiving, so
-                                // idle workers can grab the next batch
-                                // while this one runs the engine.
-                                let item = match wrx.lock().unwrap().recv() {
-                                    Ok(it) => it,
-                                    Err(_) => break, // pool channel closed
-                                };
-                                dispatch(&item.engine, &current, &retry, &item.jobs, &vm, &traces);
-                            })
-                            .expect("spawn engine worker")
-                    })
-                    .collect();
+                let ctx = Arc::new(WorkerCtx {
+                    name,
+                    wrx: Arc::new(Mutex::new(wrx)),
+                    current: Arc::clone(&current),
+                    retry: cfg.retry.clone(),
+                    vm: Arc::clone(&vm),
+                    traces,
+                });
+                let supervisor = spawn_supervisor(ctx, workers);
                 loop {
                     // Block for the first job of the next batch. After
                     // the submit side is dropped, recv keeps yielding
@@ -228,8 +376,9 @@ impl Batcher {
                         }
                         Ok(Msg::Swap(e, ack)) => {
                             // Queue empty ahead of the swap: install now.
-                            *current.lock().unwrap() = e;
+                            *lock_ignore_poison(&current) = e;
                             vm.swaps.inc();
+                            health.on_swap();
                             event::info("coordinator.swap")
                                 .field("variant", &vm.name)
                                 .msg("engine swapped (idle)")
@@ -267,7 +416,7 @@ impl Batcher {
                     // blocks when all workers are busy and the small
                     // work channel is full — that is the backpressure
                     // path that lets `submit` start rejecting.
-                    let pinned = Arc::clone(&*current.lock().unwrap());
+                    let pinned = Arc::clone(&*lock_ignore_poison(&current));
                     let _ = wtx.send(WorkItem {
                         jobs,
                         engine: pinned,
@@ -277,8 +426,9 @@ impl Batcher {
                     // after the swap message sees the new one. No
                     // request is ever dropped.
                     if let Some((e, ack)) = pending_swap {
-                        *current.lock().unwrap() = e;
+                        *lock_ignore_poison(&current) = e;
                         vm.swaps.inc();
+                        health.on_swap();
                         event::info("coordinator.swap")
                             .field("variant", &vm.name)
                             .msg("engine swapped (drain-and-replace)")
@@ -286,18 +436,18 @@ impl Batcher {
                         let _ = ack.try_send(());
                     }
                 }
-                // Close the pool channel and wait for in-flight batches,
-                // so joining the batcher thread implies every accepted
-                // request has been answered.
+                // Close the pool channel and wait for in-flight batches:
+                // the supervisor joins every worker generation, so
+                // joining the batcher thread implies every accepted
+                // request has been answered — even across respawns.
                 drop(wtx);
-                for h in pool {
-                    let _ = h.join();
-                }
+                let _ = supervisor.join();
             })
             .expect("spawn batcher thread");
         Batcher {
             tx: Some(tx),
             vm,
+            health,
             handle: Some(handle),
         }
     }
@@ -305,6 +455,12 @@ impl Batcher {
     /// This batcher's variant metrics (shared with the coordinator).
     pub fn metrics(&self) -> &Arc<VariantMetrics> {
         &self.vm
+    }
+
+    /// This variant's circuit breaker (shared with the coordinator,
+    /// which drives admission and outcome recording).
+    pub fn health(&self) -> &Arc<Health> {
+        &self.health
     }
 }
 
@@ -321,7 +477,13 @@ impl Batcher {
 ///    batch closed under, keeping drain-and-replace hot-swap exact;
 /// 3. on a transient failure, up to `retry.max_retries` further
 ///    attempts run after a capped, jittered backoff, each re-pinned to
-///    `current` so a retry after a hot swap runs on the new engine.
+///    `current` so a retry after a hot swap runs on the new engine;
+/// 4. a *panic* inside `Engine::infer_batch` is caught
+///    (`AssertUnwindSafe`; see the unwind-safety contract on
+///    [`Engine`]): every remaining job is answered `ERR engine panic`
+///    (`panics` counter, requests in `errors`), no retry is attempted
+///    — a panic is not a transient protocol failure — and `true` is
+///    returned so the calling worker recycles itself.
 fn dispatch(
     pinned: &Arc<dyn Engine>,
     current: &Mutex<Arc<dyn Engine>>,
@@ -329,7 +491,7 @@ fn dispatch(
     jobs: &[Job],
     vm: &VariantMetrics,
     traces: &TraceRing,
-) {
+) -> bool {
     let batch_size = jobs.len() as u32;
     vm.batches.record(jobs.len());
     let dispatched = Instant::now();
@@ -397,7 +559,7 @@ fn dispatch(
     let mut retries_used: u32 = 0;
     loop {
         if valid.is_empty() {
-            return;
+            return false;
         }
         let mut x = Mat::zeros(valid.len(), dim);
         for (r, (_, j)) in valid.iter().enumerate() {
@@ -408,13 +570,52 @@ fn dispatch(
         let engine: Arc<dyn Engine> = if retries_used == 0 {
             Arc::clone(pinned)
         } else {
-            Arc::clone(&*current.lock().unwrap())
+            Arc::clone(&*lock_ignore_poison(current))
         };
         let t_engine = Instant::now();
-        let outcome = engine.infer_batch(&x);
+        // Panic isolation: engines promise unwind safety (trait docs),
+        // so a panicking batch is caught and answered here instead of
+        // taking the worker — and with it, unanswered callers — down.
+        let caught = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&x)));
         let engine_elapsed = t_engine.elapsed();
         vm.engine_time.record(engine_elapsed);
         let engine_us = engine_elapsed.as_micros() as u64;
+        let outcome = match caught {
+            Ok(res) => res,
+            Err(payload) => {
+                vm.panics.inc();
+                vm.errors.add(valid.len() as u64);
+                event::error("coordinator.panic")
+                    .field("variant", &vm.name)
+                    .field("batch", valid.len())
+                    .field("retries", retries_used)
+                    .msg(format!(
+                        "engine panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                    .emit();
+                for (i, j) in &valid {
+                    traces.push(TraceEvent {
+                        id: j.id,
+                        tag: vm.trace_tag,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        total_us: j.enqueued.elapsed().as_micros() as u64,
+                        batch: batch_size,
+                        retries: retries_used,
+                        ok: false,
+                    });
+                    let _ = j.resp.try_send(JobResult {
+                        result: Err("engine panic".to_string()),
+                        trace_id: j.id,
+                        queue_wait_us: waits_us[*i],
+                        engine_us,
+                        batch_size,
+                    });
+                }
+                return true;
+            }
+        };
         match outcome {
             Ok(y) => {
                 for (r, (i, j)) in valid.iter().enumerate() {
@@ -436,7 +637,7 @@ fn dispatch(
                         batch_size,
                     });
                 }
-                return;
+                return false;
             }
             Err(e) if (retries_used as usize) < retry.max_retries => {
                 retries_used += 1;
@@ -495,7 +696,7 @@ fn dispatch(
                         batch_size,
                     });
                 }
-                return;
+                return false;
             }
         }
     }
@@ -1026,6 +1227,7 @@ mod tests {
                     backoff: Duration::from_millis(1),
                     max_backoff: Duration::from_millis(4),
                 },
+                ..BatcherConfig::default()
             },
         );
         let rx = b.submit(vec![7.0]).unwrap();
@@ -1062,6 +1264,7 @@ mod tests {
                     backoff: Duration::from_millis(1),
                     max_backoff: Duration::from_millis(2),
                 },
+                ..BatcherConfig::default()
             },
         );
         let rx = b.submit(vec![1.0]).unwrap();
@@ -1071,6 +1274,128 @@ mod tests {
         assert_eq!(vm.retries.get(), 1);
         assert_eq!(vm.errors.get(), 1);
         b.shutdown();
+    }
+
+    /// 1-dim engine that panics on rows whose first element is
+    /// negative, echoes otherwise.
+    struct Grenade;
+    impl Engine for Grenade {
+        fn infer_batch(&self, x: &Mat) -> Result<Mat> {
+            for r in 0..x.rows() {
+                assert!(x.row(r)[0] >= 0.0, "boom: negative input");
+            }
+            Ok(x.clone())
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn output_dim(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn panicking_batch_answers_callers_with_engine_panic() {
+        crate::testing::quiet_expected_panics();
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "g",
+            Box::new(Grenade),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_cap: 8,
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        );
+        let rx = b.submit(vec![-1.0]).unwrap();
+        let res = rx.recv().expect("caller must be answered, not hung");
+        assert_eq!(res.result.unwrap_err(), "engine panic");
+        let vm = obs.variant("g");
+        assert_eq!(vm.panics.get(), 1);
+        assert_eq!(vm.errors.get(), 1, "the panicked request lands in errors");
+        // the panicked request still produced a (failed) trace
+        assert!(obs.traces.recent(4).iter().any(|t| t.id == res.trace_id && !t.ok));
+        b.shutdown();
+    }
+
+    #[test]
+    fn supervisor_respawns_workers_after_panics() {
+        crate::testing::quiet_expected_panics();
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "g",
+            Box::new(Grenade),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_cap: 32,
+                workers: 1, // every panic kills the whole pool briefly
+                ..BatcherConfig::default()
+            },
+        );
+        // Alternate panicking and healthy requests: with a single
+        // worker, each healthy request after a panic proves the
+        // supervisor replaced the dead worker.
+        for round in 0..5 {
+            let bad = b.submit(vec![-1.0]).unwrap();
+            assert_eq!(bad.recv().unwrap().result.unwrap_err(), "engine panic");
+            let good = b.submit(vec![round as f64]).unwrap();
+            assert_eq!(
+                good.recv().unwrap().result.unwrap()[0],
+                round as f64,
+                "round {round}: pool must survive the panic"
+            );
+        }
+        let vm = obs.variant("g");
+        assert_eq!(vm.panics.get(), 5);
+        assert_eq!(vm.respawns.get(), 5);
+        b.shutdown();
+    }
+
+    /// Shutdown with panics still in the pipeline must join every
+    /// worker generation (supervisor-owned handles), answer every
+    /// accepted request, and terminate.
+    #[test]
+    fn shutdown_under_panic_storm_joins_all_generations() {
+        crate::testing::quiet_expected_panics();
+        let obs = Obs::new();
+        let b = spawn_with_obs(
+            &obs,
+            "storm",
+            Box::new(Grenade),
+            BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_micros(50),
+                queue_cap: 64,
+                workers: 2,
+                ..BatcherConfig::default()
+            },
+        );
+        let receivers: Vec<_> = (0..40)
+            .filter_map(|i| {
+                // Mostly grenades, some healthy riders.
+                let v = if i % 4 == 0 { i as f64 } else { -1.0 };
+                b.submit(vec![v]).ok()
+            })
+            .collect();
+        b.shutdown(); // must not hang on respawned workers
+        let mut answered = 0;
+        for rx in receivers {
+            let res = rx.recv().expect("accepted requests are answered across shutdown");
+            match res.result {
+                Ok(out) => assert!(out[0] >= 0.0),
+                Err(e) => assert_eq!(e, "engine panic"),
+            }
+            answered += 1;
+        }
+        assert_eq!(answered, 40);
+        let vm = obs.variant("storm");
+        assert!(vm.panics.get() > 0);
+        assert_eq!(vm.queue_depth.get(), 0, "queue must drain under the storm");
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! This is how the robustness layer is tested — and how it can be
 //! exercised against a live server (`serve --chaos`): probabilistic or
 //! patterned `infer_batch` errors drive the retry path, injected
-//! latency drives deadline shedding, and the chaos suite
+//! latency drives deadline shedding, injected panics
+//! ([`ChaosConfig::panic_prob`]) drive the `catch_unwind` isolation
+//! net and supervisor worker respawns, and the chaos suite
 //! (`rust/tests/chaos_coordinator.rs`) proves the accounting invariant
-//! `requests == responses + rejected + errors + deadline_expired`
-//! holds under all of it, concurrently with hot swaps.
+//! `requests == responses + rejected + errors + deadline_expired +
+//! breaker_shed` holds under all of it, concurrently with hot swaps.
 //!
 //! Randomness is seeded ([`ChaosConfig::seed`]) so a failing chaos run
 //! replays deterministically up to thread scheduling.
@@ -31,6 +33,11 @@ pub struct ChaosConfig {
     pub fail_every: Option<u64>,
     /// Uniform latency injected before each call completes.
     pub latency: Option<(Duration, Duration)>,
+    /// Probability in `[0, 1]` that a call panics instead of
+    /// returning (sampled per call, after the failure draw; a call
+    /// selected for both panics). Exercises the worker `catch_unwind`
+    /// net and supervisor respawn path.
+    pub panic_prob: f64,
     /// Seed for the failure/latency RNG (replayable runs).
     pub seed: u64,
 }
@@ -41,6 +48,7 @@ impl Default for ChaosConfig {
             fail_prob: 0.0,
             fail_every: None,
             latency: None,
+            panic_prob: 0.0,
             seed: 0xC4A0,
         }
     }
@@ -56,6 +64,7 @@ pub struct FaultyEngine {
     cfg: ChaosConfig,
     calls: AtomicU64,
     faults: AtomicU64,
+    panics: AtomicU64,
     rng: Mutex<Rng>,
 }
 
@@ -67,6 +76,7 @@ impl FaultyEngine {
             cfg,
             calls: AtomicU64::new(0),
             faults: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
             rng: Mutex::new(rng),
         }
     }
@@ -80,12 +90,17 @@ impl FaultyEngine {
     pub fn faults(&self) -> u64 {
         self.faults.load(Ordering::SeqCst)
     }
+
+    /// Calls that ended in an injected panic.
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::SeqCst)
+    }
 }
 
 impl Engine for FaultyEngine {
     fn infer_batch(&self, x: &Mat) -> Result<Mat> {
         let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
-        let (pause, fail) = {
+        let (pause, fail, unwind) = {
             let mut rng = self.rng.lock().unwrap();
             let pause = self.cfg.latency.map(|(lo, hi)| {
                 let span = hi.saturating_sub(lo);
@@ -93,10 +108,18 @@ impl Engine for FaultyEngine {
             });
             let fail = self.cfg.fail_every.is_some_and(|k| n % k.max(1) == 0)
                 || (self.cfg.fail_prob > 0.0 && rng.bernoulli(self.cfg.fail_prob));
-            (pause, fail)
+            // Drawn last (and only when configured) so enabling panics
+            // does not perturb the seeded latency/failure sequences of
+            // existing chaos runs.
+            let unwind = self.cfg.panic_prob > 0.0 && rng.bernoulli(self.cfg.panic_prob);
+            (pause, fail, unwind)
         };
         if let Some(d) = pause {
             std::thread::sleep(d);
+        }
+        if unwind {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+            panic!("injected panic (call {n})");
         }
         if fail {
             self.faults.fetch_add(1, Ordering::SeqCst);
@@ -174,6 +197,52 @@ mod tests {
         let err = e.infer_batch(&x).unwrap_err();
         assert!(err.to_string().contains("injected fault"), "{err}");
         assert_eq!(e.faults(), 1);
+    }
+
+    #[test]
+    fn panic_prob_one_always_panics_and_counts() {
+        crate::testing::quiet_expected_panics();
+        let e = FaultyEngine::new(
+            Box::new(Echo(1)),
+            ChaosConfig {
+                panic_prob: 1.0,
+                ..ChaosConfig::default()
+            },
+        );
+        let x = Mat::from_vec(1, 1, vec![0.0]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.infer_batch(&x)));
+        let payload = caught.expect_err("panic_prob=1 must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected panic"), "{msg}");
+        assert_eq!(e.panics(), 1);
+        assert_eq!(e.faults(), 0);
+    }
+
+    #[test]
+    fn panic_draw_does_not_perturb_seeded_fault_sequence() {
+        // Same seed, panic_prob 0 vs unset: the fault pattern must be
+        // bit-identical, or existing seeded chaos runs would change
+        // behaviour when the panic knob exists but is off.
+        let mk = |panic_prob| {
+            FaultyEngine::new(
+                Box::new(Echo(1)),
+                ChaosConfig {
+                    fail_prob: 0.5,
+                    panic_prob,
+                    seed: 7,
+                    ..ChaosConfig::default()
+                },
+            )
+        };
+        let (a, b) = (mk(0.0), mk(0.0));
+        let x = Mat::from_vec(1, 1, vec![0.0]);
+        let pa: Vec<bool> = (0..64).map(|_| a.infer_batch(&x).is_ok()).collect();
+        let pb: Vec<bool> = (0..64).map(|_| b.infer_batch(&x).is_ok()).collect();
+        assert_eq!(pa, pb);
+        assert!(pa.iter().any(|&ok| !ok) && pa.iter().any(|&ok| ok));
     }
 
     #[test]

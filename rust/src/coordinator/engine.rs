@@ -16,6 +16,22 @@ use anyhow::{bail, Result};
 /// of its variant's engine pool, so batches overlap. Implementations
 /// keep any mutable state in interior-mutability primitives (the PJRT
 /// runtime handle already serialises through its actor channel).
+///
+/// # Unwind-safety contract
+///
+/// The engine pool runs `infer_batch` under `catch_unwind` (wrapped in
+/// `AssertUnwindSafe` — the trait deliberately does not require
+/// `RefUnwindSafe` so `Box<dyn Engine>` stays ergonomic). The contract
+/// an implementation must honour instead: **a panic escaping
+/// `infer_batch` must not leave shared state half-updated in a way
+/// that poisons later calls on the same instance or its siblings.**
+/// In practice that means mutate-through-interior-mutability either
+/// atomically or not at all; the stock implementations are read-only
+/// per call (native heads) or serialise through an actor channel
+/// (PJRT), so they satisfy it trivially. After a caught panic the
+/// batch is answered `ERR engine panic`, the worker that ran it is
+/// recycled by the supervisor, and the engine instance itself keeps
+/// being used by the remaining workers.
 pub trait Engine: Send + Sync {
     fn infer_batch(&self, x: &Mat) -> Result<Mat>;
     fn input_dim(&self) -> usize;

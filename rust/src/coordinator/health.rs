@@ -1,0 +1,521 @@
+//! Per-variant circuit breaker: the self-healing layer between the
+//! coordinator's routing decision and a variant's batcher.
+//!
+//! Each variant owns one [`Health`] instance holding a three-state
+//! breaker:
+//!
+//! ```text
+//!             failure ratio over sliding window ≥ error_ratio
+//!    Closed ──────────────────────────────────────────────────▶ Open
+//!      ▲                                                         │
+//!      │ all probes succeed                 cooldown_ms elapsed  │
+//!      │                                    (or SWAP installs a  │
+//!      │                                     fresh engine)       ▼
+//!      └────────────────────────────── HalfOpen ◀────────────────┘
+//!                                         │
+//!                                         │ any probe fails
+//!                                         └──────────▶ Open (again)
+//! ```
+//!
+//! *Closed* admits everything and records each request outcome
+//! (success, engine error, panic, deadline expiry) into a sliding
+//! window of the last `window` outcomes; once the window is full and
+//! the failure ratio reaches `error_ratio`, the breaker trips Open.
+//! *Open* sheds every request immediately (`ERR variant unhealthy`,
+//! counted under `breaker_shed`) until `cooldown` has elapsed, then
+//! transitions to *HalfOpen*. HalfOpen admits at most
+//! `halfopen_probes` concurrent probe requests: if all of them
+//! succeed the breaker closes with a cleared window; if any fails it
+//! re-opens and the cooldown restarts.
+//!
+//! A hot swap that installs a fresh engine on an Open or HalfOpen
+//! variant resets the breaker to HalfOpen with a fresh probe budget —
+//! the new engine earns its way back instead of inheriting the old
+//! one's bad window. A swap on a *Closed* variant only clears the
+//! window (the zero-downtime swap guarantee means a healthy variant
+//! must never start shedding just because it was upgraded).
+//!
+//! The breaker is disabled by default (`window == 0`) so library
+//! embedders opt in; `serve` enables it with production defaults. All
+//! state transitions set the variant's `breaker_state` gauge
+//! (0 = closed, 1 = half-open, 2 = open) and emit a
+//! `coordinator.breaker` event.
+
+use crate::obs::{event, VariantMetrics};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Circuit-breaker policy for one variant.
+#[derive(Clone, Debug)]
+pub struct BreakerConfig {
+    /// Sliding-window length in request outcomes. `0` disables the
+    /// breaker entirely (the default): every request is admitted and
+    /// no outcome is tracked.
+    pub window: usize,
+    /// Failure ratio in `(0, 1]` that trips a full window Open.
+    pub error_ratio: f64,
+    /// How long an Open breaker sheds before letting probes through.
+    pub cooldown: Duration,
+    /// Concurrent probe requests admitted while HalfOpen (min 1).
+    pub halfopen_probes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            window: 0, // disabled unless explicitly configured
+            error_ratio: 0.5,
+            cooldown: Duration::from_millis(1000),
+            halfopen_probes: 3,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Production defaults used by `serve`: 64-outcome window, 50%
+    /// trip ratio, 1 s cooldown, 3 half-open probes.
+    pub fn standard() -> Self {
+        BreakerConfig {
+            window: 64,
+            ..BreakerConfig::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.window > 0
+    }
+}
+
+/// Breaker state, ordered by severity (gauge value 0/1/2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half_open",
+            BreakerState::Open => "open",
+        }
+    }
+
+    /// Value exported through the `bfly_breaker_state` gauge.
+    pub fn gauge(self) -> i64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+/// Routing decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Closed (or breaker disabled): admit and record the outcome.
+    Admit,
+    /// HalfOpen: admitted as one of the bounded probes; its outcome
+    /// decides whether the breaker closes or re-opens.
+    Probe,
+    /// Open (or probe budget exhausted): shed without touching the
+    /// batcher.
+    Shed,
+}
+
+/// Point-in-time view of one variant's breaker, for `HEALTH`.
+#[derive(Clone, Debug)]
+pub struct BreakerStats {
+    pub enabled: bool,
+    pub state: BreakerState,
+    /// Outcomes currently recorded / window capacity.
+    pub window_len: usize,
+    pub window_cap: usize,
+    /// Failures among the recorded outcomes.
+    pub window_failures: usize,
+    /// Closed→Open transitions since startup.
+    pub trips: u64,
+    /// Probes issued in the current HalfOpen episode / budget.
+    pub probes_issued: usize,
+    pub probe_budget: usize,
+}
+
+struct Inner {
+    state: BreakerState,
+    /// Sliding outcome window, `true` = failure. Only written while
+    /// Closed; cleared on every state change so each episode starts
+    /// from a clean slate.
+    ring: VecDeque<bool>,
+    failures: usize,
+    opened_at: Instant,
+    probes_issued: usize,
+    probe_successes: usize,
+    trips: u64,
+}
+
+/// One variant's breaker. Shared between the coordinator (admission +
+/// outcome recording) and the batcher thread (swap resets).
+pub struct Health {
+    cfg: BreakerConfig,
+    vm: Arc<VariantMetrics>,
+    inner: Mutex<Inner>,
+}
+
+impl Health {
+    pub fn new(cfg: BreakerConfig, vm: Arc<VariantMetrics>) -> Self {
+        vm.breaker_state.set(BreakerState::Closed.gauge());
+        Health {
+            cfg,
+            vm,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                ring: VecDeque::new(),
+                failures: 0,
+                opened_at: Instant::now(),
+                probes_issued: 0,
+                probe_successes: 0,
+                trips: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &BreakerConfig {
+        &self.cfg
+    }
+
+    pub fn state(&self) -> BreakerState {
+        if !self.cfg.enabled() {
+            return BreakerState::Closed;
+        }
+        self.lock().state
+    }
+
+    /// Admission decision for one incoming request. May transition
+    /// Open → HalfOpen when the cooldown has elapsed.
+    pub fn admit(&self) -> Admission {
+        if !self.cfg.enabled() {
+            return Admission::Admit;
+        }
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => Admission::Admit,
+            BreakerState::Open => {
+                if g.opened_at.elapsed() < self.cfg.cooldown {
+                    return Admission::Shed;
+                }
+                self.transition(&mut g, BreakerState::HalfOpen, "cooldown elapsed");
+                g.probes_issued = 1;
+                Admission::Probe
+            }
+            BreakerState::HalfOpen => {
+                if g.probes_issued < self.cfg.halfopen_probes.max(1) {
+                    g.probes_issued += 1;
+                    Admission::Probe
+                } else {
+                    Admission::Shed
+                }
+            }
+        }
+    }
+
+    /// Record the outcome of an admitted request. `probe` must be the
+    /// [`Admission`] the request was admitted under; outcomes from a
+    /// previous episode (e.g. a probe answered after the breaker
+    /// already re-opened) are ignored.
+    pub fn record(&self, ok: bool, admission: Admission) {
+        if !self.cfg.enabled() || admission == Admission::Shed {
+            return;
+        }
+        let mut g = self.lock();
+        match (g.state, admission) {
+            (BreakerState::HalfOpen, Admission::Probe) => {
+                if !ok {
+                    self.transition(&mut g, BreakerState::Open, "probe failed");
+                    g.opened_at = Instant::now();
+                } else {
+                    g.probe_successes += 1;
+                    if g.probe_successes >= self.cfg.halfopen_probes.max(1) {
+                        self.transition(&mut g, BreakerState::Closed, "probes succeeded");
+                    }
+                }
+            }
+            (BreakerState::Closed, Admission::Admit) => {
+                g.ring.push_back(!ok);
+                if !ok {
+                    g.failures += 1;
+                }
+                while g.ring.len() > self.cfg.window {
+                    if g.ring.pop_front() == Some(true) {
+                        g.failures -= 1;
+                    }
+                }
+                let full = g.ring.len() == self.cfg.window;
+                let ratio = g.failures as f64 / self.cfg.window.max(1) as f64;
+                if full && ratio >= self.cfg.error_ratio {
+                    g.trips += 1;
+                    self.transition(&mut g, BreakerState::Open, "error ratio tripped");
+                    g.opened_at = Instant::now();
+                }
+            }
+            // Stale: admitted under a state the breaker has since left
+            // (e.g. a Closed-era outcome arriving after a trip, or a
+            // probe answered after re-opening). Ignore.
+            _ => {}
+        }
+    }
+
+    /// A probe admission that never produced an outcome (the batcher
+    /// rejected it on backpressure): return the probe slot so the
+    /// HalfOpen budget is not leaked.
+    pub fn probe_aborted(&self) {
+        if !self.cfg.enabled() {
+            return;
+        }
+        let mut g = self.lock();
+        if g.state == BreakerState::HalfOpen && g.probes_issued > 0 {
+            g.probes_issued -= 1;
+        }
+    }
+
+    /// A hot swap installed a fresh engine. From Open or HalfOpen the
+    /// breaker resets to HalfOpen with a fresh probe budget (the new
+    /// engine earns its way back immediately, without waiting out the
+    /// cooldown). From Closed only the window is cleared — a healthy
+    /// variant must not shed during a routine zero-downtime upgrade.
+    pub fn on_swap(&self) {
+        if !self.cfg.enabled() {
+            return;
+        }
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => {
+                g.ring.clear();
+                g.failures = 0;
+            }
+            BreakerState::Open | BreakerState::HalfOpen => {
+                self.transition(&mut g, BreakerState::HalfOpen, "engine swapped");
+            }
+        }
+    }
+
+    pub fn stats(&self) -> BreakerStats {
+        let g = self.lock();
+        BreakerStats {
+            enabled: self.cfg.enabled(),
+            state: if self.cfg.enabled() {
+                g.state
+            } else {
+                BreakerState::Closed
+            },
+            window_len: g.ring.len(),
+            window_cap: self.cfg.window,
+            window_failures: g.failures,
+            trips: g.trips,
+            probes_issued: g.probes_issued,
+            probe_budget: self.cfg.halfopen_probes.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // Breaker state must survive a panicking worker elsewhere in
+        // the process; no invariant here can be broken mid-update in a
+        // way that matters more than availability.
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Apply a state change: reset episode-local bookkeeping, publish
+    /// the gauge, and emit a `coordinator.breaker` event. The caller
+    /// fixes up `opened_at`/`probes_issued` afterwards where needed.
+    fn transition(&self, g: &mut Inner, to: BreakerState, why: &str) {
+        let from = g.state;
+        g.state = to;
+        g.ring.clear();
+        g.failures = 0;
+        g.probes_issued = 0;
+        g.probe_successes = 0;
+        self.vm.breaker_state.set(to.gauge());
+        let ev = match to {
+            BreakerState::Open => event::error("coordinator.breaker"),
+            BreakerState::HalfOpen => event::warn("coordinator.breaker"),
+            BreakerState::Closed => event::info("coordinator.breaker"),
+        };
+        ev.field("variant", &self.vm.name)
+            .field("from", from.as_str())
+            .field("to", to.as_str())
+            .msg(why)
+            .emit();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRing;
+    use crate::obs::MetricsRegistry;
+
+    fn registry() -> MetricsRegistry {
+        MetricsRegistry::new(Arc::new(TraceRing::new(8)))
+    }
+
+    fn health(cfg: BreakerConfig) -> Health {
+        Health::new(cfg, registry().variant("t"))
+    }
+
+    fn cfg(window: usize) -> BreakerConfig {
+        BreakerConfig {
+            window,
+            error_ratio: 0.5,
+            cooldown: Duration::from_millis(20),
+            halfopen_probes: 2,
+        }
+    }
+
+    #[test]
+    fn disabled_breaker_admits_everything_and_stays_closed() {
+        let h = health(BreakerConfig::default());
+        for _ in 0..100 {
+            assert_eq!(h.admit(), Admission::Admit);
+            h.record(false, Admission::Admit);
+        }
+        assert_eq!(h.state(), BreakerState::Closed);
+        assert!(!h.stats().enabled);
+    }
+
+    #[test]
+    fn trips_open_only_when_window_full_and_ratio_reached() {
+        let h = health(cfg(4));
+        // 3 failures in a not-yet-full window: still closed.
+        for _ in 0..3 {
+            h.record(false, Admission::Admit);
+        }
+        assert_eq!(h.state(), BreakerState::Closed);
+        // Fourth outcome fills the window at ratio 1.0 ≥ 0.5: trips.
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Open);
+        assert_eq!(h.stats().trips, 1);
+        assert_eq!(h.admit(), Admission::Shed);
+    }
+
+    #[test]
+    fn successes_slide_failures_out_of_the_window() {
+        let h = health(cfg(4));
+        h.record(false, Admission::Admit);
+        for _ in 0..8 {
+            h.record(true, Admission::Admit);
+        }
+        // The lone failure slid out; a full healthy window never trips.
+        assert_eq!(h.state(), BreakerState::Closed);
+        assert_eq!(h.stats().window_failures, 0);
+    }
+
+    #[test]
+    fn open_recovers_through_halfopen_probes() {
+        let h = health(cfg(2));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Open);
+        assert_eq!(h.admit(), Admission::Shed, "inside cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        // Cooldown elapsed: exactly `halfopen_probes` probes admitted.
+        assert_eq!(h.admit(), Admission::Probe);
+        assert_eq!(h.admit(), Admission::Probe);
+        assert_eq!(h.admit(), Admission::Shed, "probe budget exhausted");
+        h.record(true, Admission::Probe);
+        assert_eq!(h.state(), BreakerState::HalfOpen);
+        h.record(true, Admission::Probe);
+        assert_eq!(h.state(), BreakerState::Closed);
+        assert_eq!(h.admit(), Admission::Admit);
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_restarts_cooldown() {
+        let h = health(cfg(2));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(h.admit(), Admission::Probe);
+        h.record(false, Admission::Probe);
+        assert_eq!(h.state(), BreakerState::Open);
+        assert_eq!(h.admit(), Admission::Shed, "cooldown restarted");
+    }
+
+    #[test]
+    fn stale_outcomes_from_previous_episode_are_ignored() {
+        let h = health(cfg(2));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Open);
+        // A Closed-era outcome landing after the trip must not corrupt
+        // the Open state or the (empty) window.
+        h.record(true, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Open);
+        assert_eq!(h.stats().window_len, 0);
+    }
+
+    #[test]
+    fn swap_resets_open_to_halfopen_without_cooldown() {
+        let h = health(cfg(2));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Open);
+        h.on_swap();
+        assert_eq!(h.state(), BreakerState::HalfOpen);
+        // Probes flow immediately — no cooldown wait after a swap.
+        assert_eq!(h.admit(), Admission::Probe);
+        h.record(true, Admission::Probe);
+        h.record(true, Admission::Probe);
+        assert_eq!(h.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn swap_on_closed_variant_only_clears_window() {
+        let h = health(cfg(4));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        h.on_swap();
+        assert_eq!(h.state(), BreakerState::Closed);
+        assert_eq!(h.stats().window_failures, 0);
+        // The cleared window means two more failures do NOT trip a
+        // window of 4 — the new engine starts from a clean slate.
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(h.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn aborted_probe_returns_its_budget_slot() {
+        let h = health(cfg(2));
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(h.admit(), Admission::Probe);
+        assert_eq!(h.admit(), Admission::Probe);
+        assert_eq!(h.admit(), Admission::Shed);
+        h.probe_aborted();
+        assert_eq!(h.admit(), Admission::Probe, "slot returned");
+    }
+
+    #[test]
+    fn gauge_tracks_state_transitions() {
+        let reg = registry();
+        let vm = reg.variant("g");
+        let h = Health::new(cfg(2), Arc::clone(&vm));
+        assert_eq!(vm.breaker_state.get(), 0);
+        h.record(false, Admission::Admit);
+        h.record(false, Admission::Admit);
+        assert_eq!(vm.breaker_state.get(), 2);
+        std::thread::sleep(Duration::from_millis(25));
+        let _ = h.admit();
+        assert_eq!(vm.breaker_state.get(), 1);
+        h.record(true, Admission::Probe);
+        h.record(true, Admission::Probe);
+        assert_eq!(vm.breaker_state.get(), 0);
+    }
+}

@@ -40,14 +40,28 @@
 //! transient engine failures are retried per batch with capped,
 //! jittered backoff ([`RetryPolicy`]), re-pinned to the current engine
 //! generation so a retry after a hot swap runs on the new engine. The
-//! [`chaos`] module's [`FaultyEngine`] wrapper injects failures and
-//! latency for tests and the `--chaos` serve flag.
+//! [`chaos`] module's [`FaultyEngine`] wrapper injects failures,
+//! latency and panics for tests and the `--chaos` serve flag.
+//!
+//! Self-healing (checked by `rust/tests/health_coordinator.rs` and the
+//! chaos suite): engine panics are caught per batch (`ERR engine
+//! panic`) and the dead worker is respawned by a supervisor, so a
+//! panicking engine never takes its variant down; each variant carries
+//! a [`health`] circuit breaker (Closed → Open → HalfOpen over a
+//! sliding outcome window) that sheds requests from a sick variant
+//! (`ERR variant unhealthy`, `breaker_shed` counter) and recovers via
+//! bounded probes; an Open variant with a configured fallback
+//! ([`Coordinator::set_fallback`]) transparently re-routes through
+//! [`Coordinator::infer_routed`], annotated `VIA <fallback>`; and the
+//! `HEALTH` verb reports per-variant breaker state plus a process
+//! ready/live summary.
 //!
 //! Invariants (checked by `rust/tests/prop_coordinator.rs`):
 //! * conservation — every accepted request is answered exactly once;
 //! * accounting — per variant, `requests == responses + rejected +
-//!   errors + deadline_expired` once traffic drains (unknown variants
-//!   count against the reserved [`UNROUTED`] pseudo-variant);
+//!   errors + deadline_expired + breaker_shed` once traffic drains
+//!   (unknown variants count against the reserved [`UNROUTED`]
+//!   pseudo-variant);
 //! * batch bound — no formed batch exceeds `max_batch`;
 //! * deadline — a request waits at most `max_wait` before its batch is
 //!   formed (modulo engine latency);
@@ -57,12 +71,14 @@
 mod batcher;
 pub mod chaos;
 mod engine;
+pub mod health;
 mod protocol;
 mod server;
 
 pub use batcher::{Batcher, BatcherConfig, Job, JobResult, RetryPolicy};
 pub use chaos::{ChaosConfig, FaultyEngine};
 pub use engine::{Engine, NativeHeadEngine, PjrtEngine};
+pub use health::{Admission, BreakerConfig, BreakerState, BreakerStats, Health};
 pub use protocol::{parse_request, Request, Response};
 pub use server::{serve, serve_with, ServerConfig, ServerHandle};
 
@@ -76,6 +92,9 @@ use std::sync::{Arc, Mutex};
 /// A running coordinator: named variants, each with its own batcher.
 pub struct Coordinator {
     variants: HashMap<String, Batcher>,
+    /// Degraded routing: `variant → fallback` served while `variant`'s
+    /// breaker sheds (one hop only; see [`Self::infer_routed`]).
+    fallbacks: HashMap<String, String>,
     /// Checkpoint directory backing the `SWAP` verb (optional).
     store_dir: Mutex<Option<PathBuf>>,
     pub obs: Arc<Obs>,
@@ -85,6 +104,7 @@ impl Coordinator {
     pub fn new() -> Self {
         Coordinator {
             variants: HashMap::new(),
+            fallbacks: HashMap::new(),
             store_dir: Mutex::new(None),
             obs: Arc::new(Obs::new()),
         }
@@ -151,8 +171,41 @@ impl Coordinator {
         v
     }
 
+    /// Configure degraded routing: while `variant`'s breaker sheds,
+    /// [`infer_routed`](Self::infer_routed) transparently serves the
+    /// request from `fallback` instead (one hop, annotated `VIA`).
+    /// The mapping is validated lazily at route time (so fallbacks may
+    /// be declared before registration), but a self-fallback is
+    /// rejected outright.
+    pub fn set_fallback(&mut self, variant: &str, fallback: &str) -> Result<()> {
+        if variant == fallback {
+            return Err(anyhow!("variant `{variant}` cannot fall back to itself"));
+        }
+        if !self.has_variant(fallback) {
+            event::warn("coordinator.route")
+                .field("variant", variant)
+                .field("fallback", fallback)
+                .msg("fallback target not registered (yet); will be skipped until it is")
+                .emit();
+        }
+        self.fallbacks.insert(variant.to_string(), fallback.to_string());
+        Ok(())
+    }
+
+    /// The configured fallback for `variant`, if any.
+    pub fn fallback_of(&self, variant: &str) -> Option<&str> {
+        self.fallbacks.get(variant).map(String::as_str)
+    }
+
+    /// Current breaker state of a registered variant.
+    pub fn breaker_state(&self, variant: &str) -> Option<BreakerState> {
+        self.variants.get(variant).map(|b| b.health().state())
+    }
+
     /// Submit one request row; blocks until the response arrives.
-    /// Returns `Err` on unknown variant or queue-full backpressure.
+    /// Returns `Err` on unknown variant, queue-full backpressure, or
+    /// an Open breaker (`variant unhealthy` — no fallback is followed;
+    /// use [`infer_routed`](Self::infer_routed) for degraded routing).
     pub fn infer(&self, variant: &str, input: Vec<f64>) -> Result<Vec<f64>> {
         self.infer_deadline(variant, input, None)
     }
@@ -167,11 +220,40 @@ impl Coordinator {
         input: Vec<f64>,
         patience: Option<std::time::Duration>,
     ) -> Result<Vec<f64>> {
+        self.infer_inner(variant, input, patience, false)
+            .map(|(out, _)| out)
+    }
+
+    /// [`infer_deadline`](Self::infer_deadline) with degraded routing:
+    /// when the variant's breaker sheds and a fallback is configured
+    /// and registered, the request is served by the fallback instead.
+    /// Returns the output plus `Some(fallback_name)` when the fallback
+    /// answered (the protocol annotates such responses `VIA <name>`).
+    /// The fallback hop carries its own full request accounting on the
+    /// fallback variant, so its responses are bitwise identical to
+    /// calling the fallback directly; the sick primary records the
+    /// shed (`breaker_shed`) plus an informational `fallback_served`.
+    pub fn infer_routed(
+        &self,
+        variant: &str,
+        input: Vec<f64>,
+        patience: Option<std::time::Duration>,
+    ) -> Result<(Vec<f64>, Option<String>)> {
+        self.infer_inner(variant, input, patience, true)
+    }
+
+    fn infer_inner(
+        &self,
+        variant: &str,
+        input: Vec<f64>,
+        patience: Option<std::time::Duration>,
+        allow_fallback: bool,
+    ) -> Result<(Vec<f64>, Option<String>)> {
         // Unknown variants are accounted to the reserved `_unrouted`
         // pseudo-variant so every real variant's invariant
-        // `requests == responses + rejected + errors + deadline_expired`
-        // reconciles and unroutable traffic is still visible in the
-        // metrics.
+        // `requests == responses + rejected + errors + deadline_expired
+        // + breaker_shed` reconciles and unroutable traffic is still
+        // visible in the metrics.
         let b = match self.variants.get(variant) {
             Some(b) => b,
             None => {
@@ -187,14 +269,50 @@ impl Coordinator {
         };
         let vm = b.metrics();
         vm.requests.inc();
+        let admission = b.health().admit();
+        if admission == Admission::Shed {
+            vm.breaker_shed.inc();
+            if allow_fallback {
+                if let Some(fb) = self.fallbacks.get(variant) {
+                    if self.variants.contains_key(fb) {
+                        // One hop only (`allow_fallback: false`): a sick
+                        // fallback sheds rather than chaining onward.
+                        return match self.infer_inner(fb, input, patience, false) {
+                            Ok((out, _)) => {
+                                vm.fallback_served.inc();
+                                Ok((out, Some(fb.clone())))
+                            }
+                            Err(e) => Err(anyhow!(
+                                "variant unhealthy; fallback `{fb}` failed: {e:#}"
+                            )),
+                        };
+                    }
+                }
+            }
+            return Err(anyhow!("variant unhealthy"));
+        }
         let started = std::time::Instant::now();
         let deadline = patience.map(|p| started + p);
         // Queue-full rejections are counted inside `Batcher::submit`.
-        let rx = b.submit_with_deadline(input, deadline)?;
-        let res = rx.recv().map_err(|_| {
-            vm.errors.inc();
-            anyhow!("variant `{variant}` worker gone")
-        })?;
+        // A rejected request never reached the engine, so it is not a
+        // breaker outcome — but a probe slot must be handed back.
+        let rx = match b.submit_with_deadline(input, deadline) {
+            Ok(rx) => rx,
+            Err(e) => {
+                if admission == Admission::Probe {
+                    b.health().probe_aborted();
+                }
+                return Err(e);
+            }
+        };
+        let res = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                vm.errors.inc();
+                b.health().record(false, admission);
+                return Err(anyhow!("variant `{variant}` worker gone"));
+            }
+        };
         let total = started.elapsed();
         let total_us = total.as_micros() as u64;
         if total_us >= self.obs.slow_threshold_us() {
@@ -208,19 +326,81 @@ impl Coordinator {
                 .msg("slow request")
                 .emit();
         }
-        // `deadline exceeded` keeps its exact wording on the wire (the
-        // `deadline_expired` counter was bumped in dispatch); engine
-        // and validation failures get the generic prefix.
+        b.health().record(res.result.is_ok(), admission);
+        // `deadline exceeded` and `engine panic` keep their exact
+        // wording on the wire (their counters were bumped in
+        // dispatch); engine and validation failures get the generic
+        // prefix.
         let out = res.result.map_err(|e| {
-            if e == "deadline exceeded" {
-                anyhow!("deadline exceeded")
+            if e == "deadline exceeded" || e == "engine panic" {
+                anyhow!("{e}")
             } else {
                 anyhow!("inference failed: {e}")
             }
         })?;
         vm.latency.record(total);
         vm.responses.inc();
-        Ok(out)
+        Ok((out, None))
+    }
+
+    /// Render the `HEALTH [<variant>]` report: one line per variant
+    /// (breaker state, window stats, panic/respawn/shed counters,
+    /// configured fallback), plus — when reporting all variants — a
+    /// process-level summary line. `ready` means at least one variant
+    /// is currently willing to admit traffic (not Open); `live` is
+    /// constant `true` (the process answered, after all) and exists
+    /// for symmetry with readiness/liveness probe conventions.
+    pub fn health_report(&self, filter: Option<&str>) -> Result<String> {
+        let names: Vec<&String> = match filter {
+            Some(f) => match self.variants.get_key_value(f) {
+                Some((k, _)) => vec![k],
+                None => return Err(anyhow!("unknown variant `{f}`")),
+            },
+            None => {
+                let mut v: Vec<&String> = self.variants.keys().collect();
+                v.sort();
+                v
+            }
+        };
+        let mut lines = Vec::with_capacity(names.len() + 1);
+        let (mut open, mut half_open) = (0usize, 0usize);
+        for name in &names {
+            let b = &self.variants[*name];
+            let vm = b.metrics();
+            let s = b.health().stats();
+            match s.state {
+                BreakerState::Open => open += 1,
+                BreakerState::HalfOpen => half_open += 1,
+                BreakerState::Closed => {}
+            }
+            lines.push(format!(
+                "variant={} state={} breaker={} window={}/{} failures={} trips={} \
+                 probes={}/{} panics={} respawns={} breaker_shed={} fallback_served={} \
+                 fallback={}",
+                name,
+                s.state.as_str(),
+                if s.enabled { "on" } else { "off" },
+                s.window_len,
+                s.window_cap,
+                s.window_failures,
+                s.trips,
+                s.probes_issued,
+                s.probe_budget,
+                vm.panics.get(),
+                vm.respawns.get(),
+                vm.breaker_shed.get(),
+                vm.fallback_served.get(),
+                self.fallbacks.get(*name).map(String::as_str).unwrap_or("-"),
+            ));
+        }
+        if filter.is_none() {
+            let total = self.variants.len();
+            let ready = total > 0 && open < total;
+            lines.push(format!(
+                "ready={ready} live=true variants={total} open={open} half_open={half_open}"
+            ));
+        }
+        Ok(lines.join("\n"))
     }
 
     /// Atomically replace a running variant's engine with zero dropped
@@ -228,7 +408,10 @@ impl Coordinator {
     /// accepted before the swap are answered by the old engine,
     /// requests accepted after by the new one, and the conservation
     /// invariant holds throughout (`rust/tests/prop_coordinator.rs`).
-    /// Blocks until the new engine is serving.
+    /// Blocks until the new engine is serving. A swap also resets the
+    /// variant's breaker (Open/HalfOpen → HalfOpen with a fresh probe
+    /// budget, skipping any remaining cooldown; Closed → window
+    /// cleared) — see [`Health::on_swap`].
     pub fn swap_variant(&self, variant: &str, engine: Box<dyn Engine>) -> Result<()> {
         let b = self
             .variants
@@ -465,6 +648,116 @@ mod tests {
                 .unwrap(),
             vec![2.0; 4]
         );
+    }
+
+    /// 4-dim engine whose every call fails — drives the breaker open.
+    struct Failing;
+    impl Engine for Failing {
+        fn infer_batch(&self, _x: &Mat) -> Result<Mat> {
+            anyhow::bail!("down")
+        }
+        fn input_dim(&self) -> usize {
+            4
+        }
+        fn output_dim(&self) -> usize {
+            4
+        }
+    }
+
+    fn breaker_cfg(window: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_micros(1),
+            queue_cap: 16,
+            workers: 1,
+            breaker: BreakerConfig {
+                window,
+                error_ratio: 0.5,
+                // Long enough that the breaker provably stays Open for
+                // the duration of the test (no flaky HalfOpen flip).
+                cooldown: std::time::Duration::from_secs(60),
+                halfopen_probes: 1,
+            },
+            ..BatcherConfig::default()
+        }
+    }
+
+    #[test]
+    fn open_breaker_sheds_with_variant_unhealthy() {
+        let mut c = Coordinator::new();
+        c.register("sick", Box::new(Failing), breaker_cfg(2));
+        for _ in 0..2 {
+            let e = c.infer("sick", vec![0.0; 4]).unwrap_err();
+            assert!(e.to_string().starts_with("inference failed"), "{e}");
+        }
+        assert_eq!(c.breaker_state("sick"), Some(BreakerState::Open));
+        let e = c.infer("sick", vec![0.0; 4]).unwrap_err();
+        assert_eq!(e.to_string(), "variant unhealthy");
+        let vm = c.obs.variant("sick");
+        assert_eq!(vm.requests.get(), 3);
+        assert_eq!(vm.errors.get(), 2);
+        assert_eq!(vm.breaker_shed.get(), 1);
+        assert!(vm.accounted(), "{}", vm.snapshot());
+        c.shutdown();
+    }
+
+    #[test]
+    fn fallback_serves_open_variant_via_routed_infer() {
+        let mut c = Coordinator::new();
+        c.register("sick", Box::new(Failing), breaker_cfg(2));
+        c.register("backup", Box::new(Doubler), cfg());
+        assert!(c.set_fallback("sick", "sick").is_err(), "self-fallback");
+        c.set_fallback("sick", "backup").unwrap();
+        assert_eq!(c.fallback_of("sick"), Some("backup"));
+        for _ in 0..2 {
+            let _ = c.infer("sick", vec![0.0; 4]);
+        }
+        assert_eq!(c.breaker_state("sick"), Some(BreakerState::Open));
+        // Routed inference re-routes and annotates; the answer is the
+        // fallback's, bit-for-bit.
+        let (out, via) = c.infer_routed("sick", vec![1.0, 2.0, 3.0, 4.0], None).unwrap();
+        assert_eq!(via.as_deref(), Some("backup"));
+        assert_eq!(out, c.infer("backup", vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        // Plain infer still surfaces the shed: no silent re-route for
+        // library callers who asked for a specific variant.
+        assert_eq!(
+            c.infer("sick", vec![0.0; 4]).unwrap_err().to_string(),
+            "variant unhealthy"
+        );
+        let sick = c.obs.variant("sick");
+        let backup = c.obs.variant("backup");
+        assert_eq!(sick.breaker_shed.get(), 2);
+        assert_eq!(sick.fallback_served.get(), 1);
+        assert_eq!(backup.requests.get(), 2);
+        assert_eq!(backup.responses.get(), 2);
+        assert!(sick.accounted(), "{}", sick.snapshot());
+        assert!(backup.accounted(), "{}", backup.snapshot());
+        c.shutdown();
+    }
+
+    #[test]
+    fn health_report_lists_variants_and_summary() {
+        let mut c = Coordinator::new();
+        c.register("sick", Box::new(Failing), breaker_cfg(2));
+        c.register("backup", Box::new(Doubler), cfg());
+        c.set_fallback("sick", "backup").unwrap();
+        for _ in 0..2 {
+            let _ = c.infer("sick", vec![0.0; 4]);
+        }
+        let report = c.health_report(None).unwrap();
+        assert!(report.contains("variant=sick state=open breaker=on"), "{report}");
+        assert!(report.contains("fallback=backup"), "{report}");
+        assert!(report.contains("variant=backup state=closed breaker=off"), "{report}");
+        assert!(
+            report.contains("ready=true live=true variants=2 open=1 half_open=0"),
+            "{report}"
+        );
+        // Single-variant filter: just that line, no summary.
+        let one = c.health_report(Some("backup")).unwrap();
+        assert_eq!(one.lines().count(), 1);
+        assert!(one.contains("variant=backup"));
+        assert!(c.health_report(Some("ghost")).is_err());
+        c.shutdown();
     }
 
     #[test]

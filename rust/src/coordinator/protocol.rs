@@ -7,14 +7,18 @@
 //!   METRICS\n                      (human-readable per-variant snapshot)
 //!   METRICS PROM\n                 (Prometheus text exposition format)
 //!   TRACE [n]\n                    (last n completed request traces, default 16)
+//!   HEALTH [<variant>]\n           (breaker state + window stats; all variants
+//!                                   plus a ready/live summary when no variant given)
 //!   VARIANTS\n
 //!   PING\n
 //! server → client:
 //!   OK <y0> ... <yk>\n            (INFER)
+//!   OK VIA <fallback> <y0> ...\n  (INFER answered by the variant's fallback
+//!                                  while its breaker is open)
 //!   OK\n                          (SWAP)
 //!   ERR <message>\n
 //!   PONG\n
-//!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / TRACE / VARIANTS)
+//!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / TRACE / HEALTH / VARIANTS)
 //! ```
 //!
 //! `INFER` grammar details:
@@ -49,6 +53,9 @@ pub enum Request {
     MetricsProm,
     /// Last `n` completed request traces, newest first.
     Trace { n: usize },
+    /// Breaker state + window stats for one variant, or for every
+    /// variant plus a process ready/live summary.
+    Health { variant: Option<String> },
     Variants,
     Ping,
 }
@@ -60,6 +67,9 @@ const DEFAULT_TRACE_N: usize = 16;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Ok(Vec<f64>),
+    /// `INFER` answered by `via` — the requested variant's configured
+    /// fallback — because the variant's breaker is shedding.
+    OkVia { via: String, values: Vec<f64> },
     Err(String),
     Pong,
     Text(String),
@@ -151,6 +161,13 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             Ok(Request::Trace { n })
         }
+        Some("HEALTH") => {
+            let variant = it.next().map(str::to_string);
+            if it.next().is_some() {
+                return Err("HEALTH takes at most one argument".to_string());
+            }
+            Ok(Request::Health { variant })
+        }
         Some("VARIANTS") => Ok(Request::Variants),
         Some("PING") => Ok(Request::Ping),
         Some(other) => Err(format!("unknown command `{other}`")),
@@ -166,6 +183,17 @@ impl Response {
             Response::Ok(vals) => {
                 let mut s = String::from("OK");
                 for v in vals {
+                    s.push(' ');
+                    s.push_str(&format!("{v}"));
+                }
+                s.push('\n');
+                s
+            }
+            Response::OkVia { via, values } => {
+                // `VIA <name>` sits where the first value would: names
+                // are not numbers, so clients can always distinguish.
+                let mut s = format!("OK VIA {via}");
+                for v in values {
                     s.push(' ');
                     s.push_str(&format!("{v}"));
                 }
@@ -331,8 +359,31 @@ mod tests {
     }
 
     #[test]
+    fn parse_health() {
+        assert_eq!(
+            parse_request("HEALTH").unwrap(),
+            Request::Health { variant: None }
+        );
+        assert_eq!(
+            parse_request("HEALTH butterfly").unwrap(),
+            Request::Health {
+                variant: Some("butterfly".into())
+            }
+        );
+        assert!(parse_request("HEALTH a b").is_err());
+    }
+
+    #[test]
     fn serialize_roundtrip_shapes() {
         assert_eq!(Response::Ok(vec![1.0, 2.5]).serialize(), "OK 1 2.5\n");
+        assert_eq!(
+            Response::OkVia {
+                via: "dense".into(),
+                values: vec![1.0, -2.5],
+            }
+            .serialize(),
+            "OK VIA dense 1 -2.5\n"
+        );
         assert_eq!(Response::Pong.serialize(), "PONG\n");
         assert_eq!(
             Response::Err("bad\nthing".into()).serialize(),

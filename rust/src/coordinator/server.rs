@@ -199,14 +199,19 @@ fn respond(c: &Coordinator, line: &str) -> Response {
         Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
         Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
         Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
+        Ok(Request::Health { variant }) => match c.health_report(variant.as_deref()) {
+            Ok(report) => Response::Text(report),
+            Err(e) => Response::Err(format!("{e:#}")),
+        },
         Ok(Request::Infer {
             variant,
             input,
             deadline_ms,
         }) => {
             let patience = deadline_ms.map(Duration::from_millis);
-            match c.infer_deadline(&variant, input, patience) {
-                Ok(out) => Response::Ok(out),
+            match c.infer_routed(&variant, input, patience) {
+                Ok((out, None)) => Response::Ok(out),
+                Ok((out, Some(via))) => Response::OkVia { via, values: out },
                 Err(e) => Response::Err(format!("{e:#}")),
             }
         }
@@ -322,6 +327,23 @@ mod tests {
         // malformed observability verbs get ERR, not disconnect
         assert!(roundtrip(h.addr, "METRICS JUNK").starts_with("ERR"));
         assert!(roundtrip(h.addr, "TRACE x").starts_with("ERR"));
+        h.stop();
+    }
+
+    #[test]
+    fn health_endpoint_over_tcp() {
+        let (_c, h) = start();
+        let report = roundtrip_text(h.addr, "HEALTH");
+        assert!(
+            report.contains("variant=neg state=closed breaker=off"),
+            "{report}"
+        );
+        assert!(report.contains("ready=true live=true"), "{report}");
+        let one = roundtrip_text(h.addr, "HEALTH neg");
+        assert!(one.contains("variant=neg"), "{one}");
+        assert!(!one.contains("ready="), "filtered report has no summary: {one}");
+        assert!(roundtrip(h.addr, "HEALTH ghost").starts_with("ERR"));
+        assert!(roundtrip(h.addr, "HEALTH a b").starts_with("ERR"));
         h.stop();
     }
 

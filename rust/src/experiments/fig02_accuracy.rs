@@ -92,7 +92,9 @@ pub fn compute(ctx: &ExpContext) -> Vec<AccRow> {
                         head_out,
                     };
                     let mut m = Mlp::new(&cfg, &mut rng);
-                    let rep = m.train(&tr, &te, epochs, 32, 1e-3, true, &mut rng);
+                    let rep = m
+                        .train(&tr, &te, epochs, 32, 1e-3, true, &mut rng)
+                        .expect("mlp training failed");
                     let acc = *rep.test_acc.last().unwrap();
                     if butterfly {
                         bfly_accs.push(acc);

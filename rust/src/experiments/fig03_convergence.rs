@@ -40,7 +40,9 @@ pub fn compute(ctx: &ExpContext) -> Vec<(String, Vec<f64>)> {
                 head_out: hidden,
             };
             let mut m = Mlp::new(&cfg, &mut rng_m);
-            let rep = m.train(&tr, &te, epochs, 32, lr, use_adam, &mut rng_m);
+            let rep = m
+                .train(&tr, &te, epochs, 32, lr, use_adam, &mut rng_m)
+                .expect("mlp training failed");
             out.push((format!("{head_name}-{opt_name}"), rep.test_acc));
         }
     }

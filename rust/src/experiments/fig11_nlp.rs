@@ -60,7 +60,9 @@ pub fn compute(ctx: &ExpContext) -> Vec<NlpRow> {
                 };
                 let mut rng_m = Rng::seed_from_u64(ctx.seed + 111);
                 let mut m = Mlp::new(&cfg, &mut rng_m);
-                let _ = m.train(&train_c, &test_c, epochs, 32, 1e-3, true, &mut rng_m);
+                let _ = m
+                    .train(&train_c, &test_c, epochs, 32, 1e-3, true, &mut rng_m)
+                    .expect("mlp training failed");
                 // predictions on test
                 let logits = m.forward(&test_c.x);
                 let pred: Vec<usize> = (0..test_c.y.len())

@@ -59,14 +59,14 @@ pub fn compute(ctx: &ExpContext) -> Vec<TimeRow> {
             let train_d = time_us(
                 || {
                     let (_, tape) = dense.forward_tape(&x);
-                    std::hint::black_box(dense.vjp(&tape, &cot));
+                    std::hint::black_box(dense.vjp(&tape, &cot).unwrap());
                 },
                 reps,
             );
             let train_b = time_us(
                 || {
                     let (_, tape) = bfly.forward_tape(&x);
-                    std::hint::black_box(bfly.vjp(&tape, &cot));
+                    std::hint::black_box(bfly.vjp(&tape, &cot).unwrap());
                 },
                 reps,
             );

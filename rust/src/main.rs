@@ -5,6 +5,7 @@
 //! butterfly-net serve [--addr 127.0.0.1:7070] [--config cfg.toml] [--set k=v]
 //!                     [--store DIR] [--metrics-interval SECS] [--slow-ms MS]
 //!                     [--log-level debug|info|warn|error] [--chaos]
+//!                     [--fallback variant=other]...
 //! butterfly-net save [--store DIR] [--name m] [--kind butterfly-head]
 //!                    [--n1 64] [--n2 32] [--train-steps 200] [--seed N]
 //! butterfly-net swap <variant> <name[@vN]> [--addr 127.0.0.1:7070]
@@ -24,8 +25,8 @@ use butterfly_net::butterfly::{Butterfly, TruncatedButterfly};
 use butterfly_net::cli::Args;
 use butterfly_net::config::Config;
 use butterfly_net::coordinator::{
-    serve, BatcherConfig, ChaosConfig, Coordinator, Engine, FaultyEngine, NativeHeadEngine,
-    PjrtEngine, RetryPolicy,
+    serve, BatcherConfig, BreakerConfig, ChaosConfig, Coordinator, Engine, FaultyEngine,
+    NativeHeadEngine, PjrtEngine, RetryPolicy,
 };
 use butterfly_net::experiments::{self, ExpContext};
 use butterfly_net::linalg::Mat;
@@ -116,6 +117,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "slow-ms",
         "log-level",
         "chaos",
+        "fallback",
     ])?;
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_file(p)?,
@@ -157,6 +159,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 retry_default.max_backoff.as_millis() as usize,
             ) as u64),
         },
+        // The serve binary runs breakers by default (window 64); set
+        // server.breaker_window=0 to disable. The library default stays
+        // disabled so embedders opt in.
+        breaker: {
+            let std_breaker = BreakerConfig::standard();
+            BreakerConfig {
+                window: cfg.get_usize("server.breaker_window", std_breaker.window),
+                error_ratio: cfg.get_f64("server.breaker_error_ratio", std_breaker.error_ratio),
+                cooldown: std::time::Duration::from_millis(cfg.get_usize(
+                    "server.breaker_cooldown_ms",
+                    std_breaker.cooldown.as_millis() as usize,
+                ) as u64),
+                halfopen_probes: cfg
+                    .get_usize("server.breaker_halfopen_probes", std_breaker.halfopen_probes),
+            }
+        },
     };
     // --chaos wraps every engine in a fault injector so the retry and
     // deadline paths can be exercised against a live server. Tuned via
@@ -168,6 +186,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             std::time::Duration::from_millis(cfg.get_usize("chaos.latency_min_ms", 0) as u64),
             std::time::Duration::from_millis(cfg.get_usize("chaos.latency_max_ms", 50) as u64),
         )),
+        panic_prob: cfg.get_f64("chaos.panic_prob", 0.0),
         seed: cfg.get_i64("chaos.seed", 0xC4A0) as u64,
     });
     let wrap = |e: Box<dyn Engine>| -> Box<dyn Engine> {
@@ -180,6 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         event::warn("coordinator.chaos")
             .msg("fault injection ACTIVE on all variants")
             .field("fail_prob", c.fail_prob)
+            .field("panic_prob", c.panic_prob)
             .field("seed", c.seed)
             .emit();
     }
@@ -231,6 +251,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .emit(),
         }
     }
+    // Degraded routing: `server.fallback.<variant> = "<other>"` config
+    // keys and repeatable `--fallback variant=other` flags name where
+    // INFER traffic goes while a variant's breaker is open.
+    let mut fallbacks: Vec<(String, String)> = cfg
+        .keys()
+        .filter_map(|k| {
+            let variant = k.strip_prefix("server.fallback.")?;
+            Some((variant.to_string(), cfg.get_str(k, "")))
+        })
+        .collect();
+    for spec in args.get_all("fallback") {
+        let (variant, target) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--fallback expects variant=other, got `{spec}`"))?;
+        fallbacks.push((variant.to_string(), target.to_string()));
+    }
+    for (variant, target) in fallbacks {
+        coordinator.set_fallback(&variant, &target)?;
+    }
     // Slow-request log: requests slower than this end-to-end emit a
     // `coordinator.slow` warn event with per-stage timings. 0 disables.
     let slow_ms = args.get_usize("slow-ms", cfg.get_usize("server.slow_request_ms", 250))?;
@@ -260,7 +299,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         handle.addr,
         coordinator.variant_names().join(", ")
     );
-    println!("protocol: INFER <variant> [DEADLINE <ms>] <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | VARIANTS | PING");
+    println!("protocol: INFER <variant> [DEADLINE <ms>] <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | HEALTH [<variant>] | VARIANTS | PING");
     if args.flag("once") {
         // test hook: serve briefly then exit cleanly
         std::thread::sleep(std::time::Duration::from_millis(200));
@@ -315,7 +354,7 @@ fn random_tensor(spec: &butterfly_net::runtime::TensorSpec, rng: &mut Rng) -> Te
 
 /// Quick supervised fit against a random linear teacher so a saved
 /// checkpoint holds *trained* weights, not an init. Returns final MSE.
-fn train_head(head: &mut Head, steps: usize, rng: &mut Rng) -> f64 {
+fn train_head(head: &mut Head, steps: usize, rng: &mut Rng) -> Result<f64> {
     let (n_out, n_in) = head.shape();
     let teacher = Mat::gaussian(n_out, n_in, 1.0 / (n_in as f64).sqrt(), rng);
     fit_head_to_teacher(head, &teacher, steps, 32, rng)
@@ -353,7 +392,7 @@ fn cmd_save(args: &Args) -> Result<()> {
             } else {
                 Head::butterfly(n1, n2, &mut rng)
             };
-            let mse = train_head(&mut head, steps, &mut rng);
+            let mse = train_head(&mut head, steps, &mut rng)?;
             println!("trained {kind} {n1}→{n2} for {steps} steps (final mse {mse:.5})");
             Model::Head(head)
         }

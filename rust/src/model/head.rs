@@ -9,6 +9,7 @@ use super::replacement::{ReplacementLayer, ReplacementTape};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::train::{Optimizer, Sgd};
+use anyhow::{bail, Result};
 
 /// Plain dense linear layer `y = W·x (+ no bias — matching the layers
 /// the paper replaces)`.
@@ -95,19 +96,28 @@ impl Head {
 
     /// VJP: returns (input cotangent, flat parameter grads matching
     /// [`Self::params`]).
-    pub fn vjp(&self, tape: &HeadTape, dout: &Mat) -> (Mat, Vec<f64>) {
+    ///
+    /// Errors when the tape was recorded by the other head kind —
+    /// a caller bug, but one that must surface as an `Err` rather than
+    /// unwind through the serving stack's panic isolation net.
+    pub fn vjp(&self, tape: &HeadTape, dout: &Mat) -> Result<(Mat, Vec<f64>)> {
         match (self, tape) {
             (Head::Dense(d), HeadTape::Dense(x)) => {
                 // y = x·Wᵀ: dW = doutᵀ·x ; dx = dout·W
                 let dw = dout.t_matmul(x);
                 let dx = dout.matmul(&d.w);
-                (dx, dw.data().to_vec())
+                Ok((dx, dw.data().to_vec()))
             }
             (Head::Butterfly(b), HeadTape::Butterfly(t, _)) => {
                 let (dx, g) = b.vjp(t, dout);
-                (dx, ReplacementLayer::flat_grads(&g))
+                Ok((dx, ReplacementLayer::flat_grads(&g)))
             }
-            _ => panic!("head/tape mismatch"),
+            (Head::Dense(_), HeadTape::Butterfly(..)) => {
+                bail!("head/tape mismatch: dense head given a butterfly tape")
+            }
+            (Head::Butterfly(_), HeadTape::Dense(_)) => {
+                bail!("head/tape mismatch: butterfly head given a dense tape")
+            }
         }
     }
 
@@ -136,9 +146,15 @@ pub fn fit_head_to_teacher(
     steps: usize,
     batch: usize,
     rng: &mut Rng,
-) -> f64 {
+) -> Result<f64> {
     let (n_out, n_in) = head.shape();
-    assert_eq!(teacher.shape(), (n_out, n_in), "teacher shape mismatch");
+    if teacher.shape() != (n_out, n_in) {
+        bail!(
+            "teacher shape {:?} does not match head {:?}",
+            teacher.shape(),
+            (n_out, n_in)
+        );
+    }
     let mut opt = Sgd::with_momentum(0.05, 0.9);
     let mut params = head.params();
     let mut last = f64::NAN;
@@ -149,11 +165,11 @@ pub fn fit_head_to_teacher(
         let mut resid = &y - &target;
         last = resid.fro2() / batch as f64;
         resid.scale(2.0 / batch as f64);
-        let (_, g) = head.vjp(&tape, &resid);
+        let (_, g) = head.vjp(&tape, &resid)?;
         opt.step(&mut params, &g);
         head.set_params(&params);
     }
-    last
+    Ok(last)
 }
 
 #[cfg(test)]
@@ -176,9 +192,39 @@ mod tests {
         let mut rng = Rng::seed_from_u64(203);
         let mut head = Head::dense(16, 8, &mut rng);
         let teacher = Mat::gaussian(8, 16, 0.25, &mut rng);
-        let first = fit_head_to_teacher(&mut head, &teacher, 1, 32, &mut rng);
-        let last = fit_head_to_teacher(&mut head, &teacher, 200, 32, &mut rng);
+        let first = fit_head_to_teacher(&mut head, &teacher, 1, 32, &mut rng).unwrap();
+        let last = fit_head_to_teacher(&mut head, &teacher, 200, 32, &mut rng).unwrap();
         assert!(last < first, "mse did not improve: {first} → {last}");
+    }
+
+    #[test]
+    fn fit_head_rejects_teacher_shape_mismatch() {
+        let mut rng = Rng::seed_from_u64(204);
+        let mut head = Head::dense(16, 8, &mut rng);
+        let teacher = Mat::gaussian(16, 8, 0.25, &mut rng); // transposed
+        let e = fit_head_to_teacher(&mut head, &teacher, 1, 4, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("does not match"), "{e}");
+    }
+
+    /// Regression: a head/tape kind mismatch used to `panic!` out of
+    /// `vjp`. It must be a plain `Err` so a misuse inside an engine
+    /// surfaces as a failed batch, not an unwound worker.
+    #[test]
+    fn vjp_rejects_mismatched_tape_without_panicking() {
+        let mut rng = Rng::seed_from_u64(205);
+        let dense = Head::dense(16, 8, &mut rng);
+        let bfly = Head::butterfly(16, 8, &mut rng);
+        let x = Mat::gaussian(2, 16, 1.0, &mut rng);
+        let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
+        let (_, dense_tape) = dense.forward_tape(&x);
+        let (_, bfly_tape) = bfly.forward_tape(&x);
+        let e = dense.vjp(&bfly_tape, &cot).unwrap_err();
+        assert!(e.to_string().contains("head/tape mismatch"), "{e}");
+        let e = bfly.vjp(&dense_tape, &cot).unwrap_err();
+        assert!(e.to_string().contains("head/tape mismatch"), "{e}");
+        // the matched pairs still work
+        assert!(dense.vjp(&dense_tape, &cot).is_ok());
+        assert!(bfly.vjp(&bfly_tape, &cot).is_ok());
     }
 
     #[test]
@@ -188,7 +234,7 @@ mod tests {
         let x = Mat::gaussian(2, 6, 1.0, &mut rng);
         let cot = Mat::gaussian(2, 3, 1.0, &mut rng);
         let (_, tape) = head.forward_tape(&x);
-        let (dx, g) = head.vjp(&tape, &cot);
+        let (dx, g) = head.vjp(&tape, &cot).unwrap();
         let loss = |h: &Head, x: &Mat| -> f64 { h.forward(x).hadamard(&cot).data().iter().sum() };
         let eps = 1e-6;
         for r in 0..2 {
@@ -223,7 +269,7 @@ mod tests {
         let x = Mat::gaussian(2, 16, 1.0, &mut rng);
         let cot = Mat::gaussian(2, 8, 1.0, &mut rng);
         let (_, tape) = head.forward_tape(&x);
-        let (_, g) = head.vjp(&tape, &cot);
+        let (_, g) = head.vjp(&tape, &cot).unwrap();
         let loss = |h: &Head, x: &Mat| -> f64 { h.forward(x).hadamard(&cot).data().iter().sum() };
         let p0 = head.params();
         let eps = 1e-6;

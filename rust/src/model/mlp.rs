@@ -14,6 +14,7 @@ use crate::data::classif::ClassifData;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::train::{Adam, Optimizer, Sgd};
+use anyhow::Result;
 
 /// Model configuration.
 #[derive(Clone, Debug)]
@@ -101,7 +102,7 @@ impl Mlp {
     }
 
     /// Loss + full gradient step state. Returns (loss, flat grads).
-    fn loss_grad(&self, x: &Mat, labels: &[usize]) -> (f64, Vec<f64>) {
+    fn loss_grad(&self, x: &Mat, labels: &[usize]) -> Result<(f64, Vec<f64>)> {
         let h = self.hidden(x); // batch×hidden (post-relu)
         let (z, head_tape) = self.head.forward_tape(&h);
         let logits = match &self.readout {
@@ -113,7 +114,7 @@ impl Mlp {
             None => dlogits,
             Some(r) => dlogits.matmul(r),
         };
-        let (dh, ghead) = self.head.vjp(&head_tape, &dz);
+        let (dh, ghead) = self.head.vjp(&head_tape, &dz)?;
         // relu backward: zero where h == 0
         let mut dh = dh;
         for (dv, &hv) in dh.data_mut().iter_mut().zip(h.data().iter()) {
@@ -125,7 +126,7 @@ impl Mlp {
         let gw1 = dh.t_matmul(x);
         let mut g = gw1.data().to_vec();
         g.extend_from_slice(&ghead);
-        (loss, g)
+        Ok((loss, g))
     }
 
     pub fn params(&self) -> Vec<f64> {
@@ -156,7 +157,7 @@ impl Mlp {
         lr: f64,
         use_adam: bool,
         rng: &mut Rng,
-    ) -> TrainReport {
+    ) -> Result<TrainReport> {
         let n = train.y.len();
         let mut report = TrainReport::default();
         let mut params = self.params();
@@ -172,7 +173,7 @@ impl Mlp {
             for chunk in perm.chunks(batch) {
                 let xb = train.x.select_rows(chunk);
                 let yb: Vec<usize> = chunk.iter().map(|&i| train.y[i]).collect();
-                let (loss, g) = self.loss_grad(&xb, &yb);
+                let (loss, g) = self.loss_grad(&xb, &yb)?;
                 grad_sq_sum += g.iter().map(|v| v * v).sum::<f64>();
                 if use_adam {
                     adam.step(&mut params, &g);
@@ -197,7 +198,7 @@ impl Mlp {
             );
         }
         report.train_time_s = t0.elapsed().as_secs_f64();
-        report
+        Ok(report)
     }
 }
 
@@ -235,7 +236,7 @@ mod tests {
             },
             &mut rng,
         );
-        let rep = m.train(&tr, &te, 12, 16, 0.05, false, &mut rng);
+        let rep = m.train(&tr, &te, 12, 16, 0.05, false, &mut rng).unwrap();
         let final_acc = *rep.test_acc.last().unwrap();
         assert!(final_acc > 0.6, "dense head acc {final_acc}");
         assert!(rep.train_loss[0] > *rep.train_loss.last().unwrap());
@@ -259,7 +260,7 @@ mod tests {
         let dense = Mlp::new(&cfg_d, &mut rng);
         let mut bfly = Mlp::new(&cfg_b, &mut rng);
         assert!(bfly.head.num_params() < dense.head.num_params());
-        let rep = bfly.train(&tr, &te, 15, 16, 0.01, true, &mut rng);
+        let rep = bfly.train(&tr, &te, 15, 16, 0.01, true, &mut rng).unwrap();
         let final_acc = *rep.test_acc.last().unwrap();
         assert!(final_acc > 0.6, "butterfly head acc {final_acc}");
     }
@@ -279,7 +280,7 @@ mod tests {
         );
         let x = Mat::gaussian(4, 8, 1.0, &mut rng);
         let labels = vec![0usize, 1, 2, 1];
-        let (_, g) = m.loss_grad(&x, &labels);
+        let (_, g) = m.loss_grad(&x, &labels).unwrap();
         let p0 = m.params();
         let h = 1e-6;
         for i in [0usize, 30, p0.len() - 1] {

@@ -101,6 +101,11 @@ impl Obs {
                 .field("rejected", vm.rejected.get())
                 .field("deadline_expired", vm.deadline_expired.get())
                 .field("retries", vm.retries.get())
+                .field("panics", vm.panics.get())
+                .field("respawns", vm.respawns.get())
+                .field("breaker_shed", vm.breaker_shed.get())
+                .field("fallback_served", vm.fallback_served.get())
+                .field("breaker_state", vm.breaker_state.get())
                 .field("swaps", vm.swaps.get())
                 .field("queue_depth", vm.queue_depth.get())
                 .field("p50_us", vm.latency.quantile(0.5).as_micros())

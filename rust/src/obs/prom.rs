@@ -77,6 +77,34 @@ pub fn render(reg: &MetricsRegistry) -> String {
     );
     counter_family(
         &mut out,
+        "bfly_panics_total",
+        "Engine panics caught by the worker isolation net.",
+        &all,
+        |v| v.panics.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_worker_respawns_total",
+        "Workers respawned by the supervisor after a panic.",
+        &all,
+        |v| v.respawns.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_breaker_shed_total",
+        "Requests shed by an open circuit breaker.",
+        &all,
+        |v| v.breaker_shed.get(),
+    );
+    counter_family(
+        &mut out,
+        "bfly_fallback_served_total",
+        "Requests answered by this variant's fallback while shedding.",
+        &all,
+        |v| v.fallback_served.get(),
+    );
+    counter_family(
+        &mut out,
         "bfly_batches_total",
         "Batches dispatched to the engine.",
         &all,
@@ -95,6 +123,13 @@ pub fn render(reg: &MetricsRegistry) -> String {
         "Requests queued awaiting batch dispatch.",
         &all,
         |v| v.queue_depth.get(),
+    );
+    gauge_family(
+        &mut out,
+        "bfly_breaker_state",
+        "Circuit breaker state: 0=closed, 1=half_open, 2=open.",
+        &all,
+        |v| v.breaker_state.get(),
     );
     gauge_family(
         &mut out,
@@ -209,6 +244,11 @@ mod tests {
         d.rejected.inc();
         d.deadline_expired.add(2);
         d.retries.add(5);
+        d.panics.add(2);
+        d.respawns.inc();
+        d.breaker_shed.inc();
+        d.fallback_served.inc();
+        d.breaker_state.set(2);
         d.queue_depth.set(2);
         d.batches.record(3);
         d.latency.record(Duration::from_micros(3));
@@ -231,6 +271,13 @@ mod tests {
         assert!(text.contains("bfly_deadline_expired_total{variant=\"dense\"} 2"));
         assert!(text.contains("bfly_retries_total{variant=\"dense\"} 5"));
         assert!(text.contains("bfly_queue_depth{variant=\"dense\"} 2"));
+        assert!(text.contains("# TYPE bfly_breaker_state gauge"));
+        assert!(text.contains("bfly_panics_total{variant=\"dense\"} 2"));
+        assert!(text.contains("bfly_worker_respawns_total{variant=\"dense\"} 1"));
+        assert!(text.contains("bfly_breaker_shed_total{variant=\"dense\"} 1"));
+        assert!(text.contains("bfly_fallback_served_total{variant=\"dense\"} 1"));
+        assert!(text.contains("bfly_breaker_state{variant=\"dense\"} 2"));
+        assert!(text.contains("bfly_breaker_state{variant=\"butterfly\"} 0"));
         // idle variant renders zeros, including a histogram skeleton
         assert!(text.contains("bfly_requests_total{variant=\"butterfly\"} 0"));
         assert!(text.contains("bfly_latency_us_bucket{variant=\"butterfly\",le=\"+Inf\"} 0"));

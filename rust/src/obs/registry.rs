@@ -6,7 +6,7 @@
 //! Requests that never reach a variant (unknown-variant lookups) are
 //! accounted to the reserved [`UNROUTED`] variant so the per-variant
 //! invariant `requests == responses + rejected + errors +
-//! deadline_expired` always reconciles.
+//! deadline_expired + breaker_shed` always reconciles.
 
 use super::trace::TraceRing;
 use crate::metrics::{BatchStats, Counter, Gauge, LatencyHistogram};
@@ -36,6 +36,21 @@ pub struct VariantMetrics {
     pub retries: Counter,
     /// Engine hot-swaps completed by this variant's batcher.
     pub swaps: Counter,
+    /// Engine panics caught by the worker's `catch_unwind` net (each
+    /// panicking batch counts once; its requests land in `errors`).
+    pub panics: Counter,
+    /// Engine-pool workers respawned by the supervisor after a panic
+    /// (informational, not an accounting term).
+    pub respawns: Counter,
+    /// Requests shed by the circuit breaker while Open/HalfOpen
+    /// (`ERR variant unhealthy`). Fifth accounting term.
+    pub breaker_shed: Counter,
+    /// Requests answered by this variant's configured fallback after
+    /// the breaker shed them here (informational; the fallback hop
+    /// carries its own normal accounting on the fallback variant).
+    pub fallback_served: Counter,
+    /// Circuit-breaker state: 0 = closed, 1 = half-open, 2 = open.
+    pub breaker_state: Gauge,
     /// Jobs currently queued (submitted, not yet dispatched).
     pub queue_depth: Gauge,
     /// End-to-end latency (submit → response received).
@@ -59,6 +74,11 @@ impl VariantMetrics {
             deadline_expired: Counter::default(),
             retries: Counter::default(),
             swaps: Counter::default(),
+            panics: Counter::default(),
+            respawns: Counter::default(),
+            breaker_shed: Counter::default(),
+            fallback_served: Counter::default(),
+            breaker_state: Gauge::default(),
             queue_depth: Gauge::default(),
             latency: LatencyHistogram::new(),
             queue_wait: LatencyHistogram::new(),
@@ -68,14 +88,15 @@ impl VariantMetrics {
     }
 
     /// Does `requests == responses + rejected + errors +
-    /// deadline_expired` hold right now? (Meaningful only when no
-    /// request is in flight.)
+    /// deadline_expired + breaker_shed` hold right now? (Meaningful
+    /// only when no request is in flight.)
     pub fn accounted(&self) -> bool {
         self.requests.get()
             == self.responses.get()
                 + self.rejected.get()
                 + self.errors.get()
                 + self.deadline_expired.get()
+                + self.breaker_shed.get()
     }
 
     /// Multi-line human snapshot of this variant.
@@ -83,7 +104,8 @@ impl VariantMetrics {
         let (nb, mean_b, max_b) = self.batches.summary();
         format!(
             "variant={} requests={} responses={} errors={} rejected={} swaps={} queue_depth={} \
-             deadline_expired={} retries={}\n\
+             deadline_expired={} retries={} panics={} respawns={} breaker_shed={} \
+             fallback_served={} breaker_state={}\n\
              variant={} {}\n\
              variant={} {}\n\
              variant={} {}\n\
@@ -97,6 +119,11 @@ impl VariantMetrics {
             self.queue_depth.get(),
             self.deadline_expired.get(),
             self.retries.get(),
+            self.panics.get(),
+            self.respawns.get(),
+            self.breaker_shed.get(),
+            self.fallback_served.get(),
+            self.breaker_state.get(),
             self.name,
             self.latency.snapshot("latency"),
             self.name,
@@ -122,6 +149,10 @@ pub struct Totals {
     pub deadline_expired: u64,
     pub retries: u64,
     pub swaps: u64,
+    pub panics: u64,
+    pub respawns: u64,
+    pub breaker_shed: u64,
+    pub fallback_served: u64,
     pub batches: u64,
     pub batch_items: u64,
     pub max_batch: u64,
@@ -185,6 +216,10 @@ impl MetricsRegistry {
             t.deadline_expired += vm.deadline_expired.get();
             t.retries += vm.retries.get();
             t.swaps += vm.swaps.get();
+            t.panics += vm.panics.get();
+            t.respawns += vm.respawns.get();
+            t.breaker_shed += vm.breaker_shed.get();
+            t.fallback_served += vm.fallback_served.get();
             let (nb, _, max_b) = vm.batches.summary();
             t.batches += nb;
             t.batch_items += vm.batches.items();
@@ -269,6 +304,34 @@ mod tests {
         assert_eq!(t.deadline_expired, 1);
         assert_eq!(t.retries, 3);
         assert!(vm.snapshot().contains("deadline_expired=1 retries=3"));
+    }
+
+    #[test]
+    fn breaker_shed_is_the_fifth_accounting_term() {
+        let r = registry();
+        let vm = r.variant("b");
+        vm.requests.add(3);
+        vm.responses.inc();
+        vm.errors.inc();
+        assert!(!vm.accounted(), "one shed request still unaccounted");
+        vm.breaker_shed.inc();
+        assert!(vm.accounted(), "breaker_shed closes the books");
+        // Panics, respawns and fallback_served are informational.
+        vm.panics.add(2);
+        vm.respawns.inc();
+        vm.fallback_served.inc();
+        vm.breaker_state.set(2);
+        assert!(vm.accounted());
+        let t = r.totals();
+        assert_eq!(t.breaker_shed, 1);
+        assert_eq!(t.panics, 2);
+        assert_eq!(t.respawns, 1);
+        assert_eq!(t.fallback_served, 1);
+        let s = vm.snapshot();
+        assert!(
+            s.contains("panics=2 respawns=1 breaker_shed=1 fallback_served=1 breaker_state=2"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -95,6 +95,29 @@ pub fn shrink_usizes(mut input: Vec<usize>, still_fails: impl Fn(&[usize]) -> bo
     }
 }
 
+/// Install a process-wide panic hook (once) that suppresses panic
+/// reports whose payload contains `"injected panic"` or `"boom"`.
+/// Tests that deliberately drive the panic-isolation path (chaos
+/// `panic_prob`, worker respawn) call this so expected unwinds do not
+/// flood the test output; every other panic still reports normally.
+pub fn quiet_expected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !payload.contains("injected panic") && !payload.contains("boom") {
+                default(info);
+            }
+        }));
+    });
+}
+
 /// Generator helpers used across property tests.
 pub mod gen {
     use crate::rng::Rng;

@@ -1,14 +1,16 @@
 //! Chaos suite: the accounting invariant
-//! `requests == responses + rejected + errors + deadline_expired`
-//! must hold under injected engine failures, latency spikes, request
-//! deadlines, and concurrent hot swaps — before and after shutdown.
+//! `requests == responses + rejected + errors + deadline_expired +
+//! breaker_shed` must hold under injected engine failures, panics,
+//! latency spikes, request deadlines, and concurrent hot swaps —
+//! before and after shutdown.
 //!
 //! These tests run in their own CI step (`cargo test -q --test
 //! chaos_coordinator`); the tier-1 runs skip them by the `chaos_`
 //! name prefix.
 
 use butterfly_net::coordinator::{
-    BatcherConfig, ChaosConfig, Coordinator, Engine, FaultyEngine, RetryPolicy,
+    BatcherConfig, BreakerConfig, BreakerState, ChaosConfig, Coordinator, Engine, FaultyEngine,
+    RetryPolicy,
 };
 use butterfly_net::linalg::Mat;
 use std::sync::{Arc, Mutex};
@@ -60,6 +62,7 @@ fn chaos_accounting_under_failures_latency_and_swaps() {
         fail_every: None,
         latency: Some((Duration::from_millis(50), Duration::from_millis(200))),
         seed: 0xBEEF,
+        ..ChaosConfig::default()
     };
     let mut c = Coordinator::new();
     c.register(
@@ -75,6 +78,7 @@ fn chaos_accounting_under_failures_latency_and_swaps() {
                 backoff: Duration::from_millis(5),
                 max_backoff: Duration::from_millis(20),
             },
+            ..BatcherConfig::default()
         },
     );
     let c = Arc::new(c);
@@ -236,6 +240,7 @@ fn chaos_retry_repins_to_post_swap_engine() {
                 backoff: Duration::from_millis(30),
                 max_backoff: Duration::from_millis(60),
             },
+            ..BatcherConfig::default()
         },
     );
     let c = Arc::new(c);
@@ -254,4 +259,161 @@ fn chaos_retry_repins_to_post_swap_engine() {
     assert_eq!(vm.errors.get(), 0);
     assert_eq!(vm.responses.get(), 1);
     assert!(vm.accounted(), "{}", vm.snapshot());
+}
+
+/// The full self-healing story under seeded chaos:
+///
+/// 1. a panic storm (`panic_prob: 1`) answers every caller with
+///    `engine panic` and the supervisor respawns every lost worker —
+///    no worker is permanently lost;
+/// 2. a 60%-failure / 25%-panic engine trips its breaker Open, after
+///    which plain `infer` sheds with `variant unhealthy` while routed
+///    traffic is served by the configured fallback, bitwise identical
+///    to calling the fallback directly;
+/// 3. swapping in a clean engine resets the breaker to HalfOpen and
+///    two successful probes close it again.
+///
+/// The five-term accounting identity is exact on every variant
+/// throughout, before and after shutdown.
+#[test]
+fn chaos_breaker_lifecycle_panics_fallback_and_recovery() {
+    butterfly_net::testing::quiet_expected_panics();
+    let bcfg = |n: usize| BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 32,
+        workers: n,
+        retry: RetryPolicy {
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(1),
+        },
+        ..BatcherConfig::default()
+    };
+    let mut c = Coordinator::new();
+
+    // ---- 1. panic storm: isolation + respawn, breaker disabled ----
+    c.register(
+        "stormy",
+        Box::new(FaultyEngine::new(
+            Box::new(Mul(2.0)),
+            ChaosConfig {
+                panic_prob: 1.0,
+                ..ChaosConfig::default()
+            },
+        )),
+        bcfg(2),
+    );
+    for i in 0..10 {
+        let e = c.infer("stormy", vec![i as f64, 0.0]).unwrap_err();
+        assert_eq!(e.to_string(), "engine panic");
+    }
+    let vm_stormy = c.obs.variant("stormy");
+    assert_eq!(vm_stormy.panics.get(), 10);
+    assert_eq!(vm_stormy.respawns.get(), 10, "every lost worker respawned");
+    assert_eq!(vm_stormy.errors.get(), 10);
+    // after swapping in a clean engine the pool serves again
+    c.swap_variant("stormy", Box::new(Mul(2.0))).unwrap();
+    for i in 0..5 {
+        let x = 10.0 + i as f64;
+        assert_eq!(c.infer("stormy", vec![x, -x]).unwrap(), vec![2.0 * x, -2.0 * x]);
+    }
+    assert!(vm_stormy.accounted(), "stormy: {}", vm_stormy.snapshot());
+
+    // ---- 2. breaker trips under mixed failures + panics ----
+    let breaker = BreakerConfig {
+        window: 8,
+        error_ratio: 0.5,
+        cooldown: Duration::from_secs(60), // recovery comes via swap, not cooldown
+        halfopen_probes: 2,
+    };
+    c.register(
+        "sick",
+        Box::new(FaultyEngine::new(
+            Box::new(Mul(2.0)),
+            ChaosConfig {
+                fail_prob: 0.6,
+                panic_prob: 0.25,
+                seed: 0x0D15_EA5E,
+                ..ChaosConfig::default()
+            },
+        )),
+        BatcherConfig {
+            breaker: breaker.clone(),
+            ..bcfg(2)
+        },
+    );
+    c.register("backup", Box::new(Mul(3.0)), bcfg(2));
+    c.set_fallback("sick", "backup").unwrap();
+    assert!(c.set_fallback("sick", "sick").is_err(), "self-fallback must be rejected");
+
+    for i in 0..400 {
+        if c.breaker_state("sick") == Some(BreakerState::Open) {
+            break;
+        }
+        let x = i as f64;
+        match c.infer("sick", vec![x, -x]) {
+            Ok(y) => assert_eq!(y, vec![2.0 * x, -2.0 * x]),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg == "engine panic" || msg.starts_with("inference failed"),
+                    "unexpected error: {msg}"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        c.breaker_state("sick"),
+        Some(BreakerState::Open),
+        "breaker must trip under 60% failures + 25% panics"
+    );
+    let vm_sick = c.obs.variant("sick");
+    assert_eq!(
+        vm_sick.respawns.get(),
+        vm_sick.panics.get(),
+        "every panicked worker must be respawned"
+    );
+
+    // ---- 2b. shed + fallback while Open ----
+    let e = c.infer("sick", vec![1.0, 2.0]).unwrap_err();
+    assert_eq!(e.to_string(), "variant unhealthy", "plain infer must not follow fallback");
+    for i in 0..5 {
+        let x = 1000.0 + i as f64;
+        let (via_out, via) = c.infer_routed("sick", vec![x, -x], None).unwrap();
+        assert_eq!(via.as_deref(), Some("backup"));
+        let direct = c.infer("backup", vec![x, -x]).unwrap();
+        assert_eq!(via_out, direct, "fallback response must be bitwise identical");
+        assert_eq!(direct, vec![3.0 * x, -3.0 * x]);
+    }
+    assert_eq!(vm_sick.fallback_served.get(), 5);
+    assert!(vm_sick.breaker_shed.get() >= 6);
+    let vm_backup = c.obs.variant("backup");
+    assert_eq!(vm_backup.responses.get(), 10); // 5 routed + 5 direct
+
+    // ---- 3. recovery: swap → HalfOpen → probes → Closed ----
+    c.swap_variant("sick", Box::new(Mul(2.0))).unwrap();
+    assert_eq!(c.breaker_state("sick"), Some(BreakerState::HalfOpen));
+    for i in 0..2 {
+        let x = 2000.0 + i as f64;
+        assert_eq!(c.infer("sick", vec![x, -x]).unwrap(), vec![2.0 * x, -2.0 * x]);
+    }
+    assert_eq!(
+        c.breaker_state("sick"),
+        Some(BreakerState::Closed),
+        "two successful probes must close the breaker"
+    );
+    for i in 0..20 {
+        let x = 3000.0 + i as f64;
+        assert_eq!(c.infer("sick", vec![x, -x]).unwrap(), vec![2.0 * x, -2.0 * x]);
+    }
+
+    for vm in [&vm_stormy, &vm_sick, &vm_backup] {
+        assert!(vm.accounted(), "pre-shutdown: {}", vm.snapshot());
+        assert_eq!(vm.queue_depth.get(), 0, "queue must drain");
+    }
+    c.shutdown();
+    for vm in [&vm_stormy, &vm_sick, &vm_backup] {
+        assert!(vm.accounted(), "post-shutdown: {}", vm.snapshot());
+    }
 }

@@ -1,0 +1,309 @@
+//! Health suite: the self-healing layer end to end — circuit breaker
+//! lifecycle (Closed → Open → HalfOpen → Closed), panic isolation with
+//! supervisor respawn, degraded routing over the wire (`OK VIA`), and
+//! the `HEALTH` protocol verb.
+//!
+//! These tests run in their own CI step (`cargo test -q --test
+//! health_coordinator`); the tier-1 runs skip them by the `health_`
+//! name prefix. Deterministic companions to the randomized
+//! `chaos_coordinator` suite.
+
+use butterfly_net::coordinator::{
+    serve, BatcherConfig, BreakerConfig, BreakerState, Coordinator, Engine, RetryPolicy,
+};
+use butterfly_net::linalg::Mat;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Mul(f64);
+impl Engine for Mul {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        Ok(x.map(|v| self.0 * v))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// Engine whose health is a switch: errors while `broken`, doubles
+/// its input once repaired.
+struct Flaky {
+    broken: Arc<AtomicBool>,
+}
+impl Engine for Flaky {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        if self.broken.load(Ordering::SeqCst) {
+            anyhow::bail!("down");
+        }
+        Ok(x.map(|v| 2.0 * v))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// Engine that panics on a negative first coordinate — the
+/// deterministic trigger for the worker isolation net.
+struct Grenade;
+impl Engine for Grenade {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        for r in 0..x.rows() {
+            assert!(x.row(r)[0] >= 0.0, "boom: negative input");
+        }
+        Ok(x.map(|v| 2.0 * v))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// Small fast batcher with no retries (failures must reach the breaker
+/// on the first attempt) and the given breaker config.
+fn bcfg(breaker: BreakerConfig) -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_cap: 32,
+        workers: 2,
+        retry: RetryPolicy {
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(1),
+        },
+        breaker,
+    }
+}
+
+fn breaker(window: usize, cooldown: Duration, probes: usize) -> BreakerConfig {
+    BreakerConfig {
+        window,
+        error_ratio: 0.5,
+        cooldown,
+        halfopen_probes: probes,
+    }
+}
+
+#[test]
+fn health_breaker_opens_then_recovers_through_cooldown_probes() {
+    let broken = Arc::new(AtomicBool::new(true));
+    let mut c = Coordinator::new();
+    c.register(
+        "f",
+        Box::new(Flaky {
+            broken: Arc::clone(&broken),
+        }),
+        bcfg(breaker(4, Duration::from_millis(150), 2)),
+    );
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Closed));
+    // four straight failures fill the window and trip it Open
+    for i in 0..4 {
+        let e = c.infer("f", vec![i as f64, 0.0]).unwrap_err();
+        assert_eq!(e.to_string(), "inference failed: down");
+    }
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Open));
+    // while Open (cooldown not yet elapsed) requests shed without
+    // reaching the engine
+    let e = c.infer("f", vec![0.0, 0.0]).unwrap_err();
+    assert_eq!(e.to_string(), "variant unhealthy");
+    // repair the engine, wait out the cooldown: the next request is a
+    // HalfOpen probe, and the second success closes the breaker
+    broken.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(c.infer("f", vec![1.0, -1.0]).unwrap(), vec![2.0, -2.0]);
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::HalfOpen));
+    assert_eq!(c.infer("f", vec![2.0, -2.0]).unwrap(), vec![4.0, -4.0]);
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Closed));
+    let vm = c.obs.variant("f");
+    assert_eq!(vm.breaker_shed.get(), 1);
+    assert_eq!(vm.errors.get(), 4);
+    assert_eq!(vm.responses.get(), 2);
+    assert!(vm.accounted(), "{}", vm.snapshot());
+}
+
+#[test]
+fn health_failed_probe_reopens_the_breaker() {
+    let broken = Arc::new(AtomicBool::new(true));
+    let mut c = Coordinator::new();
+    c.register(
+        "f",
+        Box::new(Flaky {
+            broken: Arc::clone(&broken),
+        }),
+        bcfg(breaker(2, Duration::from_millis(30), 1)),
+    );
+    for _ in 0..2 {
+        let _ = c.infer("f", vec![1.0, 1.0]).unwrap_err();
+    }
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Open));
+    // engine still broken: the post-cooldown probe fails and the
+    // breaker snaps back Open with a fresh cooldown
+    std::thread::sleep(Duration::from_millis(50));
+    let e = c.infer("f", vec![1.0, 1.0]).unwrap_err();
+    assert_eq!(e.to_string(), "inference failed: down");
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Open));
+    // a later (repaired) probe still recovers
+    broken.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(c.infer("f", vec![3.0, 0.0]).unwrap(), vec![6.0, 0.0]);
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Closed));
+    let vm = c.obs.variant("f");
+    assert!(vm.accounted(), "{}", vm.snapshot());
+}
+
+#[test]
+fn health_swap_resets_open_breaker_to_halfopen() {
+    let mut c = Coordinator::new();
+    c.register(
+        "f",
+        Box::new(Flaky {
+            broken: Arc::new(AtomicBool::new(true)),
+        }),
+        // cooldown far longer than the test: only the swap can unlock it
+        bcfg(breaker(2, Duration::from_secs(60), 1)),
+    );
+    for _ in 0..2 {
+        let _ = c.infer("f", vec![1.0, 1.0]).unwrap_err();
+    }
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Open));
+    c.swap_variant("f", Box::new(Mul(2.0))).unwrap();
+    assert_eq!(
+        c.breaker_state("f"),
+        Some(BreakerState::HalfOpen),
+        "swap must skip the cooldown and go straight to probing"
+    );
+    assert_eq!(c.infer("f", vec![5.0, -5.0]).unwrap(), vec![10.0, -10.0]);
+    assert_eq!(c.breaker_state("f"), Some(BreakerState::Closed));
+    let vm = c.obs.variant("f");
+    assert_eq!(vm.swaps.get(), 1);
+    assert!(vm.accounted(), "{}", vm.snapshot());
+}
+
+#[test]
+fn health_panicking_engine_is_isolated_and_worker_respawns() {
+    butterfly_net::testing::quiet_expected_panics();
+    let mut c = Coordinator::new();
+    c.register("g", Box::new(Grenade), bcfg(BreakerConfig::default()));
+    // a panicking batch answers its caller with ERR, not a hung channel
+    let e = c.infer("g", vec![-1.0, 0.0]).unwrap_err();
+    assert_eq!(e.to_string(), "engine panic");
+    // the pool keeps serving: the supervisor replaced the dead worker
+    for i in 0..8 {
+        let x = 1.0 + i as f64;
+        assert_eq!(c.infer("g", vec![x, -x]).unwrap(), vec![2.0 * x, -2.0 * x]);
+    }
+    let vm = c.obs.variant("g");
+    assert_eq!(vm.panics.get(), 1);
+    assert_eq!(vm.respawns.get(), 1);
+    assert_eq!(vm.errors.get(), 1);
+    assert_eq!(vm.responses.get(), 8);
+    assert!(vm.accounted(), "{}", vm.snapshot());
+    c.shutdown(); // must join the respawned generation too
+}
+
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    out
+}
+
+fn roundtrip_text(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let r = BufReader::new(s);
+    let mut out = String::new();
+    for l in r.lines() {
+        let l = l.unwrap();
+        if l == "END" {
+            break;
+        }
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+/// The degraded-routing story over the wire: trip `sick` Open, watch
+/// `INFER sick` come back `OK VIA backup` bitwise identical to the
+/// direct `INFER backup` answer, read it all in `HEALTH`, then recover
+/// via a hot swap and watch `HEALTH` report closed again.
+#[test]
+fn health_verb_and_fallback_via_over_tcp() {
+    let broken = Arc::new(AtomicBool::new(true));
+    let mut c = Coordinator::new();
+    c.register(
+        "sick",
+        Box::new(Flaky {
+            broken: Arc::clone(&broken),
+        }),
+        bcfg(breaker(2, Duration::from_secs(60), 1)),
+    );
+    c.register("backup", Box::new(Mul(3.0)), bcfg(BreakerConfig::default()));
+    c.set_fallback("sick", "backup").unwrap();
+    let c = Arc::new(c);
+    let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+
+    // two failures trip the 2-outcome window
+    for _ in 0..2 {
+        let e = roundtrip(h.addr, "INFER sick 1 2");
+        assert_eq!(e, "ERR inference failed: down\n");
+    }
+    assert_eq!(c.breaker_state("sick"), Some(BreakerState::Open));
+
+    // Open + fallback: the wire answer carries the VIA annotation and
+    // its values are bitwise identical to asking the fallback directly
+    let via = roundtrip(h.addr, "INFER sick 1.5 -2");
+    assert_eq!(via, "OK VIA backup 4.5 -6\n");
+    let direct = roundtrip(h.addr, "INFER backup 1.5 -2");
+    assert_eq!(direct, "OK 4.5 -6\n");
+    assert_eq!(
+        via.strip_prefix("OK VIA backup ").unwrap(),
+        direct.strip_prefix("OK ").unwrap(),
+    );
+
+    // HEALTH shows the full picture
+    let report = roundtrip_text(h.addr, "HEALTH");
+    assert!(report.contains("variant=sick state=open breaker=on"), "{report}");
+    assert!(report.contains("fallback=backup"), "{report}");
+    assert!(report.contains("variant=backup state=closed breaker=off"), "{report}");
+    assert!(
+        report.contains("ready=true live=true variants=2 open=1 half_open=0"),
+        "{report}"
+    );
+    let one = roundtrip_text(h.addr, "HEALTH sick");
+    assert!(one.contains("variant=sick"), "{one}");
+    assert!(!one.contains("ready="), "{one}");
+    assert!(roundtrip(h.addr, "HEALTH ghost").starts_with("ERR"));
+
+    // recovery: repair + swap (→ HalfOpen), one probe closes it
+    broken.store(false, Ordering::SeqCst);
+    c.swap_variant("sick", Box::new(Mul(2.0))).unwrap();
+    assert_eq!(roundtrip(h.addr, "INFER sick 1 2"), "OK 2 4\n");
+    let report = roundtrip_text(h.addr, "HEALTH");
+    assert!(report.contains("variant=sick state=closed"), "{report}");
+    assert!(report.contains("open=0 half_open=0"), "{report}");
+
+    let vm_sick = c.obs.variant("sick");
+    let vm_backup = c.obs.variant("backup");
+    assert_eq!(vm_sick.fallback_served.get(), 1);
+    assert_eq!(vm_sick.breaker_shed.get(), 1);
+    assert!(vm_sick.accounted(), "{}", vm_sick.snapshot());
+    assert!(vm_backup.accounted(), "{}", vm_backup.snapshot());
+    h.stop();
+}

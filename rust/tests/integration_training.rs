@@ -37,7 +37,7 @@ fn butterfly_classifier_matches_dense_at_fraction_of_params() {
         };
         let mut rng_m = Rng::seed_from_u64(2);
         let mut m = Mlp::new(&cfg, &mut rng_m);
-        let rep = m.train(&tr, &te, 18, 32, 1e-3, true, &mut rng_m);
+        let rep = m.train(&tr, &te, 18, 32, 1e-3, true, &mut rng_m).unwrap();
         accs.push(*rep.test_acc.last().unwrap());
         params.push(m.head.num_params());
     }
