@@ -61,6 +61,19 @@ impl Config {
         self.values.keys()
     }
 
+    /// Key remainders under a dotted prefix, sorted: with keys
+    /// `slo.dense.p99_ms` and `slo.dense.availability`,
+    /// `subkeys("slo")` yields `dense.p99_ms` and `dense.availability`.
+    /// Used by the `slo.*` objective scan in `serve`.
+    pub fn subkeys(&self, prefix: &str) -> Vec<String> {
+        let dotted = format!("{prefix}.");
+        self.values
+            .keys()
+            .filter_map(|k| k.strip_prefix(&dotted))
+            .map(String::from)
+            .collect()
+    }
+
     /// Typed accessors with defaults.
     pub fn get_i64(&self, key: &str, default: i64) -> i64 {
         match self.values.get(key) {
@@ -160,6 +173,25 @@ variants = ["dense", "butterfly"]
         // non-string values are not silently coerced
         let c2 = Config::from_str("[store]\ndir = 7\n").unwrap();
         assert_eq!(c2.get_str_opt("store.dir"), None);
+    }
+
+    #[test]
+    fn subkeys_strip_the_prefix() {
+        let mut c = Config::new();
+        c.set_override("slo.dense.p99_ms=5.0").unwrap();
+        c.set_override("slo.dense.availability=0.999").unwrap();
+        c.set_override("slo.warn_burn=2").unwrap();
+        assert_eq!(
+            c.subkeys("slo"),
+            vec![
+                "dense.availability".to_string(),
+                "dense.p99_ms".to_string(),
+                "warn_burn".to_string(),
+            ]
+        );
+        assert!(c.subkeys("server").is_empty());
+        // `slo` itself is not its own subkey; only dotted children.
+        assert!(!c.subkeys("slo.dense.p99_ms").contains(&String::new()));
     }
 
     #[test]

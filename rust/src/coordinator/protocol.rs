@@ -6,7 +6,15 @@
 //!   SWAP <variant> <name[@vN]>\n   (hot-swap variant to a store checkpoint)
 //!   METRICS\n                      (human-readable per-variant snapshot)
 //!   METRICS PROM\n                 (Prometheus text exposition format)
+//!   STATS [<variant>] [<window_s>]\n (windowed rates + latency quantiles from
+//!                                   the sampler ring; default window 10 s —
+//!                                   a bare integer is a window, anything
+//!                                   else a variant)
+//!   SLO\n                          (objective, burn rates, budget remaining and
+//!                                   alert state per objective variant)
 //!   TRACE [n]\n                    (last n completed request traces, default 16)
+//!   TRACE ID <id>\n                (one trace looked up by its trace ID;
+//!                                   ERR trace not found once evicted)
 //!   HEALTH [<variant>]\n           (breaker state + window stats; all variants
 //!                                   plus a ready/live summary when no variant given)
 //!   VARIANTS\n
@@ -18,7 +26,8 @@
 //!   OK\n                          (SWAP)
 //!   ERR <message>\n
 //!   PONG\n
-//!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / TRACE / HEALTH / VARIANTS)
+//!   <multi-line text>\nEND\n      (METRICS / METRICS PROM / STATS / SLO /
+//!                                  TRACE / HEALTH / VARIANTS)
 //! ```
 //!
 //! `INFER` grammar details:
@@ -51,8 +60,19 @@ pub enum Request {
     Metrics,
     /// Prometheus text-format exposition (`METRICS PROM`).
     MetricsProm,
+    /// Windowed rates and latency quantiles from the sampler ring, for
+    /// one variant or all; `window_s` defaults server-side
+    /// ([`DEFAULT_STATS_WINDOW_S`]).
+    Stats {
+        variant: Option<String>,
+        window_s: Option<u64>,
+    },
+    /// Per-variant SLO objectives, burn rates and alert states.
+    Slo,
     /// Last `n` completed request traces, newest first.
     Trace { n: usize },
+    /// One specific trace looked up by its trace ID (`TRACE ID <id>`).
+    TraceId { id: u64 },
     /// Breaker state + window stats for one variant, or for every
     /// variant plus a process ready/live summary.
     Health { variant: Option<String> },
@@ -62,6 +82,9 @@ pub enum Request {
 
 /// Default trace count for a bare `TRACE`.
 const DEFAULT_TRACE_N: usize = 16;
+
+/// Default `STATS` window when the client names none, seconds.
+pub const DEFAULT_STATS_WINDOW_S: u64 = crate::obs::timeseries::DEFAULT_WINDOW_S;
 
 /// A server response, ready to serialise.
 #[derive(Clone, Debug, PartialEq)]
@@ -143,9 +166,54 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             Some(other) => Err(format!("unknown METRICS mode `{other}` (try PROM)")),
         },
+        Some("STATS") => {
+            // Grammar: STATS [<variant>] [<window_s>]. A bare integer
+            // token is a window; anything else is a variant name (so a
+            // variant literally named like a number needs the verb's
+            // all-variants form).
+            let mut variant = None;
+            let mut window_s = None;
+            if let Some(t) = it.next() {
+                match t.parse::<u64>() {
+                    Ok(w) => window_s = Some(w),
+                    Err(_) => variant = Some(t.to_string()),
+                }
+            }
+            if let Some(t) = it.next() {
+                if window_s.is_some() {
+                    return Err("STATS takes at most one window".to_string());
+                }
+                window_s = Some(t.parse().map_err(|_| {
+                    format!("STATS window must be whole seconds, got `{t}`")
+                })?);
+            }
+            if it.next().is_some() {
+                return Err("STATS takes at most two arguments".to_string());
+            }
+            if window_s == Some(0) {
+                return Err("STATS window must be ≥ 1 s".to_string());
+            }
+            Ok(Request::Stats { variant, window_s })
+        }
+        Some("SLO") => {
+            if it.next().is_some() {
+                return Err("SLO takes no arguments".to_string());
+            }
+            Ok(Request::Slo)
+        }
         Some("TRACE") => {
-            let n = match it.next() {
-                None => DEFAULT_TRACE_N,
+            match it.next() {
+                None => Ok(Request::Trace { n: DEFAULT_TRACE_N }),
+                Some("ID") => {
+                    let t = it.next().ok_or_else(|| "TRACE ID needs a trace id".to_string())?;
+                    let id: u64 = t
+                        .parse()
+                        .map_err(|_| format!("TRACE ID needs a numeric trace id, got `{t}`"))?;
+                    if it.next().is_some() {
+                        return Err("TRACE ID takes exactly one argument".to_string());
+                    }
+                    Ok(Request::TraceId { id })
+                }
                 Some(t) => {
                     let n: usize = t
                         .parse()
@@ -153,13 +221,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     if n == 0 {
                         return Err("TRACE count must be ≥ 1".to_string());
                     }
-                    n
+                    if it.next().is_some() {
+                        return Err("TRACE takes at most one argument".to_string());
+                    }
+                    Ok(Request::Trace { n })
                 }
-            };
-            if it.next().is_some() {
-                return Err("TRACE takes at most one argument".to_string());
             }
-            Ok(Request::Trace { n })
         }
         Some("HEALTH") => {
             let variant = it.next().map(str::to_string);
@@ -356,6 +423,62 @@ mod tests {
         assert!(parse_request("TRACE x").is_err());
         assert!(parse_request("TRACE 0").is_err());
         assert!(parse_request("TRACE 5 9").is_err());
+    }
+
+    #[test]
+    fn parse_stats() {
+        assert_eq!(
+            parse_request("STATS").unwrap(),
+            Request::Stats {
+                variant: None,
+                window_s: None
+            }
+        );
+        assert_eq!(
+            parse_request("STATS butterfly").unwrap(),
+            Request::Stats {
+                variant: Some("butterfly".into()),
+                window_s: None
+            }
+        );
+        // a bare integer is a window, not a variant
+        assert_eq!(
+            parse_request("STATS 30").unwrap(),
+            Request::Stats {
+                variant: None,
+                window_s: Some(30)
+            }
+        );
+        assert_eq!(
+            parse_request("STATS butterfly 60").unwrap(),
+            Request::Stats {
+                variant: Some("butterfly".into()),
+                window_s: Some(60)
+            }
+        );
+        assert!(parse_request("STATS 0").is_err());
+        assert!(parse_request("STATS butterfly 0").is_err());
+        assert!(parse_request("STATS butterfly x").is_err());
+        assert!(parse_request("STATS 10 20").is_err());
+        assert!(parse_request("STATS a 10 b").is_err());
+    }
+
+    #[test]
+    fn parse_slo() {
+        assert_eq!(parse_request("SLO").unwrap(), Request::Slo);
+        assert!(parse_request("SLO extra").is_err());
+    }
+
+    #[test]
+    fn parse_trace_id() {
+        assert_eq!(
+            parse_request("TRACE ID 42").unwrap(),
+            Request::TraceId { id: 42 }
+        );
+        assert!(parse_request("TRACE ID").is_err());
+        assert!(parse_request("TRACE ID x").is_err());
+        assert!(parse_request("TRACE ID 1 2").is_err());
+        assert!(parse_request("TRACE ID -1").is_err());
     }
 
     #[test]

@@ -196,8 +196,21 @@ fn respond(c: &Coordinator, line: &str) -> Response {
         Err(e) => Response::Err(e),
         Ok(Request::Ping) => Response::Pong,
         Ok(Request::Metrics) => Response::Text(c.obs.snapshot()),
-        Ok(Request::MetricsProm) => Response::Text(c.obs.prometheus()),
+        // Through the coordinator, not `c.obs`, so the SLO families
+        // (budget remaining, per-variant state) are included.
+        Ok(Request::MetricsProm) => Response::Text(c.prometheus()),
         Ok(Request::Trace { n }) => Response::Text(c.obs.traces.render(n)),
+        Ok(Request::TraceId { id }) => match c.obs.traces.find(id) {
+            Some(t) => Response::Text(t.render()),
+            None => Response::Err("trace not found".into()),
+        },
+        Ok(Request::Stats { variant, window_s }) => {
+            match c.stats_report(variant.as_deref(), window_s) {
+                Ok(report) => Response::Text(report),
+                Err(e) => Response::Err(format!("{e:#}")),
+            }
+        }
+        Ok(Request::Slo) => Response::Text(c.slo_report()),
         Ok(Request::Variants) => Response::Text(c.variant_names().join("\n")),
         Ok(Request::Health { variant }) => match c.health_report(variant.as_deref()) {
             Ok(report) => Response::Text(report),
@@ -327,6 +340,42 @@ mod tests {
         // malformed observability verbs get ERR, not disconnect
         assert!(roundtrip(h.addr, "METRICS JUNK").starts_with("ERR"));
         assert!(roundtrip(h.addr, "TRACE x").starts_with("ERR"));
+        h.stop();
+    }
+
+    #[test]
+    // Named without the `slo_` substring so tier-1's `--skip slo_`
+    // (which isolates the wall-clock sampler suite) keeps running it.
+    fn stats_objectives_and_trace_id_endpoints() {
+        let (c, h) = start();
+        let _ = roundtrip(h.addr, "INFER neg 1 2");
+        // No sampler running: STATS answers with the warming-up line.
+        let stats = roundtrip_text(h.addr, "STATS");
+        assert!(stats.contains("variant=neg no samples yet"), "{stats}");
+        // Two direct snapshots make a window; the verb reports it.
+        c.obs.timeseries.sample_at(&c.obs.metrics, 0);
+        c.obs.timeseries.sample_at(&c.obs.metrics, 1_000_000);
+        let stats = roundtrip_text(h.addr, "STATS neg 10");
+        assert!(stats.contains("variant=neg window_s=10"), "{stats}");
+        assert!(roundtrip(h.addr, "STATS ghost").starts_with("ERR"));
+        assert!(roundtrip(h.addr, "STATS neg 0").starts_with("ERR"));
+        // No objectives configured.
+        let slo = roundtrip_text(h.addr, "SLO");
+        assert!(slo.contains("no slo objectives configured"), "{slo}");
+        // TRACE ID: look up the inference's trace by its id.
+        let traces = roundtrip_text(h.addr, "TRACE 1");
+        let id = traces
+            .split_whitespace()
+            .next()
+            .and_then(|t| t.strip_prefix('#'))
+            .and_then(|t| t.parse::<u64>().ok())
+            .expect("trace line starts with #<id>");
+        let one = roundtrip_text(h.addr, &format!("TRACE ID {id}"));
+        assert!(one.starts_with(&format!("#{id} variant=neg")), "{one}");
+        assert_eq!(
+            roundtrip(h.addr, "TRACE ID 999999999"),
+            "ERR trace not found\n"
+        );
         h.stop();
     }
 

@@ -6,6 +6,7 @@
 //!                     [--store DIR] [--metrics-interval SECS] [--slow-ms MS]
 //!                     [--log-level debug|info|warn|error] [--chaos]
 //!                     [--fallback variant=other]...
+//!                     [--slo variant=p99_ms,availability]...
 //! butterfly-net save [--store DIR] [--name m] [--kind butterfly-head]
 //!                    [--n1 64] [--n2 32] [--train-steps 200] [--seed N]
 //! butterfly-net swap <variant> <name[@vN]> [--addr 127.0.0.1:7070]
@@ -26,12 +27,12 @@ use butterfly_net::cli::Args;
 use butterfly_net::config::Config;
 use butterfly_net::coordinator::{
     serve, BatcherConfig, BreakerConfig, ChaosConfig, Coordinator, Engine, FaultyEngine,
-    NativeHeadEngine, PjrtEngine, RetryPolicy,
+    NativeHeadEngine, PjrtEngine, RetryPolicy, SamplerConfig,
 };
 use butterfly_net::experiments::{self, ExpContext};
 use butterfly_net::linalg::Mat;
 use butterfly_net::model::{fit_head_to_teacher, Head};
-use butterfly_net::obs::{event, Level};
+use butterfly_net::obs::{event, Level, SloConfig, SloMonitor, SloObjective};
 use butterfly_net::rng::Rng;
 use butterfly_net::runtime::{Runtime, RuntimeHandle, Tensor};
 use butterfly_net::store::{Model, ModelRegistry};
@@ -118,6 +119,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "log-level",
         "chaos",
         "fallback",
+        "slo",
     ])?;
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_file(p)?,
@@ -278,28 +280,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .obs
             .set_slow_threshold(Some(std::time::Duration::from_millis(slow_ms as u64)));
     }
-    let coordinator = Arc::new(coordinator);
-    // Periodic per-variant metrics report to stderr (off by default).
+    // SLO objectives: `slo.<variant>.p99_ms` / `slo.<variant>.availability`
+    // config keys plus repeatable `--slo variant=p99_ms,availability`
+    // flags (flags win; `-` skips a position). Objectives arm the
+    // two-window burn-rate alerter evaluated on every sampler tick.
+    let slo_defaults = SloConfig::default();
+    let slo_cfg = SloConfig {
+        fast_window: std::time::Duration::from_secs(cfg.get_usize(
+            "slo.fast_window_s",
+            slo_defaults.fast_window.as_secs() as usize,
+        ) as u64),
+        slow_window: std::time::Duration::from_secs(cfg.get_usize(
+            "slo.slow_window_s",
+            slo_defaults.slow_window.as_secs() as usize,
+        ) as u64),
+        warn_burn: cfg.get_f64("slo.warn_burn", slo_defaults.warn_burn),
+        page_burn: cfg.get_f64("slo.page_burn", slo_defaults.page_burn),
+    };
+    let mut objectives: std::collections::BTreeMap<String, SloObjective> =
+        std::collections::BTreeMap::new();
+    for rest in cfg.subkeys("slo") {
+        // No dot → a global knob like `slo.warn_burn`, handled above.
+        let Some((variant, field)) = rest.rsplit_once('.') else {
+            continue;
+        };
+        let key = format!("slo.{rest}");
+        let obj = objectives.entry(variant.to_string()).or_default();
+        match field {
+            "p99_ms" => obj.p99_ms = Some(cfg.get_f64(&key, 0.0)),
+            "availability" => obj.availability = Some(cfg.get_f64(&key, 0.0)),
+            other => bail!("unknown SLO config key `{key}` (field `{other}`; p99_ms|availability)"),
+        }
+    }
+    for spec in args.get_all("slo") {
+        let (variant, targets) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--slo expects variant=p99_ms[,availability], got `{spec}`"))?;
+        let mut obj = SloObjective::default();
+        for (i, part) in targets.split(',').enumerate() {
+            if part.is_empty() || part == "-" {
+                continue;
+            }
+            let v: f64 = part
+                .parse()
+                .map_err(|_| anyhow!("--slo {spec}: `{part}` is not a number"))?;
+            match i {
+                0 => obj.p99_ms = Some(v),
+                1 => obj.availability = Some(v),
+                _ => bail!("--slo {spec}: at most two targets (p99_ms,availability)"),
+            }
+        }
+        objectives.insert(variant.to_string(), obj);
+    }
+    if !objectives.is_empty() {
+        let mut monitor = SloMonitor::new(slo_cfg);
+        for (variant, obj) in &objectives {
+            monitor
+                .set_objective(variant, *obj)
+                .map_err(|e| anyhow!("--slo/slo.* for `{variant}`: {e:#}"))?;
+        }
+        coordinator.enable_slo(monitor);
+    }
+    // Telemetry sampler: snapshots every variant's counters into the
+    // windowed ring (STATS verb, windowed Prometheus families) and
+    // evaluates SLO burn rates. The periodic stderr metrics report
+    // rides the same thread, so it stops with the coordinator instead
+    // of leaking a detached loop. server.sample_ms=0 disables both.
     let interval_s = args.get_usize(
         "metrics-interval",
         cfg.get_usize("server.metrics_interval_s", 0),
     )?;
-    if interval_s > 0 {
-        let obs = Arc::clone(&coordinator.obs);
-        std::thread::Builder::new()
-            .name("metrics-report".into())
-            .spawn(move || loop {
-                std::thread::sleep(std::time::Duration::from_secs(interval_s as u64));
-                obs.emit_report();
-            })?;
+    let sample_ms = cfg.get_usize("server.sample_ms", 1000);
+    if sample_ms > 0 {
+        coordinator.start_sampler(SamplerConfig {
+            sample_interval: std::time::Duration::from_millis(sample_ms as u64),
+            report_interval: (interval_s > 0)
+                .then(|| std::time::Duration::from_secs(interval_s as u64)),
+        });
+    } else if interval_s > 0 {
+        bail!("--metrics-interval requires server.sample_ms > 0 (the report rides the sampler)");
+    } else if !objectives.is_empty() {
+        bail!("SLO objectives require server.sample_ms > 0 (burn rates need windowed samples)");
     }
+    let coordinator = Arc::new(coordinator);
     let handle = serve(Arc::clone(&coordinator), &addr)?;
     println!(
         "serving on {} — variants: {}",
         handle.addr,
         coordinator.variant_names().join(", ")
     );
-    println!("protocol: INFER <variant> [DEADLINE <ms>] <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | TRACE [n] | HEALTH [<variant>] | VARIANTS | PING");
+    println!("protocol: INFER <variant> [DEADLINE <ms>] <v0> ... | SWAP <variant> <name[@vN]> | METRICS [PROM] | STATS [<variant>] [<window_s>] | SLO | TRACE [n] | TRACE ID <id> | HEALTH [<variant>] | VARIANTS | PING");
     if args.flag("once") {
         // test hook: serve briefly then exit cleanly
         std::thread::sleep(std::time::Duration::from_millis(200));

@@ -15,7 +15,13 @@
 //!   with a lock-free ring of recent completed traces (`TRACE <n>`)
 //!   and a slow-request log;
 //! * [`event`] — the structured, leveled event log every other module
-//!   (coordinator, store, training loops) emits through.
+//!   (coordinator, store, training loops) emits through;
+//! * [`timeseries`] — periodic counter/histogram snapshots in a
+//!   per-variant ring, differenced into windowed rates and quantiles
+//!   (the `STATS` verb and the windowed Prometheus families);
+//! * [`slo`] — per-variant latency/availability objectives with
+//!   two-window burn-rate alerting over those windows (`SLO` verb,
+//!   `slo.alert`/`slo.resolve` events, `bfly_slo_state` gauge).
 //!
 //! [`Obs`] bundles the per-process pieces; the coordinator owns one
 //! and the protocol verbs read from it.
@@ -23,14 +29,19 @@
 pub mod event;
 pub mod prom;
 pub mod registry;
+pub mod slo;
+pub mod timeseries;
 pub mod trace;
 
 pub use event::{EventLog, Level};
 pub use registry::{MetricsRegistry, Totals, VariantMetrics, UNROUTED};
+pub use slo::{SloConfig, SloMonitor, SloObjective, SloState, SloStatus};
+pub use timeseries::{TimeSeriesStore, WindowStats};
 pub use trace::{next_trace_id, CompletedTrace, TraceEvent, TraceRing};
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Slow-request threshold disabling sentinel.
@@ -42,16 +53,27 @@ const SLOW_DISABLED_US: u64 = u64::MAX;
 pub struct Obs {
     pub metrics: MetricsRegistry,
     pub traces: Arc<TraceRing>,
+    /// Windowed-telemetry ring, fed by the coordinator's sampler (and
+    /// by `sample_at` directly in tests).
+    pub timeseries: TimeSeriesStore,
     slow_us: AtomicU64,
+    /// Per-variant counter snapshot as of the previous `emit_report`,
+    /// so each report covers exactly the interval since the last one.
+    last_report: Mutex<BTreeMap<String, timeseries::Sample>>,
 }
 
 impl Obs {
     pub fn new() -> Self {
+        // Anchor the process-start instant for `bfly_uptime_seconds`
+        // as early as possible.
+        prom::anchor_process_start();
         let traces = Arc::new(TraceRing::default());
         Obs {
             metrics: MetricsRegistry::new(Arc::clone(&traces)),
             traces,
+            timeseries: TimeSeriesStore::default(),
             slow_us: AtomicU64::new(SLOW_DISABLED_US),
+            last_report: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -70,9 +92,13 @@ impl Obs {
         self.metrics.snapshot()
     }
 
-    /// Prometheus text exposition (the `METRICS PROM` verb).
+    /// Prometheus text exposition (the `METRICS PROM` verb). SLO
+    /// families need the monitor and are added by
+    /// [`Coordinator::prometheus`](crate::coordinator::Coordinator::prometheus);
+    /// this renders everything else (counters, histograms, windowed
+    /// rates/quantiles, process metadata).
     pub fn prometheus(&self) -> String {
-        prom::render(&self.metrics)
+        prom::render(&self.metrics, &self.timeseries, &[])
     }
 
     /// Requests slower than this end-to-end get a `coordinator.slow`
@@ -90,8 +116,16 @@ impl Obs {
 
     /// Emit one `metrics.report` info event per variant — the
     /// `--metrics-interval` periodic stderr reporter.
+    ///
+    /// Rates and latency quantiles (`rate_rps`, `error_ratio`,
+    /// `p50_us`/`p99_us`) cover the interval since the *previous*
+    /// report, so a latency spike shows up in the report that covers
+    /// it instead of being averaged away by hours of history; the raw
+    /// counters stay lifetime-cumulative. The first report's interval
+    /// starts at process start (≈ cumulative).
     pub fn emit_report(&self) {
-        for vm in self.metrics.all() {
+        for w in self.report_windows(self.timeseries.now_us()) {
+            let vm = self.metrics.variant(&w.variant);
             let (nb, mean_b, _) = vm.batches.summary();
             event::info("metrics.report")
                 .field("variant", &vm.name)
@@ -106,14 +140,41 @@ impl Obs {
                 .field("breaker_shed", vm.breaker_shed.get())
                 .field("fallback_served", vm.fallback_served.get())
                 .field("breaker_state", vm.breaker_state.get())
+                .field("slo_state", vm.slo_state.get())
                 .field("swaps", vm.swaps.get())
                 .field("queue_depth", vm.queue_depth.get())
-                .field("p50_us", vm.latency.quantile(0.5).as_micros())
-                .field("p99_us", vm.latency.quantile(0.99).as_micros())
+                .field("interval_s", format!("{:.1}", w.span_us as f64 / 1e6))
+                .field("interval_requests", w.requests)
+                .field("rate_rps", format!("{:.2}", w.rate_rps))
+                .field("error_ratio", format!("{:.4}", w.error_ratio))
+                .field("p50_us", w.quantile_us(0.5))
+                .field("p99_us", w.quantile_us(0.99))
                 .field("batches", nb)
                 .field("mean_batch", format!("{mean_b:.2}"))
                 .emit();
         }
+    }
+
+    /// Diff every variant's counters against the previous report's
+    /// snapshot (replacing it), tagged `now_us`. Factored out of
+    /// [`emit_report`](Self::emit_report) so the interval arithmetic
+    /// is testable without capturing stderr.
+    fn report_windows(&self, now_us: u64) -> Vec<WindowStats> {
+        let mut last = self.last_report.lock().unwrap();
+        self.metrics
+            .all()
+            .into_iter()
+            .map(|vm| {
+                let cur = timeseries::Sample::capture(&vm, now_us);
+                let prev = last
+                    .get(&vm.name)
+                    .cloned()
+                    .unwrap_or_else(|| timeseries::Sample::zero(0));
+                let w = WindowStats::between(&vm.name, &prev, &cur);
+                last.insert(vm.name.clone(), cur);
+                w
+            })
+            .collect()
     }
 }
 
@@ -154,6 +215,39 @@ mod tests {
         assert_eq!(obs.slow_threshold_us(), 250_000);
         obs.set_slow_threshold(None);
         assert_eq!(obs.slow_threshold_us(), u64::MAX);
+    }
+
+    #[test]
+    fn report_windows_cover_only_the_interval_since_last_report() {
+        let obs = Obs::new();
+        let vm = obs.variant("v");
+        // First interval: 4 fast requests.
+        vm.requests.add(4);
+        vm.responses.add(4);
+        for _ in 0..4 {
+            vm.latency.record(Duration::from_micros(10));
+        }
+        let w = &obs.report_windows(1_000_000)[0];
+        assert_eq!(w.requests, 4);
+        assert_eq!(w.quantile_us(0.99), 16); // 10 µs → bucket [8,16)
+        // Second interval: one slow request. A cumulative p99 would
+        // still sit in the fast bucket; the interval report must not.
+        vm.requests.inc();
+        vm.responses.inc();
+        vm.latency.record(Duration::from_micros(5_000));
+        let w = &obs.report_windows(2_000_000)[0];
+        assert_eq!(w.requests, 1, "only the new request");
+        assert_eq!(w.latency_count, 1);
+        assert_eq!(w.quantile_us(0.99), 8192); // 5 ms → bucket [4096,8192)
+        assert_eq!(w.span_us, 1_000_000);
+        // Cumulative counters are untouched by reporting.
+        assert_eq!(vm.requests.get(), 5);
+        // Quiet interval: all-zero deltas, no stale quantiles.
+        let w = &obs.report_windows(3_000_000)[0];
+        assert_eq!(w.requests, 0);
+        assert_eq!(w.quantile_us(0.99), 0);
+        // emit_report itself runs the same path (goes to stderr/global).
+        obs.emit_report();
     }
 
     #[test]

@@ -16,16 +16,70 @@
 //! Internal consistency: `_count` and the `+Inf` bucket are both
 //! computed from one snapshot of the bucket array, so a scrape taken
 //! mid-traffic is still a valid (if slightly stale) histogram.
+//!
+//! Beyond the cumulative families, the exposition carries:
+//!
+//! * process metadata — `bfly_build_info{version=...} 1` and
+//!   `bfly_uptime_seconds`;
+//! * windowed families from the [`TimeSeriesStore`] —
+//!   `bfly_rate_rps{variant,window_s}` and
+//!   `bfly_window_p99_us{variant,window_s}` over the [`WINDOWS_S`]
+//!   windows (samples appear once the sampler has ≥ 2 snapshots;
+//!   headers are always present so the family set is stable);
+//! * SLO families — the `bfly_slo_state` gauge for every variant and
+//!   `bfly_error_budget_remaining{variant}` for objective variants
+//!   (rendered from precomputed [`SloStatus`]es, empty without a
+//!   monitor).
 
 use super::registry::{MetricsRegistry, VariantMetrics};
+use super::slo::SloStatus;
+use super::timeseries::TimeSeriesStore;
 use crate::metrics::{bucket_upper_us, LatencyHistogram};
 use std::fmt::Write as _;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
-/// Render the whole registry in Prometheus text format.
-pub fn render(reg: &MetricsRegistry) -> String {
+/// Windows (seconds) the windowed families are exported over.
+pub const WINDOWS_S: [u64; 3] = [1, 10, 60];
+
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Pin the instant `bfly_uptime_seconds` counts from (idempotent;
+/// called from `Obs::new` so it anchors before any serving starts).
+pub(crate) fn anchor_process_start() {
+    let _ = PROCESS_START.get_or_init(Instant::now);
+}
+
+fn uptime_seconds() -> f64 {
+    PROCESS_START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Render the registry plus windowed and SLO surfaces in Prometheus
+/// text format. `slo` is the precomputed per-objective status list
+/// (empty when no monitor is configured) — precomputed because burns
+/// need the full [`Obs`](super::Obs) bundle, which the caller has and
+/// this renderer deliberately doesn't.
+pub fn render(reg: &MetricsRegistry, ts: &TimeSeriesStore, slo: &[SloStatus]) -> String {
     let all = reg.all();
     let mut out = String::new();
+    header(
+        &mut out,
+        "bfly_build_info",
+        "Build metadata; the value is always 1.",
+        "gauge",
+    );
+    let _ = writeln!(
+        out,
+        "bfly_build_info{{version=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION")
+    );
+    header(
+        &mut out,
+        "bfly_uptime_seconds",
+        "Seconds since process start.",
+        "gauge",
+    );
+    let _ = writeln!(out, "bfly_uptime_seconds {:.3}", uptime_seconds());
     counter_family(
         &mut out,
         "bfly_requests_total",
@@ -133,6 +187,13 @@ pub fn render(reg: &MetricsRegistry) -> String {
     );
     gauge_family(
         &mut out,
+        "bfly_slo_state",
+        "SLO alert state: 0=ok, 1=warning, 2=page.",
+        &all,
+        |v| v.slo_state.get(),
+    );
+    gauge_family(
+        &mut out,
         "bfly_batch_max",
         "Largest batch dispatched so far.",
         &all,
@@ -159,6 +220,56 @@ pub fn render(reg: &MetricsRegistry) -> String {
         &all,
         |v| &v.engine_time,
     );
+    // Windowed families: one sample per (variant, window) once the
+    // sampler has two snapshots to difference; headers unconditional.
+    header(
+        &mut out,
+        "bfly_rate_rps",
+        "Windowed request rate in requests per second.",
+        "gauge",
+    );
+    for vm in &all {
+        for w in WINDOWS_S {
+            if let Some(stats) = ts.window(&vm.name, Duration::from_secs(w)) {
+                let _ = writeln!(
+                    out,
+                    "bfly_rate_rps{{variant=\"{}\",window_s=\"{w}\"}} {:.3}",
+                    vm.name, stats.rate_rps
+                );
+            }
+        }
+    }
+    header(
+        &mut out,
+        "bfly_window_p99_us",
+        "Windowed p99 end-to-end latency in microseconds (log-bucket upper edge).",
+        "gauge",
+    );
+    for vm in &all {
+        for w in WINDOWS_S {
+            if let Some(stats) = ts.window(&vm.name, Duration::from_secs(w)) {
+                let _ = writeln!(
+                    out,
+                    "bfly_window_p99_us{{variant=\"{}\",window_s=\"{w}\"}} {}",
+                    vm.name,
+                    stats.quantile_us(0.99)
+                );
+            }
+        }
+    }
+    header(
+        &mut out,
+        "bfly_error_budget_remaining",
+        "Fraction of the SLO error budget left over the slow window (1=untouched, 0=exhausted).",
+        "gauge",
+    );
+    for s in slo {
+        let _ = writeln!(
+            out,
+            "bfly_error_budget_remaining{{variant=\"{}\"}} {:.4}",
+            s.variant, s.budget_remaining
+        );
+    }
     out.pop(); // drop trailing newline: protocol Text responses add it
     out
 }
@@ -233,8 +344,16 @@ fn histogram_family(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::slo::{SloObjective, SloState};
     use crate::obs::trace::TraceRing;
+    use std::collections::{BTreeMap, HashSet};
     use std::time::Duration;
+
+    /// Render with an empty time series and no SLO statuses — the
+    /// pre-windowed surface most tests assert against.
+    fn render_basic(reg: &MetricsRegistry) -> String {
+        render(reg, &TimeSeriesStore::default(), &[])
+    }
 
     fn sample_registry() -> MetricsRegistry {
         let reg = MetricsRegistry::new(Arc::new(TraceRing::new(16)));
@@ -262,7 +381,7 @@ mod tests {
     #[test]
     fn families_and_labels() {
         let reg = sample_registry();
-        let text = render(&reg);
+        let text = render_basic(&reg);
         assert!(text.contains("# TYPE bfly_requests_total counter"));
         assert!(text.contains("# TYPE bfly_queue_depth gauge"));
         assert!(text.contains("# TYPE bfly_latency_us histogram"));
@@ -278,6 +397,8 @@ mod tests {
         assert!(text.contains("bfly_fallback_served_total{variant=\"dense\"} 1"));
         assert!(text.contains("bfly_breaker_state{variant=\"dense\"} 2"));
         assert!(text.contains("bfly_breaker_state{variant=\"butterfly\"} 0"));
+        assert!(text.contains("# TYPE bfly_slo_state gauge"));
+        assert!(text.contains("bfly_slo_state{variant=\"dense\"} 0"));
         // idle variant renders zeros, including a histogram skeleton
         assert!(text.contains("bfly_requests_total{variant=\"butterfly\"} 0"));
         assert!(text.contains("bfly_latency_us_bucket{variant=\"butterfly\",le=\"+Inf\"} 0"));
@@ -287,7 +408,7 @@ mod tests {
     #[test]
     fn histogram_series_are_cumulative_and_consistent() {
         let reg = sample_registry();
-        let text = render(&reg);
+        let text = render_basic(&reg);
         // dense latency: samples at 3µs (bucket le=4) and 100µs (le=128)
         assert!(text.contains("bfly_latency_us_bucket{variant=\"dense\",le=\"4\"} 1"));
         assert!(text.contains("bfly_latency_us_bucket{variant=\"dense\",le=\"128\"} 2"));
@@ -308,7 +429,7 @@ mod tests {
 
     #[test]
     fn every_line_is_comment_or_sample() {
-        let text = render(&sample_registry());
+        let text = render_basic(&sample_registry());
         for line in text.lines() {
             if line.starts_with('#') {
                 assert!(
@@ -318,11 +439,212 @@ mod tests {
             } else {
                 let (name_part, value) = line.rsplit_once(' ').expect(line);
                 assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+                // Process-level families carry no variant label; every
+                // per-variant sample must.
+                let process_level = name_part == "bfly_uptime_seconds"
+                    || name_part.starts_with("bfly_build_info{");
                 assert!(
-                    name_part.starts_with("bfly_") && name_part.contains("variant=\""),
+                    name_part.starts_with("bfly_")
+                        && (process_level || name_part.contains("variant=\"")),
                     "{line}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn build_info_and_uptime_are_exposed() {
+        let text = render_basic(&sample_registry());
+        assert!(text.contains("# TYPE bfly_build_info gauge"), "{text}");
+        let want = format!(
+            "bfly_build_info{{version=\"{}\"}} 1",
+            env!("CARGO_PKG_VERSION")
+        );
+        assert!(text.contains(&want), "missing `{want}`");
+        assert!(text.contains("# TYPE bfly_uptime_seconds gauge"));
+        let uptime: f64 = text
+            .lines()
+            .find(|l| l.starts_with("bfly_uptime_seconds "))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .expect("uptime sample present and numeric");
+        assert!(uptime >= 0.0);
+    }
+
+    #[test]
+    fn windowed_families_appear_once_sampled() {
+        let reg = sample_registry();
+        let ts = TimeSeriesStore::new(8);
+        // Headers are present even before any samples...
+        let text = render(&reg, &ts, &[]);
+        assert!(text.contains("# TYPE bfly_rate_rps gauge"));
+        assert!(text.contains("# TYPE bfly_window_p99_us gauge"));
+        assert!(!text.contains("bfly_rate_rps{"), "no samples yet: {text}");
+        // ...and samples show up with two snapshots to difference.
+        ts.sample_at(&reg, 0);
+        let d = reg.variant("dense");
+        d.requests.add(6);
+        d.responses.add(6);
+        d.latency.record(Duration::from_micros(200));
+        ts.sample_at(&reg, 1_000_000);
+        let text = render(&reg, &ts, &[]);
+        for w in WINDOWS_S {
+            assert!(
+                text.contains(&format!("bfly_rate_rps{{variant=\"dense\",window_s=\"{w}\"}} 6.000")),
+                "window {w}: {text}"
+            );
+            // 200 µs → bucket [128,256)
+            assert!(
+                text.contains(&format!(
+                    "bfly_window_p99_us{{variant=\"dense\",window_s=\"{w}\"}} 256"
+                )),
+                "window {w}: {text}"
+            );
+        }
+    }
+
+    #[test]
+    // Named without the `slo_` substring so tier-1's `--skip slo_`
+    // (which isolates the wall-clock sampler suite) keeps running it.
+    fn error_budget_family_renders_objective_statuses() {
+        let reg = sample_registry();
+        let status = SloStatus {
+            variant: "dense".to_string(),
+            objective: SloObjective {
+                p99_ms: Some(1.0),
+                availability: Some(0.999),
+            },
+            state: SloState::Warning,
+            fast_burn: 2.5,
+            slow_burn: 0.25,
+            budget_remaining: 0.75,
+            window_p99_us: 256,
+            window_error_ratio: 0.0,
+            has_data: true,
+        };
+        let text = render(&reg, &TimeSeriesStore::default(), &[status]);
+        assert!(
+            text.contains("bfly_error_budget_remaining{variant=\"dense\"} 0.7500"),
+            "{text}"
+        );
+        // Without statuses the family is header-only.
+        let text = render_basic(&reg);
+        assert!(text.contains("# TYPE bfly_error_budget_remaining gauge"));
+        assert!(!text.contains("bfly_error_budget_remaining{"));
+    }
+
+    /// Text-format lint over the full surface: every sample belongs to
+    /// a family with HELP and TYPE, no duplicate series, histogram
+    /// buckets cumulative/non-decreasing with `+Inf` == `_count`.
+    #[test]
+    fn prom_text_format_lint_over_full_surface() {
+        let reg = sample_registry();
+        let ts = TimeSeriesStore::new(8);
+        ts.sample_at(&reg, 0);
+        let d = reg.variant("dense");
+        d.requests.add(10);
+        d.responses.add(9);
+        d.errors.inc();
+        for us in [3, 90, 90, 4000] {
+            d.latency.record(Duration::from_micros(us));
+        }
+        ts.sample_at(&reg, 1_000_000);
+        ts.sample_at(&reg, 2_000_000);
+        let status = SloStatus {
+            variant: "dense".to_string(),
+            objective: SloObjective {
+                p99_ms: None,
+                availability: Some(0.99),
+            },
+            state: SloState::Ok,
+            fast_burn: 0.1,
+            slow_burn: 0.1,
+            budget_remaining: 0.9,
+            window_p99_us: 4096,
+            window_error_ratio: 0.001,
+            has_data: true,
+        };
+        let text = render(&reg, &ts, &[status]);
+
+        let mut helps = HashSet::new();
+        let mut types: BTreeMap<String, String> = BTreeMap::new();
+        let mut seen_series = HashSet::new();
+        // (family, variant) → (bucket values in file order, count value)
+        let mut buckets: BTreeMap<(String, String), Vec<(String, u64)>> = BTreeMap::new();
+        let mut counts: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().unwrap().to_string();
+                assert!(rest.len() > name.len() + 1, "HELP without text: {line}");
+                assert!(helps.insert(name), "duplicate HELP: {line}");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap().to_string();
+                let kind = it.next().expect(line).to_string();
+                assert!(["counter", "gauge", "histogram"].contains(&kind.as_str()), "{line}");
+                assert!(types.insert(name, kind).is_none(), "duplicate TYPE: {line}");
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect(line);
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+            assert!(
+                seen_series.insert(series.to_string()),
+                "duplicate series: {line}"
+            );
+            // Resolve the sample to its family: exact name, or
+            // base + histogram suffix.
+            let name = series.split('{').next().unwrap().to_string();
+            let family = if types.contains_key(&name) {
+                name.clone()
+            } else {
+                let base = ["_bucket", "_sum", "_count"]
+                    .iter()
+                    .find_map(|suf| name.strip_suffix(suf))
+                    .unwrap_or_else(|| panic!("sample without family: {line}"))
+                    .to_string();
+                assert_eq!(
+                    types.get(&base).map(String::as_str),
+                    Some("histogram"),
+                    "suffix on non-histogram: {line}"
+                );
+                base
+            };
+            assert!(helps.contains(&family), "sample without HELP: {line}");
+            // Track histogram internals for the cumulativity check.
+            let variant = series
+                .split("variant=\"")
+                .nth(1)
+                .map(|s| s.split('"').next().unwrap().to_string())
+                .unwrap_or_default();
+            if name.ends_with("_bucket") {
+                let le = series
+                    .split("le=\"")
+                    .nth(1)
+                    .expect(line)
+                    .split('"')
+                    .next()
+                    .unwrap()
+                    .to_string();
+                buckets
+                    .entry((family.clone(), variant))
+                    .or_default()
+                    .push((le, value.parse().unwrap()));
+            } else if name.ends_with("_count") && types[&family] == "histogram" {
+                counts.insert((family, variant), value.parse().unwrap());
+            }
+        }
+        assert!(!buckets.is_empty() && !counts.is_empty());
+        for (key, series) in &buckets {
+            let mut prev = 0u64;
+            for (le, v) in series {
+                assert!(*v >= prev, "non-cumulative bucket {key:?} le={le}");
+                prev = *v;
+            }
+            let (last_le, last_v) = series.last().unwrap();
+            assert_eq!(last_le, "+Inf", "{key:?} must end at +Inf");
+            assert_eq!(last_v, &counts[key], "+Inf != _count for {key:?}");
         }
     }
 }

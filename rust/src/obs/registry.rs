@@ -51,6 +51,9 @@ pub struct VariantMetrics {
     pub fallback_served: Counter,
     /// Circuit-breaker state: 0 = closed, 1 = half-open, 2 = open.
     pub breaker_state: Gauge,
+    /// SLO alert state: 0 = ok, 1 = warning, 2 = page (set by the
+    /// [`slo`](super::slo) evaluator; stays 0 without objectives).
+    pub slo_state: Gauge,
     /// Jobs currently queued (submitted, not yet dispatched).
     pub queue_depth: Gauge,
     /// End-to-end latency (submit → response received).
@@ -79,6 +82,7 @@ impl VariantMetrics {
             breaker_shed: Counter::default(),
             fallback_served: Counter::default(),
             breaker_state: Gauge::default(),
+            slo_state: Gauge::default(),
             queue_depth: Gauge::default(),
             latency: LatencyHistogram::new(),
             queue_wait: LatencyHistogram::new(),
@@ -105,7 +109,7 @@ impl VariantMetrics {
         format!(
             "variant={} requests={} responses={} errors={} rejected={} swaps={} queue_depth={} \
              deadline_expired={} retries={} panics={} respawns={} breaker_shed={} \
-             fallback_served={} breaker_state={}\n\
+             fallback_served={} breaker_state={} slo_state={}\n\
              variant={} {}\n\
              variant={} {}\n\
              variant={} {}\n\
@@ -124,6 +128,7 @@ impl VariantMetrics {
             self.breaker_shed.get(),
             self.fallback_served.get(),
             self.breaker_state.get(),
+            self.slo_state.get(),
             self.name,
             self.latency.snapshot("latency"),
             self.name,

@@ -1,0 +1,570 @@
+//! Per-variant SLO objectives and two-window burn-rate alerting.
+//!
+//! An objective ([`SloObjective`]) states what "good" means for a
+//! variant: a p99 latency target (`slo.<variant>.p99_ms`) and/or an
+//! availability target (`slo.<variant>.availability`, e.g. `0.999`).
+//! The *error budget* is the tolerated bad fraction — `1 − availability`
+//! for availability, and a fixed 1% of requests for a p99 objective
+//! (p99 ≤ target by definition allows 1% of requests above it).
+//!
+//! The *burn rate* over a window is how fast that budget is being
+//! spent, as a multiple of the sustainable rate:
+//!
+//! ```text
+//! availability burn = windowed_error_ratio / (1 − availability_target)
+//! latency burn      = windowed_slow_fraction(target) / 0.01
+//! ```
+//!
+//! A burn of 1 means the variant exactly exhausts its budget over the
+//! objective period; 10 means ten times too fast. When a variant has
+//! both objectives, its burn is the worse of the two.
+//!
+//! Alerting uses the classic **two-window** rule: an alert fires only
+//! when the burn exceeds the threshold over *both* a fast window
+//! (catches the regression quickly, resets quickly on recovery) and a
+//! slow window (rejects blips that a single fast window would page on).
+//! Thresholds come from [`SloConfig`]: `warn_burn` (default 2×) drives
+//! Ok → Warning, `page_burn` (default 10×) drives → Page.
+//!
+//! State machine: [`SloState`] Ok(0) → Warning(1) → Page(2), one per
+//! objective variant, re-evaluated every sampler tick. Escalations
+//! emit an `slo.alert` event (error level for Page, warn for Warning),
+//! any de-escalation emits `slo.resolve` (info), and the current state
+//! is exported as the `bfly_slo_state` gauge. Windows with no data
+//! (sampler warming up, no traffic) burn at 0 — silence, not alerts.
+//!
+//! Windowed inputs come from [`super::timeseries`]; windows shorter
+//! than the retained history are clamped to it, so early in a process's
+//! life the slow window degrades toward the fast one and tightens back
+//! as history accumulates.
+
+use super::event::{EventLog, Level};
+use super::timeseries::WindowStats;
+use super::Obs;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What "good" means for one variant. At least one target must be set
+/// for the objective to be meaningful ([`SloObjective::validate`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloObjective {
+    /// p99 end-to-end latency target, milliseconds.
+    pub p99_ms: Option<f64>,
+    /// Success-fraction target in (0, 1), e.g. `0.999`.
+    pub availability: Option<f64>,
+}
+
+impl SloObjective {
+    pub fn validate(&self) -> Result<()> {
+        if self.p99_ms.is_none() && self.availability.is_none() {
+            return Err(anyhow!("objective needs a p99_ms or availability target"));
+        }
+        if let Some(p) = self.p99_ms {
+            if !(p > 0.0 && p.is_finite()) {
+                return Err(anyhow!("p99_ms target must be a positive number, got {p}"));
+            }
+        }
+        if let Some(a) = self.availability {
+            if !(a > 0.0 && a < 1.0) {
+                return Err(anyhow!(
+                    "availability target must be in (0, 1), got {a} (1.0 leaves no error budget)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Alert state of one objective variant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloState {
+    #[default]
+    Ok,
+    Warning,
+    Page,
+}
+
+impl SloState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloState::Ok => "ok",
+            SloState::Warning => "warning",
+            SloState::Page => "page",
+        }
+    }
+
+    /// `bfly_slo_state` gauge value: 0 = ok, 1 = warning, 2 = page.
+    pub fn gauge(self) -> i64 {
+        match self {
+            SloState::Ok => 0,
+            SloState::Warning => 1,
+            SloState::Page => 2,
+        }
+    }
+}
+
+/// Evaluator knobs, shared by every objective.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Fast alert window (config `slo.fast_window_s`).
+    pub fast_window: Duration,
+    /// Slow alert window (config `slo.slow_window_s`).
+    pub slow_window: Duration,
+    /// Burn multiple at which Ok escalates to Warning
+    /// (config `slo.warn_burn`).
+    pub warn_burn: f64,
+    /// Burn multiple at which the state escalates to Page
+    /// (config `slo.page_burn`).
+    pub page_burn: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            fast_window: Duration::from_secs(10),
+            slow_window: Duration::from_secs(60),
+            warn_burn: 2.0,
+            page_burn: 10.0,
+        }
+    }
+}
+
+/// One variant's current SLO picture — the `SLO` verb and the
+/// Prometheus `bfly_error_budget_remaining` family render from this.
+#[derive(Clone, Debug)]
+pub struct SloStatus {
+    pub variant: String,
+    pub objective: SloObjective,
+    pub state: SloState,
+    /// Burn multiple over the fast window (0 when no data).
+    pub fast_burn: f64,
+    /// Burn multiple over the slow window (0 when no data).
+    pub slow_burn: f64,
+    /// `max(0, 1 − slow_burn)`: the fraction of the error budget left
+    /// at the current slow-window spend rate.
+    pub budget_remaining: f64,
+    /// Windowed p99 over the slow window, µs (0 when no data).
+    pub window_p99_us: u64,
+    /// Windowed error ratio over the slow window.
+    pub window_error_ratio: f64,
+    /// Did both windows have data to evaluate?
+    pub has_data: bool,
+}
+
+impl SloStatus {
+    /// One `SLO` verb line.
+    pub fn render(&self) -> String {
+        let p99_target = self
+            .objective
+            .p99_ms
+            .map(|p| format!("{p}"))
+            .unwrap_or_else(|| "-".to_string());
+        let avail_target = self
+            .objective
+            .availability
+            .map(|a| format!("{a}"))
+            .unwrap_or_else(|| "-".to_string());
+        format!(
+            "variant={} state={} p99_ms_target={} availability_target={} \
+             fast_burn={:.2} slow_burn={:.2} budget_remaining={:.3} \
+             window_p99_us={} window_error_ratio={:.4} data={}",
+            self.variant,
+            self.state.as_str(),
+            p99_target,
+            avail_target,
+            self.fast_burn,
+            self.slow_burn,
+            self.budget_remaining,
+            self.window_p99_us,
+            self.window_error_ratio,
+            if self.has_data { "yes" } else { "warming-up" },
+        )
+    }
+}
+
+/// The evaluator: objectives, per-variant alert state, and the event
+/// log alerts go to. Driven by the coordinator's sampler thread
+/// ([`evaluate`](Self::evaluate) once per tick); read by the `SLO`
+/// verb and the Prometheus exposition
+/// ([`statuses`](Self::statuses)).
+pub struct SloMonitor {
+    cfg: SloConfig,
+    objectives: BTreeMap<String, SloObjective>,
+    states: Mutex<BTreeMap<String, SloState>>,
+    /// Alert/resolve events go here; `None` means the process-global
+    /// log. Tests inject a captured log to assert on alerts.
+    log: Option<Arc<EventLog>>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloMonitor {
+            cfg,
+            objectives: BTreeMap::new(),
+            states: Mutex::new(BTreeMap::new()),
+            log: None,
+        }
+    }
+
+    /// Route alert events to `log` instead of the global one (tests).
+    pub fn with_log(mut self, log: Arc<EventLog>) -> Self {
+        self.log = Some(log);
+        self
+    }
+
+    fn log(&self) -> &EventLog {
+        match &self.log {
+            Some(l) => l,
+            None => super::event::global(),
+        }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Declare (or replace) the objective for `variant`.
+    pub fn set_objective(&mut self, variant: &str, objective: SloObjective) -> Result<()> {
+        objective
+            .validate()
+            .map_err(|e| anyhow!("slo objective for `{variant}`: {e}"))?;
+        self.objectives.insert(variant.to_string(), objective);
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objectives.is_empty()
+    }
+
+    /// Objective variants, sorted.
+    pub fn variants(&self) -> Vec<String> {
+        self.objectives.keys().cloned().collect()
+    }
+
+    /// Burn multiple of `obj` over one window: the worse of the
+    /// availability burn (`error_ratio / budget`) and the latency burn
+    /// (`slow_fraction(target) / 1%`).
+    fn burn(cfg_obj: &SloObjective, w: &WindowStats) -> f64 {
+        let mut burn: f64 = 0.0;
+        if let Some(avail) = cfg_obj.availability {
+            let budget = (1.0 - avail).max(1e-9);
+            burn = burn.max(w.error_ratio / budget);
+        }
+        if let Some(p99_ms) = cfg_obj.p99_ms {
+            let threshold_us = (p99_ms * 1e3).max(1.0) as u64;
+            burn = burn.max(w.slow_fraction(threshold_us) / 0.01);
+        }
+        burn
+    }
+
+    /// Compute the current status of one objective variant (no state
+    /// transition — that's [`evaluate`](Self::evaluate)'s job).
+    fn status_of(&self, variant: &str, obj: &SloObjective, obs: &Obs) -> SloStatus {
+        let fast = obs.timeseries.window(variant, self.cfg.fast_window);
+        let slow = obs.timeseries.window(variant, self.cfg.slow_window);
+        let has_data = fast.is_some() && slow.is_some();
+        let fast_burn = fast.as_ref().map(|w| Self::burn(obj, w)).unwrap_or(0.0);
+        let slow_burn = slow.as_ref().map(|w| Self::burn(obj, w)).unwrap_or(0.0);
+        let (window_p99_us, window_error_ratio) = slow
+            .as_ref()
+            .map(|w| (w.quantile_us(0.99), w.error_ratio))
+            .unwrap_or((0, 0.0));
+        let state = self
+            .states
+            .lock()
+            .unwrap()
+            .get(variant)
+            .copied()
+            .unwrap_or_default();
+        SloStatus {
+            variant: variant.to_string(),
+            objective: *obj,
+            state,
+            fast_burn,
+            slow_burn,
+            budget_remaining: (1.0 - slow_burn).max(0.0),
+            window_p99_us,
+            window_error_ratio,
+            has_data,
+        }
+    }
+
+    /// Re-evaluate every objective against the current window data and
+    /// walk the alert state machine: sets the `bfly_slo_state` gauge
+    /// and emits `slo.alert` / `slo.resolve` on transitions. Called by
+    /// the coordinator's sampler once per tick (idempotent between
+    /// samples).
+    pub fn evaluate(&self, obs: &Obs) {
+        for (variant, obj) in &self.objectives {
+            let status = self.status_of(variant, obj, obs);
+            let next = if status.fast_burn >= self.cfg.page_burn
+                && status.slow_burn >= self.cfg.page_burn
+            {
+                SloState::Page
+            } else if status.fast_burn >= self.cfg.warn_burn
+                && status.slow_burn >= self.cfg.warn_burn
+            {
+                SloState::Warning
+            } else {
+                SloState::Ok
+            };
+            let mut states = self.states.lock().unwrap();
+            let cur = states.get(variant).copied().unwrap_or_default();
+            if next == cur {
+                continue;
+            }
+            states.insert(variant.clone(), next);
+            drop(states);
+            obs.variant(variant).slo_state.set(next.gauge());
+            let (target, level, msg) = if next > cur {
+                (
+                    "slo.alert",
+                    if next == SloState::Page {
+                        Level::Error
+                    } else {
+                        Level::Warn
+                    },
+                    "error budget burning too fast in both windows",
+                )
+            } else {
+                ("slo.resolve", Level::Info, "burn rate back under threshold")
+            };
+            self.log()
+                .event(level, target)
+                .field("variant", variant)
+                .field("from", cur.as_str())
+                .field("to", next.as_str())
+                .field("fast_burn", format!("{:.2}", status.fast_burn))
+                .field("slow_burn", format!("{:.2}", status.slow_burn))
+                .field(
+                    "budget_remaining",
+                    format!("{:.3}", status.budget_remaining),
+                )
+                .msg(msg)
+                .emit();
+        }
+    }
+
+    /// Current status of every objective variant, sorted by name.
+    pub fn statuses(&self, obs: &Obs) -> Vec<SloStatus> {
+        self.objectives
+            .iter()
+            .map(|(v, obj)| self.status_of(v, obj, obs))
+            .collect()
+    }
+
+    /// The `SLO` verb body: one line per objective variant.
+    pub fn render(&self, obs: &Obs) -> String {
+        if self.is_empty() {
+            return "no slo objectives configured".to_string();
+        }
+        self.statuses(obs)
+            .iter()
+            .map(SloStatus::render)
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloConfig {
+        SloConfig {
+            fast_window: Duration::from_secs(2),
+            slow_window: Duration::from_secs(6),
+            warn_burn: 2.0,
+            page_burn: 10.0,
+        }
+    }
+
+    /// Drive `n_ok` successes and `n_err` errors into `obs`'s variant
+    /// `v`, then take a sample at `t_us`.
+    fn tick(obs: &Obs, v: &str, n_ok: u64, n_err: u64, lat_us: u64, t_us: u64) {
+        let vm = obs.variant(v);
+        vm.requests.add(n_ok + n_err);
+        vm.responses.add(n_ok);
+        vm.errors.add(n_err);
+        for _ in 0..n_ok {
+            vm.latency.record(Duration::from_micros(lat_us));
+        }
+        obs.timeseries.sample_at(&obs.metrics, t_us);
+    }
+
+    #[test]
+    fn objective_validation() {
+        assert!(SloObjective::default().validate().is_err());
+        assert!(SloObjective {
+            p99_ms: Some(0.0),
+            availability: None
+        }
+        .validate()
+        .is_err());
+        for bad in [0.0, 1.0, 1.5, -0.1] {
+            assert!(
+                SloObjective {
+                    p99_ms: None,
+                    availability: Some(bad)
+                }
+                .validate()
+                .is_err(),
+                "{bad}"
+            );
+        }
+        assert!(SloObjective {
+            p99_ms: Some(5.0),
+            availability: Some(0.999)
+        }
+        .validate()
+        .is_ok());
+        let mut m = SloMonitor::new(SloConfig::default());
+        assert!(m.set_objective("v", SloObjective::default()).is_err());
+        assert!(m.is_empty());
+        m.set_objective(
+            "v",
+            SloObjective {
+                p99_ms: None,
+                availability: Some(0.9),
+            },
+        )
+        .unwrap();
+        assert_eq!(m.variants(), vec!["v".to_string()]);
+    }
+
+    #[test]
+    fn availability_breach_walks_alert_up_and_back_down() {
+        let obs = Obs::new();
+        let log = Arc::new(EventLog::captured(Level::Debug));
+        let mut m = SloMonitor::new(cfg()).with_log(Arc::clone(&log));
+        // 90% availability target → 10% error budget. 100% failures
+        // burn at 10× — exactly the page threshold.
+        m.set_objective(
+            "v",
+            SloObjective {
+                p99_ms: None,
+                availability: Some(0.9),
+            },
+        )
+        .unwrap();
+        // Warm-up: one sample; no data → no alert no matter what.
+        tick(&obs, "v", 0, 10, 0, 0);
+        m.evaluate(&obs);
+        assert!(log.drain_captured().is_empty());
+        // Total failure across both windows → Page.
+        for i in 1..=8u64 {
+            tick(&obs, "v", 0, 10, 0, i * 1_000_000);
+        }
+        m.evaluate(&obs);
+        let lines = log.drain_captured();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert!(lines[0].contains("target=slo.alert"), "{}", lines[0]);
+        assert!(lines[0].contains("level=error"), "{}", lines[0]);
+        assert!(lines[0].contains("variant=v from=ok to=page"), "{}", lines[0]);
+        assert_eq!(obs.variant("v").slo_state.get(), 2);
+        // Steady state: still paging, but no repeat alert.
+        m.evaluate(&obs);
+        assert!(log.drain_captured().is_empty());
+        // Recovery: clean traffic until the bad deltas age out of both
+        // windows → resolve straight back to Ok.
+        for i in 9..=20u64 {
+            tick(&obs, "v", 10, 0, 100, i * 1_000_000);
+        }
+        m.evaluate(&obs);
+        let lines = log.drain_captured();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert!(lines[0].contains("target=slo.resolve"), "{}", lines[0]);
+        assert!(lines[0].contains("from=page to=ok"), "{}", lines[0]);
+        assert_eq!(obs.variant("v").slo_state.get(), 0);
+        let s = &m.statuses(&obs)[0];
+        assert_eq!(s.state, SloState::Ok);
+        assert!(s.budget_remaining > 0.9, "{}", s.budget_remaining);
+    }
+
+    #[test]
+    fn fast_blip_alone_does_not_page() {
+        let obs = Obs::new();
+        let log = Arc::new(EventLog::captured(Level::Debug));
+        let mut m = SloMonitor::new(cfg()).with_log(Arc::clone(&log));
+        m.set_objective(
+            "v",
+            SloObjective {
+                p99_ms: None,
+                availability: Some(0.9),
+            },
+        )
+        .unwrap();
+        // Long healthy history...
+        for i in 0..=10u64 {
+            tick(&obs, "v", 100, 0, 100, i * 1_000_000);
+        }
+        // ...then two seconds of total failure: the fast window (2 s)
+        // burns hot, the slow window (6 s, diluted by the healthy
+        // seconds) stays under.
+        tick(&obs, "v", 0, 10, 0, 11_000_000);
+        tick(&obs, "v", 0, 10, 0, 12_000_000);
+        m.evaluate(&obs);
+        let s = &m.statuses(&obs)[0];
+        assert!(s.fast_burn >= 10.0, "fast should burn: {}", s.fast_burn);
+        assert!(s.slow_burn < 2.0, "slow should dilute: {}", s.slow_burn);
+        assert_eq!(s.state, SloState::Ok, "two-window rule holds");
+        assert!(log.drain_captured().is_empty());
+    }
+
+    #[test]
+    fn latency_objective_burns_on_slow_tail() {
+        let obs = Obs::new();
+        let log = Arc::new(EventLog::captured(Level::Debug));
+        let mut m = SloMonitor::new(cfg()).with_log(Arc::clone(&log));
+        // p99 target 1 ms → 1% of requests may be slower.
+        m.set_objective(
+            "v",
+            SloObjective {
+                p99_ms: Some(1.0),
+                availability: None,
+            },
+        )
+        .unwrap();
+        // 10% of requests at 5 ms → slow_fraction 0.1 → burn 10× → Page.
+        for i in 0..=8u64 {
+            let vm = obs.variant("v");
+            vm.requests.add(10);
+            vm.responses.add(10);
+            for _ in 0..9 {
+                vm.latency.record(Duration::from_micros(100));
+            }
+            vm.latency.record(Duration::from_micros(5_000));
+            obs.timeseries.sample_at(&obs.metrics, i * 1_000_000);
+        }
+        m.evaluate(&obs);
+        let s = &m.statuses(&obs)[0];
+        assert_eq!(s.state, SloState::Page, "fast={} slow={}", s.fast_burn, s.slow_burn);
+        assert_eq!(s.budget_remaining, 0.0);
+        let lines = log.drain_captured();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert!(lines[0].contains("target=slo.alert"));
+    }
+
+    #[test]
+    fn render_lists_objectives_or_says_none() {
+        let obs = Obs::new();
+        let m = SloMonitor::new(cfg());
+        assert_eq!(m.render(&obs), "no slo objectives configured");
+        let mut m = SloMonitor::new(cfg());
+        m.set_objective(
+            "v",
+            SloObjective {
+                p99_ms: Some(2.0),
+                availability: Some(0.99),
+            },
+        )
+        .unwrap();
+        let text = m.render(&obs);
+        assert!(text.contains("variant=v state=ok"), "{text}");
+        assert!(text.contains("p99_ms_target=2"), "{text}");
+        assert!(text.contains("availability_target=0.99"), "{text}");
+        assert!(text.contains("data=warming-up"), "{text}");
+    }
+}

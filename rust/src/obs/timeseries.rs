@@ -1,0 +1,498 @@
+//! Windowed telemetry: a fixed-size per-variant ring of periodic
+//! counter/histogram snapshots, turned into rates and quantiles over
+//! sliding windows by differencing.
+//!
+//! Every cumulative surface (`METRICS`, `METRICS PROM`, the old
+//! `emit_report`) answers "what happened since boot" — useless for
+//! spotting that butterfly p99 regressed five minutes ago. The
+//! [`TimeSeriesStore`] fixes that: a sampler thread (owned by the
+//! coordinator) calls [`TimeSeriesStore::sample`] on a fixed cadence,
+//! capturing one [`Sample`] per variant — every accounting counter plus
+//! the full `latency` bucket array. Because every captured value is a
+//! monotone cumulative count, the difference between any two samples is
+//! exactly the traffic that happened between them:
+//!
+//! * `Δrequests / Δt` — windowed request rate (req/s);
+//! * `(Δoutcomes − Δresponses) / Δoutcomes` — windowed error ratio
+//!   over *completed* outcomes (responses + errors + rejected +
+//!   deadline_expired + breaker_shed), so in-flight requests don't
+//!   skew it;
+//! * per-bucket histogram deltas — a real windowed latency histogram,
+//!   from which p50/p90/p99 are read the usual cumulative-walk way.
+//!
+//! Windowed quantiles return the *upper edge* of the log bucket
+//! (`[2^i, 2^{i+1})` µs) that crosses the rank, so they over-report by
+//! at most 2× — same resolution as the cumulative
+//! [`LatencyHistogram::quantile`](crate::metrics::LatencyHistogram),
+//! minus its exact-max clamp (there is no windowed max).
+//!
+//! Ring sizing: [`DEFAULT_CAPACITY`] samples × the default 1 s cadence
+//! ≈ 2 minutes of history — enough for the 60 s slow window of the SLO
+//! burn-rate evaluator ([`super::slo`]) with room to spare. A window
+//! reaching past the oldest retained sample is clamped to it (the
+//! returned [`WindowStats::span_us`] tells the truth about the span
+//! actually covered).
+
+use super::registry::{MetricsRegistry, VariantMetrics};
+use crate::metrics::{bucket_upper_us, NUM_BUCKETS};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default ring capacity (samples retained per variant).
+pub const DEFAULT_CAPACITY: usize = 128;
+
+/// Default query window for the `STATS` verb, seconds.
+pub const DEFAULT_WINDOW_S: u64 = 10;
+
+/// One point-in-time snapshot of a variant's cumulative counters and
+/// its end-to-end latency bucket array. Plain data — differencing two
+/// of these yields the traffic between them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sample {
+    /// Capture time, microseconds since the store's epoch.
+    pub t_us: u64,
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub deadline_expired: u64,
+    pub breaker_shed: u64,
+    /// `latency.count()` at capture time (== bucket sum).
+    pub latency_count: u64,
+    /// `latency.sum_us()` at capture time.
+    pub latency_sum_us: u64,
+    /// Full end-to-end latency bucket array (`NUM_BUCKETS` cumulative
+    /// per-bucket counts).
+    pub latency_buckets: Vec<u64>,
+}
+
+impl Sample {
+    /// Capture a variant's counters right now (tagged `t_us`).
+    pub fn capture(vm: &VariantMetrics, t_us: u64) -> Self {
+        let latency_buckets = vm.latency.bucket_counts();
+        let latency_count = latency_buckets.iter().sum();
+        Sample {
+            t_us,
+            requests: vm.requests.get(),
+            responses: vm.responses.get(),
+            errors: vm.errors.get(),
+            rejected: vm.rejected.get(),
+            deadline_expired: vm.deadline_expired.get(),
+            breaker_shed: vm.breaker_shed.get(),
+            latency_count,
+            latency_sum_us: vm.latency.sum_us(),
+            latency_buckets,
+        }
+    }
+
+    /// The all-zero sample at `t_us` — the implicit state of a variant
+    /// before any traffic (baseline for first-interval reports).
+    pub fn zero(t_us: u64) -> Self {
+        Sample {
+            t_us,
+            requests: 0,
+            responses: 0,
+            errors: 0,
+            rejected: 0,
+            deadline_expired: 0,
+            breaker_shed: 0,
+            latency_count: 0,
+            latency_sum_us: 0,
+            latency_buckets: vec![0; NUM_BUCKETS],
+        }
+    }
+}
+
+/// Rates and windowed latency distribution between two samples of one
+/// variant. All counter fields are deltas over the window.
+#[derive(Clone, Debug)]
+pub struct WindowStats {
+    pub variant: String,
+    /// Actual span covered, µs (≤ the requested window when the ring
+    /// doesn't reach back that far).
+    pub span_us: u64,
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub deadline_expired: u64,
+    pub breaker_shed: u64,
+    /// Latency samples recorded inside the window.
+    pub latency_count: u64,
+    pub latency_sum_us: u64,
+    /// Per-bucket latency deltas (a windowed histogram).
+    pub latency_buckets: Vec<u64>,
+    /// Windowed request rate, req/s.
+    pub rate_rps: f64,
+    /// Non-success fraction of *completed* outcomes in the window
+    /// (errors + rejected + deadline_expired + breaker_shed over all
+    /// five accounting terms); 0 when nothing completed.
+    pub error_ratio: f64,
+}
+
+impl WindowStats {
+    /// Difference two samples of the same variant (`prev` older).
+    /// Counters are differenced saturating so a stale/reset baseline
+    /// degrades to zeros instead of wrapping.
+    pub fn between(variant: &str, prev: &Sample, cur: &Sample) -> Self {
+        let span_us = cur.t_us.saturating_sub(prev.t_us).max(1);
+        let requests = cur.requests.saturating_sub(prev.requests);
+        let responses = cur.responses.saturating_sub(prev.responses);
+        let errors = cur.errors.saturating_sub(prev.errors);
+        let rejected = cur.rejected.saturating_sub(prev.rejected);
+        let deadline_expired = cur.deadline_expired.saturating_sub(prev.deadline_expired);
+        let breaker_shed = cur.breaker_shed.saturating_sub(prev.breaker_shed);
+        let latency_buckets: Vec<u64> = cur
+            .latency_buckets
+            .iter()
+            .zip(prev.latency_buckets.iter().chain(std::iter::repeat(&0)))
+            .map(|(c, p)| c.saturating_sub(*p))
+            .collect();
+        let latency_count = latency_buckets.iter().sum();
+        let outcomes = responses + errors + rejected + deadline_expired + breaker_shed;
+        let error_ratio = if outcomes == 0 {
+            0.0
+        } else {
+            (outcomes - responses) as f64 / outcomes as f64
+        };
+        WindowStats {
+            variant: variant.to_string(),
+            span_us,
+            requests,
+            responses,
+            errors,
+            rejected,
+            deadline_expired,
+            breaker_shed,
+            latency_count,
+            latency_sum_us: cur.latency_sum_us.saturating_sub(prev.latency_sum_us),
+            latency_buckets,
+            rate_rps: requests as f64 * 1e6 / span_us as f64,
+            error_ratio,
+        }
+    }
+
+    /// Windowed latency quantile, µs: the upper edge of the log bucket
+    /// where the cumulative walk crosses `⌈q·count⌉`. 0 when the
+    /// window saw no latency samples. Over-reports by at most 2×
+    /// (bucket width); there is no windowed max to clamp to.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.latency_count == 0 {
+            return 0;
+        }
+        let target = ((q * self.latency_count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.latency_buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_upper_us(i);
+            }
+        }
+        bucket_upper_us(self.latency_buckets.len().saturating_sub(1))
+    }
+
+    /// Mean end-to-end latency over the window, µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.latency_count == 0 {
+            0.0
+        } else {
+            self.latency_sum_us as f64 / self.latency_count as f64
+        }
+    }
+
+    /// Fraction of windowed latency samples at or above `threshold_us`
+    /// — conservatively, the fraction in buckets whose *lower* edge
+    /// `2^i` µs is ≥ the threshold, so a sample is only called slow
+    /// when the whole bucket provably is. Drives the latency-SLO burn
+    /// rate ([`super::slo`]).
+    pub fn slow_fraction(&self, threshold_us: u64) -> f64 {
+        if self.latency_count == 0 {
+            return 0.0;
+        }
+        let slow: u64 = self
+            .latency_buckets
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| (1u64 << *i) >= threshold_us)
+            .map(|(_, &c)| c)
+            .sum();
+        slow as f64 / self.latency_count as f64
+    }
+
+    /// One `STATS` verb line for this window.
+    pub fn render(&self, window: Duration) -> String {
+        format!(
+            "variant={} window_s={} span_s={:.1} requests={} responses={} errors={} \
+             rejected={} deadline_expired={} breaker_shed={} rate_rps={:.2} \
+             error_ratio={:.4} p50_us={} p90_us={} p99_us={} mean_us={:.1}",
+            self.variant,
+            window.as_secs(),
+            self.span_us as f64 / 1e6,
+            self.requests,
+            self.responses,
+            self.errors,
+            self.rejected,
+            self.deadline_expired,
+            self.breaker_shed,
+            self.rate_rps,
+            self.error_ratio,
+            self.quantile_us(0.5),
+            self.quantile_us(0.9),
+            self.quantile_us(0.99),
+            self.mean_us(),
+        )
+    }
+}
+
+/// Fixed-capacity per-variant ring of [`Sample`]s plus the window
+/// queries over it. One mutex around the whole map: it is touched once
+/// per sampler tick and per `STATS`/scrape query, never on the serving
+/// hot path.
+pub struct TimeSeriesStore {
+    capacity: usize,
+    epoch: Instant,
+    /// Sampler ticks completed (each tick snapshots every variant) —
+    /// lets tests prove the sampler stopped.
+    ticks: AtomicU64,
+    rings: Mutex<BTreeMap<String, VecDeque<Sample>>>,
+}
+
+impl TimeSeriesStore {
+    pub fn new(capacity: usize) -> Self {
+        TimeSeriesStore {
+            // A ring of one sample can never answer a window query.
+            capacity: capacity.max(2),
+            epoch: Instant::now(),
+            ticks: AtomicU64::new(0),
+            rings: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Microseconds since this store was created (the sample clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Sampler ticks completed so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every registered variant right now.
+    pub fn sample(&self, reg: &MetricsRegistry) {
+        self.sample_at(reg, self.now_us());
+    }
+
+    /// Snapshot every registered variant with an explicit timestamp —
+    /// the deterministic entry point tests drive directly.
+    pub fn sample_at(&self, reg: &MetricsRegistry, t_us: u64) {
+        let mut rings = self.rings.lock().unwrap();
+        for vm in reg.all() {
+            let ring = rings.entry(vm.name.clone()).or_default();
+            ring.push_back(Sample::capture(&vm, t_us));
+            while ring.len() > self.capacity {
+                ring.pop_front();
+            }
+        }
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Windowed stats for `variant` ending at its newest sample: the
+    /// baseline is the youngest sample at least `window` older than the
+    /// newest, clamped to the oldest retained. `None` until the
+    /// variant has two samples (sampler warming up, or disabled).
+    pub fn window(&self, variant: &str, window: Duration) -> Option<WindowStats> {
+        let rings = self.rings.lock().unwrap();
+        let ring = rings.get(variant)?;
+        if ring.len() < 2 {
+            return None;
+        }
+        let cur = ring.back().unwrap();
+        let want = cur.t_us.saturating_sub(window.as_micros().min(u64::MAX as u128) as u64);
+        let prev = ring
+            .iter()
+            .rev()
+            .skip(1)
+            .find(|s| s.t_us <= want)
+            .unwrap_or_else(|| ring.front().unwrap());
+        Some(WindowStats::between(variant, prev, cur))
+    }
+
+    /// Variants with at least one sample, sorted.
+    pub fn variants(&self) -> Vec<String> {
+        self.rings.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Full retained sample history of one variant (oldest first) —
+    /// for tests and reconciliation checks.
+    pub fn samples(&self, variant: &str) -> Vec<Sample> {
+        self.rings
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|r| r.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Default for TimeSeriesStore {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRing;
+    use std::sync::Arc;
+
+    fn registry() -> MetricsRegistry {
+        MetricsRegistry::new(Arc::new(TraceRing::new(16)))
+    }
+
+    #[test]
+    fn window_needs_two_samples() {
+        let reg = registry();
+        reg.variant("v");
+        let ts = TimeSeriesStore::new(8);
+        assert!(ts.window("v", Duration::from_secs(10)).is_none());
+        ts.sample_at(&reg, 0);
+        assert!(ts.window("v", Duration::from_secs(10)).is_none());
+        ts.sample_at(&reg, 1_000_000);
+        let w = ts.window("v", Duration::from_secs(10)).unwrap();
+        assert_eq!(w.requests, 0);
+        assert_eq!(w.rate_rps, 0.0);
+        assert!(ts.window("ghost", Duration::from_secs(10)).is_none());
+        assert_eq!(ts.ticks(), 2);
+    }
+
+    #[test]
+    fn deltas_rates_and_quantiles_come_from_the_window() {
+        let reg = registry();
+        let vm = reg.variant("v");
+        let ts = TimeSeriesStore::new(8);
+        ts.sample_at(&reg, 0);
+        // 10 fast requests in the first second...
+        for _ in 0..10 {
+            vm.requests.inc();
+            vm.responses.inc();
+            vm.latency.record(Duration::from_micros(3));
+        }
+        ts.sample_at(&reg, 1_000_000);
+        // ...then 2 slow ones plus an error in the next.
+        for _ in 0..2 {
+            vm.requests.inc();
+            vm.responses.inc();
+            vm.latency.record(Duration::from_micros(900));
+        }
+        vm.requests.inc();
+        vm.errors.inc();
+        ts.sample_at(&reg, 2_000_000);
+        // 1 s window: only the slow tail.
+        let w = ts.window("v", Duration::from_secs(1)).unwrap();
+        assert_eq!(w.requests, 3);
+        assert_eq!(w.responses, 2);
+        assert_eq!(w.errors, 1);
+        assert_eq!(w.latency_count, 2);
+        assert!((w.rate_rps - 3.0).abs() < 1e-9, "{}", w.rate_rps);
+        assert!((w.error_ratio - 1.0 / 3.0).abs() < 1e-9, "{}", w.error_ratio);
+        // 900 µs lands in bucket [512, 1024); quantiles report the edge
+        assert_eq!(w.quantile_us(0.5), 1024);
+        assert_eq!(w.quantile_us(0.99), 1024);
+        // whole-history window sees everything
+        let all = ts.window("v", Duration::from_secs(60)).unwrap();
+        assert_eq!(all.requests, 13);
+        assert_eq!(all.latency_count, 12);
+        assert_eq!(all.quantile_us(0.5), 4); // 3 µs → bucket [2,4)
+        assert_eq!(all.quantile_us(0.99), 1024);
+        assert!(all.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn slow_fraction_counts_buckets_above_threshold() {
+        let reg = registry();
+        let vm = reg.variant("v");
+        let ts = TimeSeriesStore::new(8);
+        ts.sample_at(&reg, 0);
+        for _ in 0..8 {
+            vm.latency.record(Duration::from_micros(10)); // bucket [8,16)
+        }
+        for _ in 0..2 {
+            vm.latency.record(Duration::from_micros(5000)); // bucket [4096,8192)
+        }
+        ts.sample_at(&reg, 1_000_000);
+        let w = ts.window("v", Duration::from_secs(10)).unwrap();
+        assert!((w.slow_fraction(1000) - 0.2).abs() < 1e-9);
+        assert_eq!(w.slow_fraction(1 << 20), 0.0);
+        // threshold below every bucket's lower edge → everything slow
+        assert!((w.slow_fraction(1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_window_clamps_to_retained() {
+        let reg = registry();
+        let vm = reg.variant("v");
+        let ts = TimeSeriesStore::new(3);
+        for i in 0..6u64 {
+            vm.requests.add(10);
+            ts.sample_at(&reg, i * 1_000_000);
+        }
+        let kept = ts.samples("v");
+        assert_eq!(kept.len(), 3);
+        assert_eq!(kept[0].t_us, 3_000_000);
+        // A huge window clamps its baseline to the oldest retained
+        // sample: 2 intervals × 10 requests, over 2 s.
+        let w = ts.window("v", Duration::from_secs(3600)).unwrap();
+        assert_eq!(w.requests, 20);
+        assert_eq!(w.span_us, 2_000_000);
+        assert!((w.rate_rps - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_sample_is_a_valid_baseline() {
+        let reg = registry();
+        let vm = reg.variant("v");
+        vm.requests.add(5);
+        vm.responses.add(5);
+        vm.latency.record(Duration::from_micros(50));
+        let cur = Sample::capture(&vm, 2_000_000);
+        let w = WindowStats::between("v", &Sample::zero(0), &cur);
+        assert_eq!(w.requests, 5);
+        assert_eq!(w.latency_count, 1);
+        assert!((w.rate_rps - 2.5).abs() < 1e-9);
+        assert_eq!(w.error_ratio, 0.0);
+    }
+
+    #[test]
+    fn render_is_one_parseable_line() {
+        let reg = registry();
+        let vm = reg.variant("v");
+        let ts = TimeSeriesStore::new(4);
+        ts.sample_at(&reg, 0);
+        vm.requests.inc();
+        vm.responses.inc();
+        vm.latency.record(Duration::from_micros(42));
+        ts.sample_at(&reg, 500_000);
+        let w = ts.window("v", Duration::from_secs(10)).unwrap();
+        let line = w.render(Duration::from_secs(10));
+        assert_eq!(line.lines().count(), 1);
+        for key in [
+            "variant=v",
+            "window_s=10",
+            "requests=1",
+            "rate_rps=2.00",
+            "error_ratio=0.0000",
+            "p50_us=64",
+            "p99_us=64",
+        ] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+    }
+}

@@ -60,6 +60,23 @@ pub struct CompletedTrace {
     pub ok: bool,
 }
 
+impl CompletedTrace {
+    /// One `TRACE` verb line (shared by `TRACE <n>` and `TRACE ID`).
+    pub fn render(&self) -> String {
+        format!(
+            "#{} variant={} ok={} total_us={} queue_us={} engine_us={} batch={} retries={}",
+            self.id,
+            self.variant,
+            self.ok as u8,
+            self.total_us,
+            self.queue_wait_us,
+            self.engine_us,
+            self.batch,
+            self.retries
+        )
+    }
+}
+
 struct Slot {
     /// `ticket * 2 + 1` while being written, `ticket * 2 + 2` once
     /// stable, 0 when never used.
@@ -160,6 +177,30 @@ impl TraceRing {
         slot.seq.store(ticket * 2 + 2, Ordering::Release);
     }
 
+    /// Seqlock read of one ticket's slot: `None` if the slot was
+    /// overwritten by a newer ticket or is being written right now
+    /// (checked before *and* after the copy so a torn read is dropped).
+    fn read_slot(&self, ticket: u64) -> Option<CompletedTrace> {
+        let slot = &self.slots[(ticket as usize) % self.slots.len()];
+        let want = ticket * 2 + 2;
+        if slot.seq.load(Ordering::Acquire) != want {
+            return None;
+        }
+        let t = CompletedTrace {
+            id: slot.id.load(Ordering::Relaxed),
+            variant: self.name_of(slot.tag.load(Ordering::Relaxed)),
+            queue_wait_us: slot.queue_wait_us.load(Ordering::Relaxed),
+            engine_us: slot.engine_us.load(Ordering::Relaxed),
+            total_us: slot.total_us.load(Ordering::Relaxed),
+            batch: slot.batch.load(Ordering::Relaxed),
+            retries: slot.retries.load(Ordering::Relaxed),
+            ok: slot.ok.load(Ordering::Relaxed) != 0,
+        };
+        // Re-check: if a writer claimed the slot while we copied,
+        // the copy may be torn — drop it.
+        (slot.seq.load(Ordering::Acquire) == want).then_some(t)
+    }
+
     /// The most recent `n` completed traces, newest first. Slots caught
     /// mid-overwrite are skipped.
     pub fn recent(&self, n: usize) -> Vec<CompletedTrace> {
@@ -170,29 +211,27 @@ impl TraceRing {
             if out.len() >= n {
                 break;
             }
-            let ticket = head - 1 - back as u64;
-            let slot = &self.slots[(ticket as usize) % self.slots.len()];
-            let want = ticket * 2 + 2;
-            if slot.seq.load(Ordering::Acquire) != want {
-                continue; // being overwritten right now
-            }
-            let t = CompletedTrace {
-                id: slot.id.load(Ordering::Relaxed),
-                variant: self.name_of(slot.tag.load(Ordering::Relaxed)),
-                queue_wait_us: slot.queue_wait_us.load(Ordering::Relaxed),
-                engine_us: slot.engine_us.load(Ordering::Relaxed),
-                total_us: slot.total_us.load(Ordering::Relaxed),
-                batch: slot.batch.load(Ordering::Relaxed),
-                retries: slot.retries.load(Ordering::Relaxed),
-                ok: slot.ok.load(Ordering::Relaxed) != 0,
-            };
-            // Re-check: if a writer claimed the slot while we copied,
-            // the copy may be torn — drop it.
-            if slot.seq.load(Ordering::Acquire) == want {
+            if let Some(t) = self.read_slot(head - 1 - back as u64) {
                 out.push(t);
             }
         }
         out
+    }
+
+    /// Find one trace by its ID — linear scan of the retained ring,
+    /// newest first (the ring is a small diagnostic buffer; `TRACE ID`
+    /// is not a hot path). `None` when the trace was never pushed or
+    /// has been evicted by wrap-around.
+    pub fn find(&self, id: u64) -> Option<CompletedTrace> {
+        let head = self.head.load(Ordering::Acquire);
+        for back in 0..(head as usize).min(self.slots.len()) {
+            if let Some(t) = self.read_slot(head - 1 - back as u64) {
+                if t.id == id {
+                    return Some(t);
+                }
+            }
+        }
+        None
     }
 
     /// Text rendering for the `TRACE <n>` verb, newest first.
@@ -201,22 +240,11 @@ impl TraceRing {
         if traces.is_empty() {
             return "no completed traces".to_string();
         }
-        let mut out = String::new();
-        for t in traces {
-            out.push_str(&format!(
-                "#{} variant={} ok={} total_us={} queue_us={} engine_us={} batch={} retries={}\n",
-                t.id,
-                t.variant,
-                t.ok as u8,
-                t.total_us,
-                t.queue_wait_us,
-                t.engine_us,
-                t.batch,
-                t.retries
-            ));
-        }
-        out.pop(); // protocol Text responses add the trailing newline
-        out
+        traces
+            .iter()
+            .map(CompletedTrace::render)
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 }
 
@@ -317,6 +345,26 @@ mod tests {
         let s = r.render(5);
         assert!(s.starts_with("#42 variant=net ok=1 total_us=812"), "{s}");
         assert!(s.contains("retries=0"), "{s}");
+    }
+
+    #[test]
+    fn find_by_id_hits_and_misses() {
+        let r = TraceRing::new(4);
+        let tag = r.intern("v");
+        assert!(r.find(1).is_none(), "empty ring");
+        for i in 1..=6u64 {
+            r.push(ev(&r, i, tag, i * 10));
+        }
+        // newest four retained: 3..=6
+        let t = r.find(4).expect("retained");
+        assert_eq!(t.id, 4);
+        assert_eq!(t.total_us, 40);
+        assert_eq!(
+            t.render(),
+            "#4 variant=v ok=1 total_us=40 queue_us=10 engine_us=20 batch=4 retries=0"
+        );
+        assert!(r.find(1).is_none(), "evicted by wrap-around");
+        assert!(r.find(999).is_none(), "never pushed");
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! SLO suite: windowed telemetry and burn-rate alerting end to end —
+//! sampler lifecycle, `STATS`/`SLO` over TCP, window/cumulative
+//! reconciliation (including ring wrap-around), and an availability
+//! alert that fires under injected failures and resolves after a
+//! recovery swap.
+//!
+//! These tests run in their own CI step (`cargo test -q --test
+//! slo_coordinator`); the tier-1 runs skip them by the `slo_` name
+//! prefix, like the chaos and health suites.
+
+use butterfly_net::coordinator::{
+    serve, BatcherConfig, BreakerConfig, ChaosConfig, Coordinator, Engine, FaultyEngine,
+    RetryPolicy, SamplerConfig,
+};
+use butterfly_net::linalg::Mat;
+use butterfly_net::obs::{
+    EventLog, Level, MetricsRegistry, SloConfig, SloMonitor, SloObjective, TimeSeriesStore,
+    TraceRing,
+};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Mul(f64);
+impl Engine for Mul {
+    fn infer_batch(&self, x: &Mat) -> anyhow::Result<Mat> {
+        Ok(x.map(|v| self.0 * v))
+    }
+    fn input_dim(&self) -> usize {
+        2
+    }
+    fn output_dim(&self) -> usize {
+        2
+    }
+}
+
+/// Small fast batcher: no retries, breaker disabled (failures must
+/// reach the error counters, not get shed by the breaker).
+fn bcfg() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_cap: 64,
+        workers: 2,
+        retry: RetryPolicy {
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(1),
+        },
+        breaker: BreakerConfig::default(),
+    }
+}
+
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    out
+}
+
+fn roundtrip_text(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let r = BufReader::new(s);
+    let mut out = String::new();
+    for l in r.lines() {
+        let l = l.unwrap();
+        if l == "END" {
+            break;
+        }
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+/// Pull `key=value` out of a rendered stats line.
+fn field(line: &str, key: &str) -> String {
+    line.split_whitespace()
+        .find_map(|t| {
+            let (k, v) = t.split_once('=')?;
+            (k == key).then(|| v.to_string())
+        })
+        .unwrap_or_else(|| panic!("no field `{key}` in `{line}`"))
+}
+
+/// Property: over any window — including after the ring has wrapped —
+/// the windowed deltas equal the difference of the cumulative counters
+/// at the window's two endpoint samples. Driven with deterministic
+/// pseudo-random traffic against a capacity-4 ring so eviction and
+/// clamping are both exercised every tick.
+#[test]
+fn slo_window_deltas_reconcile_with_cumulative_counters() {
+    let reg = MetricsRegistry::new(Arc::new(TraceRing::new(16)));
+    let vm = reg.variant("v");
+    let ts = TimeSeriesStore::new(4);
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    let mut next = || {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        state >> 33
+    };
+    // cum[i] = (requests, responses, errors, rejected, latency_count)
+    // after tick i; tick 0 is the pre-traffic baseline sample.
+    let mut cum: Vec<(u64, u64, u64, u64, u64)> = vec![(0, 0, 0, 0, 0)];
+    ts.sample_at(&reg, 0);
+    for i in 1..=20u64 {
+        let n_ok = next() % 5;
+        let n_err = next() % 3;
+        let n_rej = next() % 2;
+        vm.requests.add(n_ok + n_err + n_rej);
+        vm.responses.add(n_ok);
+        vm.errors.add(n_err);
+        vm.rejected.add(n_rej);
+        for _ in 0..n_ok {
+            vm.latency
+                .record(Duration::from_micros(1u64 << (next() % 12)));
+        }
+        let p = cum[i as usize - 1];
+        cum.push((
+            p.0 + n_ok + n_err + n_rej,
+            p.1 + n_ok,
+            p.2 + n_err,
+            p.3 + n_rej,
+            p.4 + n_ok,
+        ));
+        ts.sample_at(&reg, i * 1_000_000);
+        // The ring never exceeds its capacity...
+        let kept = ts.samples("v");
+        assert!(kept.len() <= ts.capacity(), "{} samples", kept.len());
+        if kept.len() < 2 {
+            continue;
+        }
+        // ...and a window over the whole retained history reconciles
+        // exactly with the cumulative counters at its endpoints, even
+        // after eviction clamped the baseline.
+        let oldest_tick = (kept[0].t_us / 1_000_000) as usize;
+        let w = ts.window("v", Duration::from_secs(3600)).unwrap();
+        let (base, now) = (cum[oldest_tick], cum[i as usize]);
+        assert_eq!(w.requests, now.0 - base.0, "tick {i}");
+        assert_eq!(w.responses, now.1 - base.1, "tick {i}");
+        assert_eq!(w.errors, now.2 - base.2, "tick {i}");
+        assert_eq!(w.rejected, now.3 - base.3, "tick {i}");
+        assert_eq!(w.latency_count, now.4 - base.4, "tick {i}");
+        assert_eq!(
+            w.latency_buckets.iter().sum::<u64>(),
+            w.latency_count,
+            "bucket deltas must sum to the windowed count (tick {i})"
+        );
+        assert_eq!(w.span_us, (i as usize - oldest_tick) as u64 * 1_000_000);
+        // The one-tick window covers exactly this tick's traffic.
+        let w1 = ts.window("v", Duration::from_secs(1)).unwrap();
+        let prev = cum[i as usize - 1];
+        assert_eq!(w1.requests, now.0 - prev.0, "tick {i}");
+        assert_eq!(w1.latency_count, now.4 - prev.4, "tick {i}");
+        // Error ratio is (outcomes − responses) / outcomes, over
+        // completed outcomes only.
+        let outcomes = w1.responses + w1.errors + w1.rejected;
+        let want = if outcomes == 0 {
+            0.0
+        } else {
+            (outcomes - w1.responses) as f64 / outcomes as f64
+        };
+        assert!((w1.error_ratio - want).abs() < 1e-12, "tick {i}");
+    }
+    // Final state: the ring wrapped (20 ticks through capacity 4).
+    assert_eq!(ts.samples("v").len(), 4);
+    assert_eq!(ts.ticks(), 21);
+}
+
+/// The `STATS` verb over TCP: windowed numbers from the live sampler
+/// reconcile with the cumulative counters, and the windowed Prometheus
+/// families appear in `METRICS PROM`. Malformed `STATS` gets `ERR`.
+#[test]
+fn slo_stats_verb_windowed_rates_reconcile_with_cumulative() {
+    let mut c = Coordinator::new();
+    c.register("m", Box::new(Mul(2.0)), bcfg());
+    c.start_sampler(SamplerConfig {
+        sample_interval: Duration::from_millis(20),
+        report_interval: None,
+    });
+    let c = Arc::new(c);
+    let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    for i in 0..20 {
+        let out = roundtrip(h.addr, &format!("INFER m {i} 1"));
+        assert!(out.starts_with("OK "), "{out}");
+    }
+    // All 20 responses are in the cumulative counters (the OK lines
+    // came back); wait for the sampler to capture them in a window.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Some(w) = c.obs.timeseries.window("m", Duration::from_secs(3600)) {
+            if w.responses >= 20 {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "sampler never caught up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let vm = c.obs.variant("m");
+    let stats = roundtrip_text(h.addr, "STATS m 3600");
+    let line = stats.lines().next().unwrap();
+    assert_eq!(field(line, "variant"), "m");
+    assert_eq!(field(line, "window_s"), "3600");
+    assert_eq!(field(line, "requests"), vm.requests.get().to_string());
+    assert_eq!(field(line, "responses"), vm.responses.get().to_string());
+    assert_eq!(field(line, "errors"), "0");
+    assert_eq!(field(line, "error_ratio"), "0.0000");
+    assert_ne!(field(line, "p99_us"), "0", "latency was recorded: {line}");
+    // Unfiltered STATS covers every variant (just `m` here).
+    let all = roundtrip_text(h.addr, "STATS");
+    assert!(all.contains("variant=m window_s=10"), "{all}");
+    // Malformed requests get ERR, not a disconnect.
+    assert!(roundtrip(h.addr, "STATS ghost").starts_with("ERR"));
+    assert!(roundtrip(h.addr, "STATS m 0").starts_with("ERR"));
+    assert!(roundtrip(h.addr, "STATS m 10 extra").starts_with("ERR"));
+    // Windowed Prometheus families ride the same ring.
+    let prom = roundtrip_text(h.addr, "METRICS PROM");
+    assert!(prom.contains("# TYPE bfly_rate_rps gauge"), "{prom}");
+    assert!(
+        prom.contains("bfly_rate_rps{variant=\"m\",window_s=\"60\"}"),
+        "{prom}"
+    );
+    assert!(
+        prom.contains("bfly_window_p99_us{variant=\"m\",window_s=\"10\"}"),
+        "{prom}"
+    );
+    h.stop();
+    match Arc::try_unwrap(c) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("coordinator still referenced"),
+    }
+}
+
+/// The deployment story end to end: an availability objective pages
+/// under injected total failure (both burn windows hot), the alert and
+/// state are visible via events, the `SLO` verb and the gauge, and a
+/// recovery hot-swap walks it back to Ok with an `slo.resolve`.
+#[test]
+fn slo_burn_rate_alert_fires_and_resolves() {
+    let mut c = Coordinator::new();
+    c.register(
+        "flaky",
+        Box::new(FaultyEngine::new(
+            Box::new(Mul(2.0)),
+            ChaosConfig {
+                fail_prob: 1.0,
+                fail_every: None,
+                latency: None,
+                panic_prob: 0.0,
+                seed: 7,
+            },
+        )),
+        bcfg(),
+    );
+    let log = Arc::new(EventLog::captured(Level::Debug));
+    let mut monitor = SloMonitor::new(SloConfig {
+        fast_window: Duration::from_millis(100),
+        slow_window: Duration::from_millis(300),
+        warn_burn: 1.0,
+        page_burn: 5.0,
+    })
+    .with_log(Arc::clone(&log));
+    // 90% availability → 10% error budget; total failure burns at 10×,
+    // past the 5× page threshold in both windows.
+    monitor
+        .set_objective(
+            "flaky",
+            SloObjective {
+                p99_ms: None,
+                availability: Some(0.9),
+            },
+        )
+        .unwrap();
+    c.enable_slo(monitor);
+    c.start_sampler(SamplerConfig {
+        sample_interval: Duration::from_millis(10),
+        report_interval: None,
+    });
+    let c = Arc::new(c);
+    let h = serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    // Phase 1: drive failing traffic until the monitor pages.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let out = roundtrip(h.addr, "INFER flaky 1 2");
+        assert!(out.starts_with("ERR"), "chaos engine must fail: {out}");
+        let slo = roundtrip_text(h.addr, "SLO");
+        if slo.contains("variant=flaky state=page") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "never paged; last SLO: {slo}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(c.obs.variant("flaky").slo_state.get(), 2);
+    let lines = log.drain_captured();
+    assert!(
+        lines
+            .iter()
+            .any(|l| l.contains("target=slo.alert") && l.contains("to=page")),
+        "expected an slo.alert escalating to page, got {lines:?}"
+    );
+    let prom = roundtrip_text(h.addr, "METRICS PROM");
+    assert!(prom.contains("bfly_slo_state{variant=\"flaky\"} 2"), "{prom}");
+    assert!(
+        prom.contains("bfly_error_budget_remaining{variant=\"flaky\"} 0.0000"),
+        "{prom}"
+    );
+    // Phase 2: hot-swap a clean engine in and drive healthy traffic
+    // until the bad window ages out and the alert resolves.
+    c.swap_variant("flaky", Box::new(Mul(2.0))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let out = roundtrip(h.addr, "INFER flaky 1 2");
+        assert_eq!(out, "OK 2 4\n");
+        let slo = roundtrip_text(h.addr, "SLO");
+        if slo.contains("variant=flaky state=ok") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "never resolved; last SLO: {slo}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(c.obs.variant("flaky").slo_state.get(), 0);
+    let lines = log.drain_captured();
+    assert!(
+        lines
+            .iter()
+            .any(|l| l.contains("target=slo.resolve") && l.contains("to=ok")),
+        "expected an slo.resolve back to ok, got {lines:?}"
+    );
+    h.stop();
+    match Arc::try_unwrap(c) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("coordinator still referenced"),
+    }
+}
+
+/// The sampler thread is owned by the coordinator: it ticks while the
+/// coordinator runs and is joined by `shutdown()` — no orphan thread
+/// keeps sampling afterwards.
+#[test]
+fn slo_sampler_stops_with_coordinator_shutdown() {
+    let mut c = Coordinator::new();
+    c.register("m", Box::new(Mul(2.0)), bcfg());
+    c.start_sampler(SamplerConfig {
+        sample_interval: Duration::from_millis(5),
+        report_interval: None,
+    });
+    assert!(c.sampler_running());
+    let obs = Arc::clone(&c.obs);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while obs.timeseries.ticks() < 3 {
+        assert!(Instant::now() < deadline, "sampler never ticked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    c.shutdown(); // joins the sampler before joining the batchers
+    let after = obs.timeseries.ticks();
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(
+        obs.timeseries.ticks(),
+        after,
+        "sampler kept ticking after shutdown"
+    );
+}

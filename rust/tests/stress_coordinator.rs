@@ -10,7 +10,7 @@
 //! 3. Shutdown must terminate (no sentinel lost to a full queue) and
 //!    leave the queue empty.
 
-use butterfly_net::coordinator::{BatcherConfig, Coordinator, Engine};
+use butterfly_net::coordinator::{BatcherConfig, Coordinator, Engine, SamplerConfig};
 use butterfly_net::linalg::Mat;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -48,6 +48,14 @@ fn submit_swap_shutdown_stress_holds_invariants() {
             ..BatcherConfig::default()
         },
     );
+    // Telemetry sampler on, at an aggressive cadence: snapshots must
+    // coexist with the full submit/swap/shutdown storm, and it must not
+    // keep the coordinator alive (the sampler thread holds only the
+    // `Obs` Arc, so `Arc::try_unwrap` below still succeeds).
+    c.start_sampler(SamplerConfig {
+        sample_interval: Duration::from_millis(5),
+        report_interval: None,
+    });
     let c = Arc::new(c);
     let vm = c.obs.variant("m");
 
@@ -124,6 +132,9 @@ fn submit_swap_shutdown_stress_holds_invariants() {
         vm.errors.get()
     );
     assert_eq!(vm.swaps.get(), 10);
+
+    // The sampler ran through the storm (seed tick + periodic ticks).
+    assert!(c.obs.timeseries.ticks() > 0, "sampler never ticked");
 
     // Shutdown must terminate and drain: no queued job left behind.
     let c = Arc::try_unwrap(c).unwrap_or_else(|_| panic!("coordinator still shared"));
